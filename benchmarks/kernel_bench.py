@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks (interpret-mode correctness timing on CPU; the
+useful derived number is the achieved-vs-roofline arithmetic on TPU specs)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import decode_attention_ref, flash_attention_ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _bench(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def flash_roofline(rows: list[str]) -> None:
+    """Analytic roofline occupancy for the flash kernel tiling."""
+    for s, hd, bq, bk in ((4096, 128, 512, 512), (32768, 128, 512, 1024)):
+        flops = 4 * s * s * hd / 2          # causal
+        hbm = 3 * s * hd * 2 + s * hd * 2   # q,k,v read + o write (bf16)
+        t_c = flops / PEAK_FLOPS
+        t_m = hbm / HBM_BW
+        ai = flops / hbm
+        vmem = (bq * hd + 2 * bk * hd + bq * bk) * 4 + bq * (hd + 2) * 4
+        rows.append(
+            f"flash_roofline_s{s},0.0,"
+            f"ai={ai:.0f};compute_us={t_c * 1e6:.1f};mem_us={t_m * 1e6:.1f};"
+            f"vmem_bytes={vmem};bound={'compute' if t_c > t_m else 'memory'}"
+        )
+
+
+def decode_roofline(rows: list[str]) -> None:
+    for s, kvh, hd, b in ((32768, 8, 128, 128), (524288, 5, 64, 1)):
+        cache_bytes = 2 * b * s * kvh * hd * 2
+        flops = 4 * b * s * kvh * hd  # q.k + p.v per kv head group
+        t_m = cache_bytes / HBM_BW
+        t_c = flops / PEAK_FLOPS
+        rows.append(
+            f"decode_roofline_s{s},0.0,"
+            f"cache_gb={cache_bytes / 1e9:.2f};mem_us={t_m * 1e6:.1f};"
+            f"compute_us={t_c * 1e6:.1f};bound=memory"
+        )
+
+
+def interpret_correctness(rows: list[str]) -> None:
+    """Tiny interpret-mode run vs oracle (wall time = CPU emulation only)."""
+    from repro.kernels.flash_attention import flash_attention
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    us = _bench(
+        lambda a, b, c: flash_attention(a, b, c, causal=True, block_q=128,
+                                        block_k=128, interpret=True),
+        q, k, v, iters=1,
+    )
+    err = float(
+        jnp.max(jnp.abs(
+            flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                            interpret=True)
+            - flash_attention_ref(q, k, v, causal=True)
+        ))
+    )
+    rows.append(f"flash_interpret_256,{us:.1f},max_err={err:.2e}")
+
+
+def run(rows: list[str]) -> None:
+    flash_roofline(rows)
+    decode_roofline(rows)
+    interpret_correctness(rows)

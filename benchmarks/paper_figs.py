@@ -1,0 +1,115 @@
+"""Paper-figure benchmarks: one function per table/figure (Section V)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    CostModel,
+    fluid_cost,
+    fluid_scan,
+    msr_like_trace,
+    scale_to_pmr,
+    theoretical_ratio,
+    with_prediction_error,
+)
+
+COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)   # Delta = 6, paper Sec. V-A
+
+
+def _trace():
+    return msr_like_trace(np.random.default_rng(0))
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def fig3_competitive_ratios(rows: list[str]) -> None:
+    """Fig. 3: worst-case vs empirical ratios as alpha grows."""
+    a = _trace()
+    opt = fluid_cost(a, "offline", COSTS).cost
+    for w in range(0, 6):
+        alpha = min(1.0, (w + 1) / COSTS.delta)
+        for name, runs in (("A1", 1), ("A2", 30), ("A3", 30)):
+            (vals, us) = _timed(
+                lambda: [
+                    fluid_cost(a, name, COSTS, window=w,
+                               rng=np.random.default_rng(r)).cost
+                    for r in range(runs)
+                ]
+            )
+            emp = float(np.mean(vals)) / opt
+            bound = theoretical_ratio(name, alpha)
+            assert emp <= bound + 0.05, (name, alpha, emp, bound)
+            rows.append(
+                f"fig3_{name}_w{w},{us / runs:.1f},"
+                f"alpha={alpha:.2f};empirical={emp:.4f};bound={bound:.4f}"
+            )
+
+
+def fig4b_cost_reduction_vs_window(rows: list[str]) -> None:
+    """Fig. 4b: cost reduction vs prediction window, all six policies."""
+    a = _trace()
+    static = fluid_cost(a, "static", COSTS).cost
+    opt = fluid_cost(a, "offline", COSTS).cost
+    rows.append(f"fig4b_offline,0.0,reduction={1 - opt / static:.4f}")
+    for w in range(0, 11):
+        for name in ("A1", "A2", "A3"):
+            runs = 1 if name == "A1" else 20
+            (vals, us) = _timed(
+                lambda: [
+                    fluid_cost(a, name, COSTS, window=w,
+                               rng=np.random.default_rng(r)).cost
+                    for r in range(runs)
+                ]
+            )
+            red = 1 - float(np.mean(vals)) / static
+            rows.append(f"fig4b_{name}_w{w},{us / runs:.1f},reduction={red:.4f}")
+        if w >= 1:
+            c, us = _timed(lambda: fluid_cost(a, "lcp", COSTS, window=w).cost)
+            rows.append(f"fig4b_LCP_w{w},{us:.1f},reduction={1 - c / static:.4f}")
+    c, us = _timed(lambda: fluid_cost(a, "delayedoff", COSTS).cost)
+    rows.append(f"fig4b_DELAYEDOFF,{us:.1f},reduction={1 - c / static:.4f}")
+
+
+def fig4c_prediction_error(rows: list[str]) -> None:
+    """Fig. 4c: robustness to zero-mean Gaussian prediction error."""
+    a = _trace()
+    static = fluid_cost(a, "static", COSTS).cost
+    rng = np.random.default_rng(7)
+    for w in (2, 4):
+        for std in (0.0, 0.1, 0.25, 0.5):
+            costs = []
+            t0 = time.perf_counter()
+            for r in range(10):
+                pred = with_prediction_error(a, rng, std)
+                costs.append(
+                    fluid_scan(a, "A1", COSTS, window=w, predicted=pred).cost
+                )
+            us = (time.perf_counter() - t0) * 1e6 / 10
+            red = 1 - float(np.mean(costs)) / static
+            rows.append(
+                f"fig4c_A1_w{w}_std{int(std * 100)},{us:.1f},reduction={red:.4f}"
+            )
+
+
+def fig4d_pmr_sweep(rows: list[str]) -> None:
+    """Fig. 4d: savings grow with the peak-to-mean ratio."""
+    base = _trace().astype(float)
+    for pmr in (2, 3, 4, 6, 8, 10):
+        a = scale_to_pmr(base, float(pmr))
+        a = np.maximum(np.rint(a / a.mean() * 40.0), 0).astype(np.int64)
+        static = fluid_cost(a, "static", COSTS).cost
+        (c, us) = _timed(lambda: fluid_cost(a, "A1", COSTS, window=1).cost)
+        rows.append(f"fig4d_pmr{pmr},{us:.1f},reduction={1 - c / static:.4f}")
+
+
+def run(rows: list[str]) -> None:
+    fig3_competitive_ratios(rows)
+    fig4b_cost_reduction_vs_window(rows)
+    fig4c_prediction_error(rows)
+    fig4d_pmr_sweep(rows)

@@ -1,0 +1,53 @@
+"""Provisioning-engine benchmarks: throughput of the jitted fleet provisioner
+and the event-driven brick simulator (cluster-controller capacity)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostModel, generate_brick_trace, msr_like_trace, simulate
+from repro.core.jax_provision import provision_schedule
+from repro.core.ski_rental import A1Deterministic
+
+COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+
+
+def jax_provisioner_throughput(rows: list[str]) -> None:
+    for n_levels in (64, 512, 4096):
+        a = jnp.asarray(
+            msr_like_trace(np.random.default_rng(0), mean_jobs=n_levels / 4.0,
+                           n_slots=1008),
+            jnp.int32,
+        )
+        fn = lambda: provision_schedule(
+            a, n_levels=n_levels, delta=6, window=2, policy="A1"
+        )
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append(
+            f"jax_provision_levels{n_levels},{us:.1f},"
+            f"slots=1008;decisions_per_s={n_levels * 1008 / (us / 1e6):.3e}"
+        )
+
+
+def brick_simulator_throughput(rows: list[str]) -> None:
+    rng = np.random.default_rng(1)
+    tr = generate_brick_trace(rng, horizon=2000.0, rate=3.0, mean_duration=4.0)
+    t0 = time.perf_counter()
+    simulate(tr, A1Deterministic(alpha=0.5), COSTS)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        f"brick_sim_{len(tr.jobs)}jobs,{us:.1f},"
+        f"events_per_s={2 * len(tr.jobs) / (us / 1e6):.3e}"
+    )
+
+
+def run(rows: list[str]) -> None:
+    jax_provisioner_throughput(rows)
+    brick_simulator_throughput(rows)

@@ -1,0 +1,27 @@
+"""Benchmark harness: one module per paper table/figure + substrate benches.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline terms for the
+(arch x shape) cells come from the dry-run artifacts (see
+``python -m repro.launch.dryrun`` and ``python -m repro.launch.roofline``).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows: list[str] = []
+    from . import kernel_bench, paper_figs, provision_bench
+
+    paper_figs.run(rows)
+    provision_bench.run(rows)
+    kernel_bench.run(rows)
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    print(f"# {len(rows)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

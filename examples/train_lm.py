@@ -1,0 +1,45 @@
+"""Train a small LM end-to-end with the fault-tolerant trainer.
+
+Demonstrates: pjit'd train step (FSDP x TP on the host mesh), deterministic
+data, async atomic checkpoints, auto-resume, optional int8 gradient
+compression.  With --steps 300 on CPU this trains a ~5M-param llama-family
+model to visibly decreasing loss.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--arch yi-9b]
+    # kill it mid-run and re-run: it resumes from the last checkpoint.
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True).replace(remat="none")
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=50,
+        log_every=10,
+        grad_compression=args.compress_grads,
+    )
+    out = Trainer(cfg, tcfg).run()
+    first = out["history"][0][1] if out["history"] else float("nan")
+    last = out["history"][-1][1] if out["history"] else float("nan")
+    print(f"\ntrained {args.arch} (reduced) to step {out['final_step']}: "
+          f"loss {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

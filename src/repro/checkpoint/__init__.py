@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshard on restore."""
+from .checkpointer import Checkpointer, latest_step, restore, save
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save"]

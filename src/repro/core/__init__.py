@@ -1,0 +1,69 @@
+"""The paper's contribution: power-proportional dynamic provisioning.
+
+Public API:
+  * Brick (continuous-time) model: ``BrickTrace``, ``simulate`` (online),
+    ``a0_schedule``/``a0_cost``/``optimal_schedule_constructed`` (offline),
+    ``critical_segments``.
+  * Fluid (discrete-time) model: ``fluid_cost``, ``fluid_scan``.
+  * Policies: ``A1Deterministic``, ``A2Randomized``, ``A3Randomized``.
+  * Validation: ``dp_optimal_cost``.
+"""
+from .costs import PAPER_COSTS, CostModel, schedule_cost
+from .dp_oracle import dp_optimal_cost
+from .events import BrickTrace, Job, generate_brick_trace, trace_from_intervals
+from .fluid import FluidResult, fluid_cost, fluid_scan
+from .offline import a0_cost, a0_schedule, optimal_cost, optimal_schedule_constructed
+from .online import SimResult, simulate
+from .segments import CriticalSegment, SegmentType, critical_segments, critical_times
+from .ski_rental import (
+    A1Deterministic,
+    A2Randomized,
+    A3Randomized,
+    BreakEven,
+    DelayedOffPolicy,
+    OfflinePolicy,
+    theoretical_ratio,
+)
+from .traces import (
+    brick_trace_from_fluid,
+    msr_like_trace,
+    pmr,
+    scale_to_pmr,
+    with_prediction_error,
+)
+
+__all__ = [
+    "PAPER_COSTS",
+    "CostModel",
+    "schedule_cost",
+    "dp_optimal_cost",
+    "BrickTrace",
+    "Job",
+    "generate_brick_trace",
+    "trace_from_intervals",
+    "FluidResult",
+    "fluid_cost",
+    "fluid_scan",
+    "a0_cost",
+    "a0_schedule",
+    "optimal_cost",
+    "optimal_schedule_constructed",
+    "SimResult",
+    "simulate",
+    "CriticalSegment",
+    "SegmentType",
+    "critical_segments",
+    "critical_times",
+    "A1Deterministic",
+    "A2Randomized",
+    "A3Randomized",
+    "BreakEven",
+    "DelayedOffPolicy",
+    "OfflinePolicy",
+    "theoretical_ratio",
+    "brick_trace_from_fluid",
+    "msr_like_trace",
+    "pmr",
+    "scale_to_pmr",
+    "with_prediction_error",
+]

@@ -1,0 +1,46 @@
+"""Server-operation cost model (paper Section II-B, problem SCP)."""
+from __future__ import annotations
+
+import dataclasses
+
+from .stepfn import StepFn
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """P: energy per unit time per running server; beta_on/off: toggle costs."""
+
+    P: float = 1.0
+    beta_on: float = 3.0
+    beta_off: float = 3.0
+
+    @property
+    def beta(self) -> float:
+        return self.beta_on + self.beta_off
+
+    @property
+    def delta(self) -> float:
+        """Critical interval Delta = (beta_on + beta_off) / P  (paper eq. 12)."""
+        return self.beta / self.P
+
+
+#: The paper's experimental setting: P = 1, beta_on + beta_off = 6 => Delta = 6.
+PAPER_COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+
+
+def schedule_cost(x: StepFn, costs: CostModel, *, final_level: float | None = None) -> float:
+    """Total cost of a schedule x(t): P * integral(x) + toggle costs.
+
+    ``final_level``: if given, enforce the boundary x(T) = a(T) by charging the
+    final forced turn-off/on at T (paper eq. 5).
+    """
+    energy = costs.P * x.integral()
+    up, down = x.switching()
+    cost = energy + costs.beta_on * up + costs.beta_off * down
+    if final_level is not None:
+        last = x.values[-1]
+        if last > final_level:
+            cost += costs.beta_off * (last - final_level)
+        elif last < final_level:
+            cost += costs.beta_on * (final_level - last)
+    return cost

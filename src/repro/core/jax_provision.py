@@ -1,0 +1,182 @@
+"""The paper's provisioning algorithms as composable, jit-able JAX modules.
+
+The fluid-model level decomposition (DESIGN.md §2) makes every algorithm an
+independent per-level computation, so the whole fleet is one vectorized
+``lax.scan`` over slots — and for very large fleets the *level* axis shards
+over the mesh with ``shard_map`` (per-level instances are embarrassingly
+parallel).  This is the form the serving autoscaler and the elastic trainer
+consume on-device.
+
+Semantics mirror :func:`repro.core.fluid.fluid_scan` exactly (tested).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+E = math.e
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "window", "policy"))
+def provision_schedule(
+    a: jax.Array,          # (T,) int32 demand per slot
+    *,
+    n_levels: int,
+    delta: int,            # critical interval in slots (beta/P)
+    window: int = 0,       # future slots visible (current slot always known)
+    policy: str = "A1",    # A1 | offline | delayedoff
+    predicted: jax.Array | None = None,
+) -> jax.Array:
+    """Returns x: (T,) int32 — number of powered-on servers per slot."""
+    on_matrix = _level_schedule(a, n_levels, delta, window, policy, predicted)
+    return on_matrix.sum(axis=1).astype(jnp.int32)
+
+
+def _level_schedule(a, n_levels, delta, window, policy, predicted=None):
+    """(T, n_levels) bool on-matrix."""
+    T = a.shape[0]
+    pred = a if predicted is None else predicted
+    b = delta
+    w = window
+    m = max(0.0, b - w - 1) if policy == "A1" else float(b)   # delayedoff: m=b
+    horizon = int(min(w + 1, b)) if policy == "A1" else 0
+    levels = jnp.arange(n_levels)
+
+    if policy == "offline":
+        return _offline_levels(a, n_levels, b)
+
+    pad = jnp.concatenate([pred, jnp.zeros((max(horizon, 1),), pred.dtype)])
+
+    def step(carry, t):
+        r, on = carry                                  # (N,) f32, (N,) bool
+        busy = a[t] > levels
+        on = on | busy                                 # dispatcher turn-on
+        r = jnp.where(busy, 0.0, r)
+        idle = on & ~busy
+        r = jnp.where(idle, r + 1.0, r)
+        if horizon > 0:
+            fut = jax.lax.dynamic_slice(pad, (t + 1,), (horizon,))
+            seen = (fut[None, :] > levels[:, None]).any(axis=1)
+        else:
+            seen = jnp.zeros_like(idle)
+        off_now = idle & (r - 1.0 >= m) & ~seen
+        on = on & ~off_now
+        r = jnp.where(off_now, 0.0, r)
+        return (r, on), on
+
+    init = (levels * 0.0, a[0] > levels)   # derived from `levels` so the
+    (_, _), ons = jax.lax.scan(step, init, jnp.arange(T))  # carry stays varying
+    return ons
+
+
+def _offline_levels(a, n_levels, b):
+    """Hindsight-optimal per-level schedule, closed form (no scan).
+
+    Level on at slot t iff busy, or inside an interior idle gap of length
+    <= Delta (prev and next busy exist and next - prev - 1 <= b).
+    """
+    T = a.shape[0]
+    levels = jnp.arange(n_levels)
+    busy = a[:, None] > levels[None, :]                    # (T, N)
+    idx = jnp.arange(T)[:, None]
+    prev_busy = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(busy, idx, -1), axis=0
+    )                                                      # last busy <= t
+    next_busy = jax.lax.associative_scan(
+        jnp.minimum, jnp.where(busy, idx, T + b + 1), axis=0, reverse=True
+    )                                                      # first busy >= t
+    gap = next_busy - prev_busy - 1
+    keep_idle = (prev_busy >= 0) & (next_busy <= T - 1) & (gap * 1.0 <= b)
+    return busy | (~busy & keep_idle)
+
+
+def provision_cost(
+    a: jax.Array, on_matrix: jax.Array, P: float, beta_on: float, beta_off: float
+) -> jax.Array:
+    """Total cost of a per-level schedule (energy + toggles + forced final off)."""
+    energy = P * on_matrix.sum()
+    up = jnp.clip(on_matrix[1:].astype(jnp.int32) - on_matrix[:-1].astype(jnp.int32), 0)
+    down = jnp.clip(on_matrix[:-1].astype(jnp.int32) - on_matrix[1:].astype(jnp.int32), 0)
+    # initial state x(0)=a(0) is free; final forced off to a(T)
+    levels = jnp.arange(on_matrix.shape[1])
+    init_on = a[0] > levels
+    first_turn_on = (on_matrix[0] & ~init_on).sum()
+    final_off = (on_matrix[-1] & ~(a[-1] > levels)).sum()
+    return (
+        energy
+        + beta_on * (up.sum() + first_turn_on)
+        + beta_off * (down.sum() + final_off)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale: shard the level axis over the mesh
+# ---------------------------------------------------------------------------
+
+def provision_schedule_sharded(
+    mesh: Mesh,
+    a: jax.Array,
+    *,
+    n_levels: int,
+    delta: int,
+    window: int = 0,
+    axis: str = "data",
+) -> jax.Array:
+    """Same as provision_schedule, levels sharded over ``axis`` via shard_map.
+
+    The demand trace is replicated (tiny); each shard runs its own level
+    block; the final x(t) is a psum over shards.  Scales to fleets far past
+    one host's memory (1000+ node deployments decide locally, paper Sec. IV).
+    """
+    size = mesh.shape[axis]
+    n_padded = -(-n_levels // size) * size
+    per_shard = n_padded // size
+
+    def local(a_local):
+        i = jax.lax.axis_index(axis)
+        base = i * per_shard
+        ons = _level_schedule_offset(a_local, per_shard, base, delta, window)
+        x_local = ons.sum(axis=1).astype(jnp.int32)
+        return jax.lax.psum(x_local, axis)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=P(),
+        out_specs=P(),
+    )
+    return fn(a)
+
+
+def _level_schedule_offset(a, n_levels, base, delta, window):
+    """A1 level schedule for levels [base, base + n_levels)."""
+    T = a.shape[0]
+    b = delta
+    w = window
+    m = max(0.0, b - w - 1)
+    horizon = int(min(w + 1, b))
+    levels = base + jnp.arange(n_levels)
+    pad = jnp.concatenate([a, jnp.zeros((max(horizon, 1),), a.dtype)])
+
+    def step(carry, t):
+        r, on = carry
+        busy = a[t] > levels
+        on = on | busy
+        r = jnp.where(busy, 0.0, r)
+        idle = on & ~busy
+        r = jnp.where(idle, r + 1.0, r)
+        fut = jax.lax.dynamic_slice(pad, (t + 1,), (horizon,))
+        seen = (fut[None, :] > levels[:, None]).any(axis=1)
+        off_now = idle & (r - 1.0 >= m) & ~seen
+        on = on & ~off_now
+        r = jnp.where(off_now, 0.0, r)
+        return (r, on), on
+
+    init = (levels * 0.0, a[0] > levels)
+    (_, _), ons = jax.lax.scan(step, init, jnp.arange(T))
+    return ons

@@ -1,0 +1,12 @@
+"""Data pipelines: synthetic token streams (training) and request/session
+generators (serving), both deterministic and shardable."""
+from .tokens import TokenPipeline, make_token_batch
+from .requests import Session, SessionTrace, generate_sessions
+
+__all__ = [
+    "TokenPipeline",
+    "make_token_batch",
+    "Session",
+    "SessionTrace",
+    "generate_sessions",
+]

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, collectives, fault tolerance, elastic scaling."""

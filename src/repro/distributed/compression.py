@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback (cross-pod DP traffic reduction).
+
+int8 per-tensor quantization cuts the inter-pod all-reduce payload 4x
+(fp32->int8); the quantization error is carried in an error-feedback buffer
+and re-added next step, which keeps SGD/Adam convergence (Seide et al.,
+Karimireddy et al.).  In the SPMD program the quantize -> all-reduce ->
+dequantize sandwich is expressed by casting before the grad psum; here the
+transform wraps the grad tree so it also runs (and is testable) on one host.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any          # same structure as grads, fp32
+
+
+def init_error_feedback(params: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(
+    grads: Any, state: ErrorFeedbackState
+) -> tuple[Any, ErrorFeedbackState, dict]:
+    """Returns (compressed-then-decompressed grads, new EF state, metrics).
+
+    The returned grads are exactly what every pod would see after an int8
+    all-reduce; the residual keeps the information the quantizer dropped.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq, g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_r = treedef.unflatten([o[1] for o in outs])
+    err_norm = jnp.sqrt(sum(jnp.sum(jnp.square(o[1])) for o in outs))
+    return new_g, ErrorFeedbackState(residual=new_r), {"ef_residual_norm": err_norm}
+
+
+def compression_ratio(grads: Any) -> float:
+    """fp32 bytes / int8 bytes for the inter-pod payload."""
+    return 4.0

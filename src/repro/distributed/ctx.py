@@ -1,0 +1,130 @@
+"""Trace-time sharding context: activation constraints for model code.
+
+Model code is mesh-agnostic; step builders install a context (mesh + dp axes)
+around tracing, and ``constrain`` points in the model then pin activation
+shardings so XLA propagation can't collapse to replication (it does for
+head counts indivisible by the TP axis — caught by the dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh: Mesh, seq_parallel: bool = False,
+              fsdp_only: bool = False) -> Iterator[None]:
+    if fsdp_only:
+        dp = tuple(mesh.axis_names)
+    elif "pod" in mesh.axis_names:
+        dp = ("pod", "data")
+    else:
+        dp = ("data",)
+    token = _CTX.set((mesh, dp, seq_parallel, fsdp_only))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _get():
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Pin sharding: 'dp' entries expand to the data axes; None = replicated.
+
+    No-op when no context is installed (single-host tests) or when a dim is
+    indivisible by its axes.
+    """
+    ctx = _get()
+    if ctx is None:
+        return x
+    mesh, dp = ctx[0], ctx[1]
+    import math
+
+    names = []
+    used: set = set()
+    for dim, s in enumerate(spec):
+        if s == "dp":
+            size = math.prod(mesh.shape[a] for a in dp)
+            if x.shape[dim] % size == 0:
+                names.append(dp)
+                used.update(dp)
+            else:
+                names.append(None)
+        elif s is None or s in used:       # a mesh axis may appear only once
+            names.append(None)
+        else:
+            if x.shape[dim] % mesh.shape[s] == 0:
+                names.append(s)
+                used.add(s)
+            else:
+                names.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*names))
+    )
+
+
+def constrain_tokens_3d(x: jax.Array) -> jax.Array:
+    """(B, S, D) activations: batch over dp (+ S over 'model' in SP mode).
+
+    Megatron-style sequence parallelism: pinning the residual stream
+    S-sharded between blocks turns each TP boundary all-reduce into a
+    reduce-scatter (1/TP the result bytes) + a later all-gather, and stores
+    layer-boundary activations at 1/TP the footprint.
+    """
+    ctx = _get()
+    if ctx is not None and len(ctx) > 2 and ctx[2]:
+        return constrain(x, "dp", "model", None)
+    return constrain(x, "dp", None, None)
+
+
+def constrain_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Decode layout: KV sequence sharded over 'model', q tiny + replicated.
+
+    The masked softmax over the sharded KV length lowers to local partials +
+    small psums of the (B, H, 1) stats — the collective-optimal way to read
+    a long cache when kv_heads don't divide the TP axis (all assigned archs).
+    """
+    ctx = _get()
+    if ctx is None:
+        return q, k, v
+    mesh = ctx[0]
+    tp = mesh.shape["model"]
+    if k.shape[1] % tp == 0:
+        k = constrain(k, "dp", "model", None, None)
+        v = constrain(v, "dp", "model", None, None)
+        q = constrain(q, "dp", None, None, None)
+    return q, k, v
+
+
+def constrain_attention(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Pick the attention TP layout for (B, S, H, hd) tensors.
+
+    Heads shard over 'model' when divisible (Megatron); otherwise queries
+    shard along their *sequence* dim (context parallelism) with K/V
+    replicated — so archs like hymba (25H) / llama4 (40H) / paligemma (8H)
+    still split their S x S score matrices across the TP axis instead of
+    replicating them (dry-run caught 16x waste + 40GB scores otherwise).
+    """
+    ctx = _get()
+    if ctx is None or (len(ctx) > 3 and ctx[3]):   # fsdp_only: dp covers all
+        return q, k, v
+    mesh = ctx[0]
+    tp = mesh.shape["model"]
+    if q.shape[2] % tp == 0 and k.shape[2] % tp == 0:
+        q = constrain(q, "dp", None, "model", None)
+        k = constrain(k, "dp", None, "model", None)
+        v = constrain(v, "dp", None, "model", None)
+    elif q.shape[1] % tp == 0 and q.shape[1] > 1:
+        q = constrain(q, "dp", "model", None, None)
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    return q, k, v

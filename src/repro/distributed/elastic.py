@@ -1,0 +1,30 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints store full (unsharded) arrays plus the logical parameter tree;
+sharding is a pure function of (tree, mesh) — ``param_specs`` — so restoring
+onto a larger/smaller mesh is just a different ``device_put`` placement.
+Combined with the provisioning layer this implements the paper's dynamic
+capacity at the *training* tier: pods join/leave the data-parallel axis and
+training resumes from the latest step with a resharded state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import restore
+from repro.distributed.sharding import param_shardings
+
+
+def reshard_restore(directory: str, step: int, like: Any, mesh: Mesh) -> Any:
+    """Restore ``like``-structured state placing it for ``mesh``."""
+    shardings = param_shardings(jax.eval_shape(lambda: like), mesh)
+    return restore(directory, step, like, shardings=shardings)
+
+
+def global_batch_for(mesh: Mesh, per_replica_batch: int) -> int:
+    """Elastic global batch: scales with the data-parallel extent."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    return per_replica_batch * dp

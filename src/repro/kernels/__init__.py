@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the attention hot spots (+ pure-jnp oracles).
+
+The model's portable einsum path is used for dry-run lowering; these kernels
+are the TPU execution path and are validated against ref.py in interpret
+mode on CPU (tests/test_kernels.py).
+"""
+from .ops import decode_attention, flash_attention
+
+__all__ = ["decode_attention", "flash_attention"]

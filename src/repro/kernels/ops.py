@@ -1,0 +1,36 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU they
+compile to Mosaic.  ``interpret`` is auto-detected from the default backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=512, block_k=512):
+    return _flash(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=_on_cpu(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k=1024):
+    return _decode(
+        q, k_cache, v_cache, lengths,
+        block_k=block_k,
+        interpret=_on_cpu(),
+    )

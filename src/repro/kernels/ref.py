@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, S, KVH, hd)
+    v: jax.Array,          # (B, S, KVH, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    kvh = k.shape[2]
+    rep = H // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vv = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    q_pos = jax.lax.broadcasted_iota(jnp.int32, (S, S), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (S, S), 1)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, hd) — single new token per sequence
+    k_cache: jax.Array,    # (B, S, KVH, hd)
+    v_cache: jax.Array,    # (B, S, KVH, hd)
+    lengths: jax.Array,    # (B,) int32 — valid cache entries per sequence
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    B, S, kvh, hd = k_cache.shape
+    H = q.shape[1]
+    rep = H // kvh
+    scale = hd ** -0.5 if scale is None else scale
+    kk = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    vv = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    scores = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(S)[None, None, :]
+    mask = k_pos < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

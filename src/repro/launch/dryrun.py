@@ -1,0 +1,242 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM analysis, and unsupported collectives all
+surface here.  Roofline terms are extracted from the compiled artifact
+(cost_analysis + HLO collective parse) and written to reports/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--all] [--out reports/dryrun]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs, runnable_cells
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, lower_step
+
+# TPU v5e hardware constants (roofline targets; this container is CPU-only).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO, by kind.
+
+    Matches sync and async-start forms; '-done' lines are skipped so async
+    pairs are not double counted.
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        m = _COLLECTIVE_RE.search(rhs)
+        if not m or "-done" in rhs[: m.end() + 8]:
+            continue
+        kind = m.group(1)
+        # result shape(s) appear between '=' and the op name
+        total = 0.0
+        opname_idx = rhs.find(kind)
+        for dt, dims in _SHAPE_RE.findall(rhs[:opname_idx]):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def depth_period(cfg) -> int:
+    """Smallest layer block that repeats identically (xLSTM: sLSTM period)."""
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every
+    return 1
+
+
+def with_depth(cfg, k: int):
+    if cfg.is_encdec:
+        return cfg.replace(n_enc_layers=k, n_dec_layers=k, n_layers=2 * k)
+    return cfg.replace(n_layers=k)
+
+
+def _compile_once(cfg, mesh, shape):
+    bundle = build_step(cfg, mesh, shape)
+    lowered = lower_step(bundle, mesh)
+    compiled = lowered.compile()
+    return compiled
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    out_dir: Path,
+    overrides: dict | None = None,
+    tag_suffix: str = "",
+) -> dict:
+    """One dry-run cell: three compiles.
+
+    1. Full-depth scanned program — the compile/sharding gate + per-device
+       memory analysis (this is the artifact that must run on hardware).
+    2+3. Depth-p and depth-2p *unrolled* programs — XLA cost analysis counts
+       a while body once, so exact FLOP/collective totals are obtained by
+       linear extrapolation in depth (every layer block is shape-identical):
+           total(L) = f(p) + (L/p - 1) * (f(2p) - f(p)).
+    """
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+
+    t0 = time.time()
+    compiled = _compile_once(cfg, mesh, shape)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    # --- depth extrapolation for exact cost accounting
+    p = depth_period(cfg)
+    L_periods = (cfg.n_enc_layers if cfg.is_encdec else cfg.n_layers) // p
+    t0 = time.time()
+    acc = []
+    for k in (p, 2 * p):
+        c = _compile_once(with_depth(cfg, k).replace(scan_layers=False), mesh, shape)
+        cost = c.cost_analysis()
+        acc.append(
+            {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": collective_bytes(c.as_text()),
+            }
+        )
+    t_depth = time.time() - t0
+
+    def extrap(key):
+        f1, f2 = acc[0][key], acc[1][key]
+        return f1 + (L_periods - 1) * (f2 - f1)
+
+    flops = extrap("flops")
+    bytes_accessed = extrap("bytes")
+    kinds = set(acc[0]["coll"]) | set(acc[1]["coll"])
+    coll = {
+        k: acc[0]["coll"].get(k, 0.0)
+        + (L_periods - 1) * (acc[1]["coll"].get(k, 0.0) - acc[0]["coll"].get(k, 0.0))
+        for k in kinds
+    }
+    coll_total = sum(coll.values())
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 2),
+        "depth_probe_s": round(t_depth, 2),
+        # memory_analysis is per-device for SPMD executables
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        # per-device, exact via depth extrapolation
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll,
+        "collective_total_per_device": coll_total,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            # nb: XLA 'bytes accessed' is unfused (CPU backend) — treated as
+            # an upper bound; launch/roofline.py adds the fused traffic model.
+            "memory_s_hlo_upper": bytes_accessed / HBM_BW,
+            "collective_s": coll_total / ICI_BW,
+        },
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{report['mesh']}{tag_suffix}"
+    (out_dir / f"{tag}.json").write_text(json.dumps(report, indent=2))
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every runnable cell")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    cells: list[tuple[str, str]]
+    if args.all:
+        cells = runnable_cells()
+    else:
+        archs = [args.arch] if args.arch else list_archs()
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [
+            (a, s)
+            for a in archs
+            for s in shapes
+            if (a, s) in set(runnable_cells())
+        ]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            try:
+                rep = run_cell(arch, shape, mp, out_dir)
+                r = rep["roofline"]
+                print(
+                    f"OK   {tag}: compile={rep['compile_s']}s "
+                    f"flops/dev={rep['hlo_flops_per_device']:.3e} "
+                    f"compute={r['compute_s']:.4f}s "
+                    f"mem_ub={r['memory_s_hlo_upper']:.4f}s "
+                    f"coll={r['collective_s']:.4f}s",
+                    flush=True,
+                )
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state.  Single pod: 16 x 16 = 256 chips (data x model).  Multi-pod:
+2 x 16 x 16 = 512 chips (pod x data x model); the 'pod' axis is pure DP over
+the inter-pod links, 'data' is FSDP over intra-pod ICI, 'model' is TP.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    model_parallel = min(model_parallel, n)
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,176 @@
+"""Step builders: jit-able train / prefill / decode steps with shardings.
+
+Used by the trainer, the serving engine, and the multi-pod dry-run: each
+builder returns (fn, in_shardings, out_shardings, abstract_args) so callers
+can either execute or just ``jit(...).lower(*abstract).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.distributed.ctx import shard_ctx
+from repro.models import model_zoo as zoo
+from repro.optim import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    abstract_args: tuple
+    donate_argnums: tuple = ()
+
+
+def _named(tree_spec, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_spec)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: ShapeCell,
+    opt_cfg: AdamWConfig | None = None,
+) -> StepBundle:
+    opt_cfg = opt_cfg or AdamWConfig()
+    params_shape = zoo.abstract_params(cfg)
+    opt_shape = jax.eval_shape(init_adamw, params_shape)
+    batch_shape = zoo.input_specs(cfg, shape)
+
+    p_spec = shd.param_specs(params_shape, mesh, fsdp_only=cfg.fsdp_only)
+    o_spec = AdamWState(step=P(), m=p_spec, v=p_spec)
+    b_spec = shd.batch_specs(batch_shape, mesh, fsdp_only=cfg.fsdp_only)
+
+    def train_step(params, opt_state, batch):
+        with shard_ctx(mesh, seq_parallel=cfg.seq_parallel,
+                       fsdp_only=cfg.fsdp_only):
+            def lf(p):
+                return zoo.loss_fn(p, cfg, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            new_params, new_opt, opt_metrics = adamw_update(
+                grads, opt_state, params, opt_cfg
+            )
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return new_params, new_opt, metrics
+
+    metrics_shape = jax.eval_shape(
+        lambda p, o, b: train_step(p, o, b)[2], params_shape, opt_shape, batch_shape
+    )
+    m_spec = jax.tree.map(lambda _: P(), metrics_shape)
+
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(_named(p_spec, mesh), _named(o_spec, mesh), _named(b_spec, mesh)),
+        out_shardings=(_named(p_spec, mesh), _named(o_spec, mesh), _named(m_spec, mesh)),
+        abstract_args=(params_shape, opt_shape, batch_shape),
+        donate_argnums=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def _serving_params_shape(cfg: ModelConfig):
+    ps = zoo.abstract_params(cfg)
+    if cfg.serve_weight_dtype is None:
+        return ps
+    dt = cfg.serve_weight_dtype
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s,
+        ps,
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell) -> StepBundle:
+    params_shape = _serving_params_shape(cfg)
+    batch_shape = zoo.input_specs(
+        cfg, dataclasses.replace(shape, kind="prefill")
+    )
+    cache_shape = zoo.abstract_cache(cfg, shape)
+
+    p_spec = shd.param_specs(params_shape, mesh, serving=True)
+    b_spec = shd.batch_specs(batch_shape, mesh)
+    c_spec = shd.cache_specs(cache_shape, mesh)
+
+    def prefill(params, batch, cache):
+        with shard_ctx(mesh, seq_parallel=cfg.seq_parallel):
+            return zoo.prefill_fn(params, cfg, batch, cache)
+
+    logits_shape = jax.eval_shape(prefill, params_shape, batch_shape, cache_shape)[0]
+    l_spec = shd.batch_specs(logits_shape, mesh)
+
+    return StepBundle(
+        fn=prefill,
+        in_shardings=(_named(p_spec, mesh), _named(b_spec, mesh), _named(c_spec, mesh)),
+        out_shardings=(_named(l_spec, mesh), _named(c_spec, mesh)),
+        abstract_args=(params_shape, batch_shape, cache_shape),
+        donate_argnums=(2,),
+    )
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell) -> StepBundle:
+    params_shape = _serving_params_shape(cfg)
+    cache_shape = zoo.abstract_cache(cfg, shape)
+    B = shape.global_batch
+    token_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+    len_shape = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_spec = shd.param_specs(params_shape, mesh, serving=True)
+    c_spec = shd.cache_specs(cache_shape, mesh, prefer_seq=cfg.sp_decode)
+    t_spec = shd.batch_specs(token_shape, mesh)
+
+    def decode(params, token, cur_len, cache):
+        with shard_ctx(mesh):
+            return zoo.decode_fn(params, cfg, token, cur_len, cache)
+
+    logits_shape = jax.eval_shape(
+        decode, params_shape, token_shape, len_shape, cache_shape
+    )[0]
+    l_spec = shd.batch_specs(logits_shape, mesh)
+
+    return StepBundle(
+        fn=decode,
+        in_shardings=(
+            _named(p_spec, mesh),
+            _named(t_spec, mesh),
+            NamedSharding(mesh, P()),
+            _named(c_spec, mesh),
+        ),
+        out_shardings=(_named(l_spec, mesh), _named(c_spec, mesh)),
+        abstract_args=(params_shape, token_shape, len_shape, cache_shape),
+        donate_argnums=(3,),
+    )
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape)
+    return build_decode_step(cfg, mesh, shape)
+
+
+def lower_step(bundle: StepBundle, mesh: Mesh):
+    """jit + lower the bundle's fn on abstract args (no allocation)."""
+    jitted = jax.jit(
+        bundle.fn,
+        in_shardings=bundle.in_shardings,
+        out_shardings=bundle.out_shardings,
+        donate_argnums=bundle.donate_argnums,
+    )
+    with mesh:
+        return jitted.lower(*bundle.abstract_args)

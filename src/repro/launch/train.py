@@ -1,0 +1,63 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+Local mode (default) trains the reduced config on the host mesh with the
+full fault-tolerant loop (checkpoints, auto-resume, compression).  With
+``--dry-run`` it lowers/compiles the FULL config's train step for the
+production mesh instead (no allocation).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 100
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import os
+
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=512"
+        ).strip()
+        from pathlib import Path
+
+        from repro.launch.dryrun import run_cell
+
+        rep = run_cell(args.arch, args.shape, args.multi_pod,
+                       Path("reports/dryrun"))
+        print(f"compiled {args.arch} x {args.shape}: "
+              f"flops/dev={rep['hlo_flops_per_device']:.3e}")
+        return 0
+
+    from repro.configs import get_config
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch, reduced=True).replace(remat="none")
+    tcfg = TrainerConfig(
+        total_steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, grad_compression=args.compress_grads,
+    )
+    out = Trainer(cfg, tcfg).run()
+    if out["history"]:
+        print(f"final loss: {out['history'][-1][1]:.4f} "
+              f"@ step {out['final_step']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,281 @@
+"""GQA attention: training (full/sliding causal), prefill, and cached decode.
+
+The jnp einsum path is the portable implementation used for lowering /
+dry-runs; ``repro.kernels`` provides the Pallas TPU kernels with identical
+semantics (tests assert allclose between the two).
+
+GQA expands K/V to the full head count right before the SDPA einsums (XLA
+fuses the gather); heads shard cleanly over the 'model' axis where divisible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain_attention, constrain_attention_decode
+from .layers import apply_rope, init_dense
+
+
+class KVCache(NamedTuple):
+    """KV cache; for sliding-window layers it is a ring buffer of size W.
+
+    ``pos`` holds the absolute position stored in each slot (-1 = empty), so
+    masking never needs to reason about ring wrap-around.
+    """
+
+    k: jax.Array          # (B, S_cache, KVH, hd)
+    v: jax.Array          # (B, S_cache, KVH, hd)
+    pos: jax.Array        # (S_cache,) int32, absolute positions, -1 = empty
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, (d, h, hd), cfg.param_dtype, fan_in=d),
+        "wk": init_dense(k2, (d, kvh, hd), cfg.param_dtype, fan_in=d),
+        "wv": init_dense(k3, (d, kvh, hd), cfg.param_dtype, fan_in=d),
+        "wo": init_dense(k4, (h, hd, d), cfg.param_dtype, fan_in=h * hd),
+    }
+
+
+def _sdpa(q, k, v, mask, compute_dtype):
+    """SDPA over flat heads.
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, H, hd) (KV pre-expanded to H heads —
+    XLA fuses the expansion gather; heads shard over 'model' when divisible).
+    mask: broadcastable (B?, 1?, Sq, Skv).
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask, scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _expand_kv(x, n_heads: int):
+    """(B, S, KVH, hd) -> (B, S, H, hd) by repeating each KV head."""
+    b, s, kvh, hd = x.shape
+    if kvh == n_heads:
+        return x
+    return jnp.repeat(x, n_heads // kvh, axis=2)
+
+
+def _causal_mask(q_len: int, kv_len: int, window, q_offset) -> jax.Array:
+    """Boolean (q_len, kv_len): True = attend.  window=0 -> full causal."""
+    q_pos = q_offset + jax.lax.broadcasted_iota(jnp.int32, (q_len, kv_len), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (q_len, kv_len), 1)
+    mask = k_pos <= q_pos
+    if isinstance(window, jax.Array):
+        mask &= k_pos > q_pos - window
+    elif window > 0:
+        mask &= k_pos > q_pos - jnp.int32(window)
+    return mask
+
+
+def _qkv(x, p, cd):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    return q, k, v
+
+
+def _local_attention(q, k, v, window: int, cd):
+    """Banded sliding-window attention in chunks of W (hillclimb lever).
+
+    Chunk i attends to chunks {i-1, i}: compute/memory O(S*2W) instead of
+    O(S^2) with the same semantics as the masked full-score path.
+    q/k/v: (B, S, H, hd) with KV pre-expanded; requires S % W == 0.
+    """
+    B, S, H, hd = q.shape
+    W = window
+    nc = S // W
+    qc = q.reshape(B, nc, W, H, hd)
+    kc = k.reshape(B, nc, W, H, hd)
+    vc = v.reshape(B, nc, W, H, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kc], axis=2)               # (B, nc, 2W, H, hd)
+    v2 = jnp.concatenate([v_prev, vc], axis=2)
+    scores = jnp.einsum("bcqhd,bckhd->bchqk", qc, k2).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (W, 2 * W), 0)  # local q index
+    ki = jax.lax.broadcasted_iota(jnp.int32, (W, 2 * W), 1)  # index into [prev|cur]
+    rel = qi + W - ki                                        # k_pos = q_pos - rel
+    band = (rel >= 0) & (rel < W)
+    ci = jnp.arange(nc)[:, None, None]
+    valid_prev = (ci > 0) | (ki[None] >= W)                  # chunk 0 has no prev
+    mask = band[None] & valid_prev                           # (nc, W, 2W)
+    scores = jnp.where(mask[None, :, None], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", probs, v2)
+    return out.reshape(B, S, H, hd)
+
+
+def attention_train(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    window=0,
+    bidirectional: bool = False,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Self-attention over a full sequence (training / encoder)."""
+    cd = cfg.compute_dtype
+    b, s, _ = x.shape
+    q, k, v = _qkv(x, p, cd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if (
+        cfg.local_attention
+        and not bidirectional
+        and isinstance(window, int)
+        and window > 0
+        and s % window == 0
+        and s >= 2 * window
+    ):
+        q, ke, ve = constrain_attention(q, _expand_kv(k, cfg.n_heads),
+                                        _expand_kv(v, cfg.n_heads))
+        out = _local_attention(q, ke, ve, window, cd)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    if bidirectional:
+        mask = jnp.ones((1, 1, s, s), dtype=bool)
+    else:
+        mask = _causal_mask(s, s, window, 0)[None, None]
+    q, ke, ve = constrain_attention(q, _expand_kv(k, cfg.n_heads),
+                                    _expand_kv(v, cfg.n_heads))
+    out = _sdpa(q, ke, ve, mask, cd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def cross_attention(x, memory, p, cfg: ModelConfig) -> jax.Array:
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(cd))
+    mask = jnp.ones((1, 1, x.shape[1], memory.shape[1]), dtype=bool)
+    q, ke, ve = constrain_attention(q, _expand_kv(k, cfg.n_heads),
+                                    _expand_kv(v, cfg.n_heads))
+    out = _sdpa(q, ke, ve, mask, cd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    """max_len: cache slots; for sliding-window layers pass min(W, seq)."""
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.kv_cache_dtype),
+        v=jnp.zeros(shape, cfg.kv_cache_dtype),
+        pos=jnp.full((max_len,), -1, jnp.int32),
+    )
+
+
+def prefill_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: KVCache,
+    window=0,
+) -> tuple[jax.Array, KVCache]:
+    """Full-sequence attention that also fills the KV cache.
+
+    If the cache is smaller than S (ring/window cache) only the last
+    ``cache_len`` tokens are stored.
+    """
+    cd = cfg.compute_dtype
+    b, s, _ = x.shape
+    cache_len = cache.k.shape[1]
+    q, k, v = _qkv(x, p, cd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache_len < s:
+        k_store, v_store = k[:, s - cache_len:], v[:, s - cache_len:]
+        pos_store = jnp.arange(s - cache_len, s, dtype=jnp.int32)
+    else:
+        k_store, v_store = k, v
+        pos_store = jnp.where(
+            jnp.arange(cache_len) < s, jnp.arange(cache_len), -1
+        ).astype(jnp.int32)
+        k_store = jnp.pad(k_store, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+        v_store = jnp.pad(v_store, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+    new_cache = KVCache(
+        k=k_store.astype(cache.k.dtype),
+        v=v_store.astype(cache.v.dtype),
+        pos=pos_store,
+    )
+    q, ke, ve = constrain_attention(q, _expand_kv(k, cfg.n_heads),
+                                    _expand_kv(v, cfg.n_heads))
+    if (
+        cfg.local_attention
+        and isinstance(window, int)
+        and window > 0
+        and s % window == 0
+        and s >= 2 * window
+    ):
+        out = _local_attention(q, ke, ve, window, cd)
+    else:
+        mask = _causal_mask(s, s, window, 0)[None, None]
+        out = _sdpa(q, ke, ve, mask, cd)
+    return (
+        jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)),
+        new_cache,
+    )
+
+
+def decode_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    cache: KVCache,
+    cur_len: jax.Array,
+    window=0,
+) -> tuple[jax.Array, KVCache]:
+    """One-token attention against the cache (ring-buffer aware).
+
+    x: (B, 1, D); ``cur_len``: scalar int32 — absolute position of the new
+    token; it is written at slot ``cur_len % cache_len``.
+    """
+    cd = cfg.compute_dtype
+    b = x.shape[0]
+    cache_len = cache.k.shape[1]
+    pos = jnp.full((b, 1), cur_len, dtype=jnp.int32)
+    q, k, v = _qkv(x, p, cd)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = jnp.mod(cur_len, cache_len)
+    new_cache = KVCache(
+        k=jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                       (0, slot, 0, 0)),
+        v=jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                       (0, slot, 0, 0)),
+        pos=jax.lax.dynamic_update_slice(
+            cache.pos, jnp.reshape(cur_len, (1,)).astype(jnp.int32), (slot,)
+        ),
+    )
+    kpos = new_cache.pos[None, :]                       # (1, cache_len)
+    mask = (kpos >= 0) & (kpos <= cur_len)
+    if isinstance(window, jax.Array):
+        mask &= kpos > cur_len - window
+    elif window > 0:
+        mask &= kpos > cur_len - jnp.int32(window)
+    q, ke, ve = constrain_attention_decode(
+        q,
+        _expand_kv(new_cache.k.astype(cd), cfg.n_heads),
+        _expand_kv(new_cache.v.astype(cd), cfg.n_heads),
+    )
+    out = _sdpa(q, ke, ve, mask[None, None], cd)
+    return (
+        jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd)),
+        new_cache,
+    )

@@ -1,0 +1,233 @@
+"""Per-layer blocks for every architecture family, shaped for lax.scan.
+
+Each family provides:
+  * ``init_layer(key, cfg)``     — one layer's parameter pytree,
+  * ``layer_train(p, cfg, x, positions, flag)``   -> (x, aux_loss),
+  * ``layer_prefill(p, cfg, x, positions, cache)`` -> (x, cache),
+  * ``layer_decode(p, cfg, x, cur_len, cache)``    -> (x, cache),
+  * ``init_layer_cache(cfg, batch, s_max)``        — one layer's decode cache.
+
+Layers are stacked (leading L axis) via vmap'd init and scanned over, so the
+compiled HLO contains each layer body once regardless of depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain_tokens_3d
+from . import xlstm as xl
+from .attention import (
+    KVCache,
+    attention_train,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    prefill_attention,
+)
+from .layers import init_mlp, init_rms_norm, mlp, rms_norm
+from .moe import init_moe, moe_layer
+from .ssm import (
+    SSMState,
+    init_ssm,
+    init_ssm_state,
+    ssm_decode,
+    ssm_prefill,
+    ssm_train,
+)
+
+ZERO = jnp.zeros((), jnp.float32)
+
+
+def attn_window(cfg: ModelConfig) -> int:
+    return cfg.window if cfg.family == "hybrid" else 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    fam = cfg.family
+    p: dict = {"ln1": init_rms_norm(d, cfg.param_dtype)}
+    if fam in ("dense", "vlm", "moe", "hybrid"):
+        p["attn"] = init_attention(ks[0], cfg)
+        p["ln2"] = init_rms_norm(d, cfg.param_dtype)
+    if fam in ("dense", "vlm", "hybrid"):
+        p["mlp"] = init_mlp(ks[1], d, cfg.d_ff, cfg.param_dtype)
+    if fam == "moe":
+        p["moe"] = init_moe(ks[2], cfg)
+    if fam == "hybrid":
+        p["ssm"] = init_ssm(ks[3], cfg)
+    if fam == "ssm":  # xLSTM: dual param sets, per-layer flag picks one
+        p["mlstm"] = xl.init_mlstm(ks[4], cfg)
+        p["slstm"] = xl.init_slstm(ks[5], cfg)
+    return p
+
+
+def init_stacked_layers(key, cfg: ModelConfig, n_layers: int):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: init_layer(k, cfg))(keys)
+
+
+def layer_flags(cfg: ModelConfig) -> jax.Array:
+    """Per-layer scalar flags consumed as scan xs (xLSTM: is_slstm)."""
+    n = cfg.n_layers if not cfg.is_encdec else cfg.n_dec_layers
+    if cfg.family == "ssm" and cfg.slstm_every > 0:
+        idx = jnp.arange(n)
+        return (jnp.mod(idx + 1, cfg.slstm_every) == 0)
+    return jnp.zeros((n,), dtype=bool)
+
+
+# ---------------------------------------------------------------------------
+# train (full sequence, no cache)
+# ---------------------------------------------------------------------------
+
+def layer_train(p: dict, cfg: ModelConfig, x, positions, flag) -> tuple[jax.Array, jax.Array]:
+    x = constrain_tokens_3d(x)   # anchor per-layer activation sharding
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention_train(h, p["attn"], cfg, positions, window=attn_window(cfg))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(h, p["mlp"], cfg.act, cfg.compute_dtype)
+        return x, ZERO
+    if fam == "moe":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention_train(h, p["attn"], cfg, positions)
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, aux = moe_layer(h, p["moe"], cfg)
+        return x + y, aux
+    if fam == "hybrid":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        att = attention_train(h, p["attn"], cfg, positions, window=cfg.window)
+        ssm = ssm_train(h, p["ssm"], cfg)
+        x = x + att + ssm
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(h, p["mlp"], cfg.act, cfg.compute_dtype)
+        return x, ZERO
+    if fam == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y = jax.lax.cond(
+            flag,
+            lambda hh: xl.slstm_train(hh, p["slstm"], cfg),
+            lambda hh: xl.mlstm_train(hh, p["mlstm"], cfg),
+            h,
+        )
+        return x + y, ZERO
+    raise KeyError(fam)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, batch: int, s_max: int):
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"kv": init_kv_cache(cfg, batch, s_max)}
+    if fam == "hybrid":
+        w = min(cfg.window, s_max) if cfg.window else s_max
+        return {
+            "kv": init_kv_cache(cfg, batch, w),
+            "ssm": init_ssm_state(cfg, batch),
+        }
+    if fam == "ssm":
+        return {
+            "mlstm": xl.init_mlstm_state(cfg, batch),
+            "slstm": xl.init_slstm_state(cfg, batch),
+        }
+    raise KeyError(fam)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def layer_prefill(p: dict, cfg: ModelConfig, x, positions, cache, flag):
+    x = constrain_tokens_3d(x)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        att, kv = prefill_attention(h, p["attn"], cfg, positions, cache["kv"],
+                                    window=attn_window(cfg))
+        x = x + att
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if fam == "moe":
+            y, _ = moe_layer(h, p["moe"], cfg)
+            x = x + y
+        else:
+            x = x + mlp(h, p["mlp"], cfg.act, cfg.compute_dtype)
+        return x, {"kv": kv}
+    if fam == "hybrid":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        att, kv = prefill_attention(h, p["attn"], cfg, positions, cache["kv"],
+                                    window=cfg.window)
+        ssm_y, ssm_state = ssm_prefill(h, p["ssm"], cfg, cache["ssm"])
+        x = x + att + ssm_y
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(h, p["mlp"], cfg.act, cfg.compute_dtype)
+        return x, {"kv": kv, "ssm": ssm_state}
+    if fam == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+
+        def do_slstm(hh):
+            y, st = xl.slstm_train(hh, p["slstm"], cfg, state=cache["slstm"],
+                                   return_state=True)
+            return y, cache["mlstm"], st
+
+        def do_mlstm(hh):
+            y, st = xl.mlstm_train(hh, p["mlstm"], cfg, state=cache["mlstm"],
+                                   return_state=True)
+            return y, st, cache["slstm"]
+
+        y, mstate, sstate = jax.lax.cond(flag, do_slstm, do_mlstm, h)
+        return x + y, {"mlstm": mstate, "slstm": sstate}
+    raise KeyError(fam)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token)
+# ---------------------------------------------------------------------------
+
+def layer_decode(p: dict, cfg: ModelConfig, x, cur_len, cache, flag):
+    x = constrain_tokens_3d(x)
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        att, kv = decode_attention(h, p["attn"], cfg, cache["kv"], cur_len,
+                                   window=attn_window(cfg))
+        x = x + att
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if fam == "moe":
+            y, _ = moe_layer(h, p["moe"], cfg)
+            x = x + y
+        else:
+            x = x + mlp(h, p["mlp"], cfg.act, cfg.compute_dtype)
+        return x, {"kv": kv}
+    if fam == "hybrid":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        att, kv = decode_attention(h, p["attn"], cfg, cache["kv"], cur_len,
+                                   window=cfg.window)
+        ssm_y, ssm_state = ssm_decode(h, p["ssm"], cfg, cache["ssm"])
+        x = x + att + ssm_y
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(h, p["mlp"], cfg.act, cfg.compute_dtype)
+        return x, {"kv": kv, "ssm": ssm_state}
+    if fam == "ssm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+
+        def do_slstm(hh):
+            y, st = xl.slstm_decode(hh, p["slstm"], cfg, cache["slstm"])
+            return y, cache["mlstm"], st
+
+        def do_mlstm(hh):
+            y, st = xl.mlstm_decode(hh, p["mlstm"], cfg, cache["mlstm"])
+            return y, st, cache["slstm"]
+
+        y, mstate, sstate = jax.lax.cond(flag, do_slstm, do_mlstm, h)
+        return x + y, {"mlstm": mstate, "slstm": sstate}
+    raise KeyError(fam)

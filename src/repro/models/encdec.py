@@ -1,0 +1,214 @@
+"""Encoder-decoder backbone (seamless-m4t): bidirectional encoder over stub
+frame embeddings + causal decoder with cross-attention.
+
+The speech frontend is a stub — ``input_specs`` supplies (B, frames, d_model)
+embeddings; a trainable projection maps them into the encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .attention import (
+    KVCache,
+    attention_train,
+    cross_attention,
+    decode_attention,
+    init_attention,
+    init_kv_cache,
+    prefill_attention,
+)
+from .transformer import _scan_or_unroll
+from repro.distributed.ctx import constrain_tokens_3d
+from .layers import (
+    embed_tokens,
+    init_dense,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    mlp,
+    rms_norm,
+    unembed,
+)
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(ks[0], cfg),
+        "lnx": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "xattn": init_attention(ks[1], cfg),
+        "ln2": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "frontend_proj": init_dense(ks[2], (cfg.d_model, cfg.d_model),
+                                    cfg.param_dtype),
+        "embed": init_embedding(ks[3], cfg.vocab_size, cfg.d_model,
+                                cfg.param_dtype),
+        "encoder": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "enc_ln": init_rms_norm(cfg.d_model, cfg.param_dtype),
+        "final_ln": init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_src, D) stub embeddings -> encoder memory."""
+    cd = cfg.compute_dtype
+    x = jnp.einsum("bfd,de->bfe", frames.astype(cd),
+                   params["frontend_proj"].astype(cd))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, p):
+        h = constrain_tokens_3d(h)
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        h = h + attention_train(hn, p["attn"], cfg, positions, bidirectional=True)
+        hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + mlp(hn, p["mlp"], cfg.act, cd)
+        return h, None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = _scan_or_unroll(body, x, params["encoder"], cfg.n_enc_layers,
+                           cfg.scan_layers)
+    return rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens: jax.Array, memory: jax.Array):
+    """Teacher-forced decoder hidden states."""
+    cd = cfg.compute_dtype
+    x = embed_tokens(tokens, params["embed"], cd)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, p):
+        h = constrain_tokens_3d(h)
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        h = h + attention_train(hn, p["attn"], cfg, positions)
+        hn = rms_norm(h, p["lnx"], cfg.norm_eps)
+        h = h + cross_attention(hn, memory, p["xattn"], cfg)
+        hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + mlp(hn, p["mlp"], cfg.act, cd)
+        return h, None
+
+    body = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = _scan_or_unroll(body, x, params["decoder"], cfg.n_dec_layers,
+                           cfg.scan_layers)
+    return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch: dict):
+    memory = encode(params, cfg, batch["frontend"])
+    h = decode_train(params, cfg, batch["tokens"], memory)
+    B, S, _ = h.shape
+    n_pred = S - 1
+    logits = unembed(h[:, :n_pred], params["embed"])
+    tgt = batch["tokens"][:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(lse - picked) / (B * n_pred)
+    return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, s_max: int, src_len: int):
+    xshape = (batch, src_len, cfg.n_kv_heads, cfg.head_dim)
+    per_layer = [
+        {
+            "kv": init_kv_cache(cfg, batch, s_max),
+            # cross K/V filled at prefill from the encoder memory
+            "xk": jnp.zeros(xshape, cfg.kv_cache_dtype),
+            "xv": jnp.zeros(xshape, cfg.kv_cache_dtype),
+        }
+        for _ in range(cfg.n_dec_layers)
+    ]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch: dict, cache):
+    """Encode source, prefill decoder self-cache, compute cross K/V."""
+    cd = cfg.compute_dtype
+    memory = encode(params, cfg, batch["frontend"])
+    tokens = batch["tokens"]
+    x = embed_tokens(tokens, params["embed"], cd)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, layer):
+        p, c = layer
+        h = constrain_tokens_3d(h)
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        att, kv = prefill_attention(hn, p["attn"], cfg, positions, c["kv"])
+        h = h + att
+        hn = rms_norm(h, p["lnx"], cfg.norm_eps)
+        h = h + cross_attention(hn, memory, p["xattn"], cfg)
+        xk = jnp.einsum("bsd,dhk->bshk", memory, p["xattn"]["wk"].astype(cd))
+        xv = jnp.einsum("bsd,dhk->bshk", memory, p["xattn"]["wv"].astype(cd))
+        hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + mlp(hn, p["mlp"], cfg.act, cd)
+        return h, {"kv": kv, "xk": xk.astype(c["xk"].dtype),
+                   "xv": xv.astype(c["xk"].dtype)}
+
+    h, new_cache = _scan_or_unroll(body, x, (params["decoder"], cache),
+                                   cfg.n_dec_layers, cfg.scan_layers)
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = unembed(h[:, -1:, :], params["embed"])
+    return logits[:, 0, :], new_cache
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, cur_len, cache):
+    cd = cfg.compute_dtype
+    x = embed_tokens(token[:, None], params["embed"], cd)
+
+    def body(h, layer):
+        p, c = layer
+        h = constrain_tokens_3d(h)
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        att, kv = decode_attention(hn, p["attn"], cfg, c["kv"], cur_len)
+        h = h + att
+        hn = rms_norm(h, p["lnx"], cfg.norm_eps)
+        h = h + _cached_cross(hn, c["xk"], c["xv"], p["xattn"], cfg)
+        hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = h + mlp(hn, p["mlp"], cfg.act, cd)
+        c_new = dict(c)
+        c_new["kv"] = kv
+        return h, c_new
+
+    h, new_cache = _scan_or_unroll(body, x, (params["decoder"], cache),
+                                   cfg.n_dec_layers, cfg.scan_layers)
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = unembed(h[:, -1:, :], params["embed"])
+    return logits[:, 0, :], new_cache
+
+
+def _cached_cross(x, xk, xv, p, cfg: ModelConfig):
+    from .attention import _expand_kv, _sdpa
+
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    mask = jnp.ones((1, 1, x.shape[1], xk.shape[1]), dtype=bool)
+    out = _sdpa(q, _expand_kv(xk.astype(cd), cfg.n_heads),
+                _expand_kv(xv.astype(cd), cfg.n_heads), mask, cd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))

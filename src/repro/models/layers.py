@@ -1,0 +1,101 @@
+"""Elementary model layers: norms, embeddings, rotary, MLPs.
+
+All parameters are plain pytrees of jnp arrays.  Every ``init_*`` has a
+matching ``spec_*`` in :mod:`repro.distributed.sharding` describing its
+PartitionSpec; layer code only computes — sharding is annotated at the
+train/serve-step level via constraints on activations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype=dtype)
+
+
+def embed_tokens(tokens: jax.Array, table: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """Project to vocab logits; table is (V, D) (tied) — computed in fp32."""
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Interleaved-pair rotary embedding.  x: (B, S, H, hd).
+
+    The pair (2i, 2i+1) formulation keeps every rotation within a contiguous
+    2-element group, so a head_dim sharded over the 'model' axis never needs
+    cross-shard data movement (the half-split formulation does).
+    """
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                         # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr = x.astype(jnp.float32).reshape(*x.shape[:-1], hd // 2, 2)
+    x1, x2 = xr[..., 0], xr[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    return {
+        "wi": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "wg": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+def mlp(x: jax.Array, p: dict, act: str, compute_dtype) -> jax.Array:
+    wi = p["wi"].astype(compute_dtype)
+    wg = p["wg"].astype(compute_dtype)
+    wo = p["wo"].astype(compute_dtype)
+    h = jnp.einsum("bsd,df->bsf", x, wi)
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("bsf,fd->bsd", h * g, wo)
+
+
+def activation(x: jax.Array, act: str) -> jax.Array:
+    return jax.nn.silu(x) if act == "silu" else jax.nn.gelu(x)
+
+
+def init_dense(key, shape: tuple[int, ...], dtype, fan_in: int | None = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) * fan ** -0.5).astype(dtype)

@@ -1,0 +1,150 @@
+"""Model facade: one uniform API over all 10 assigned architectures.
+
+  init_params(cfg, key)                -> param pytree
+  loss_fn(params, cfg, batch)          -> (loss, metrics)
+  prefill_fn(params, cfg, batch, cache)-> (logits, cache)
+  decode_fn(params, cfg, token, cur_len, cache) -> (logits, cache)
+  init_cache(cfg, batch, s_max, src_len) -> cache pytree
+  input_specs(cfg, shape)              -> ShapeDtypeStructs (no allocation)
+  param_count / active_param_count     -> roofline's MODEL_FLOPS terms
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from . import encdec, transformer
+
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    if cfg.is_encdec:
+        return encdec.init_encdec_params(key, cfg)
+    return transformer.init_lm_params(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    if cfg.is_encdec:
+        return encdec.encdec_loss(params, cfg, batch)
+    return transformer.lm_loss(params, cfg, batch)
+
+
+def logits_fn(params, cfg: ModelConfig, batch: dict):
+    if cfg.is_encdec:
+        memory = encdec.encode(params, cfg, batch["frontend"])
+        h = encdec.decode_train(params, cfg, batch["tokens"], memory)
+        from .layers import unembed
+
+        return unembed(h, params["embed"])
+    return transformer.lm_logits(params, cfg, batch)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, src_len: int = 0):
+    if cfg.is_encdec:
+        return encdec.init_encdec_cache(cfg, batch, s_max, src_len or 4096)
+    return transformer.init_lm_cache(cfg, batch, s_max)
+
+
+def prefill_fn(params, cfg: ModelConfig, batch: dict, cache):
+    if cfg.is_encdec:
+        return encdec.encdec_prefill(params, cfg, batch, cache)
+    return transformer.lm_prefill(params, cfg, batch, cache)
+
+
+def decode_fn(params, cfg: ModelConfig, token, cur_len, cache):
+    if cfg.is_encdec:
+        return encdec.encdec_decode_step(params, cfg, token, cur_len, cache)
+    return transformer.lm_decode_step(params, cfg, token, cur_len, cache)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shardable, no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """Abstract inputs for one (arch x shape) cell.
+
+    train:   {"tokens": (B, S)} (+ frontend embeddings for vlm/audio)
+    prefill: same as train
+    decode:  {"token": (B,), "cur_len": scalar}; the cache comes separately.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        specs: dict = {}
+        if cfg.frontend == "vision_stub":
+            nf = cfg.n_frontend_tokens
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S - nf), i32)
+            specs["frontend"] = jax.ShapeDtypeStruct((B, nf, cfg.d_model), f32)
+        elif cfg.frontend == "audio_stub":
+            # enc-dec: source frames + target tokens, each of length S
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, encdec_src_len(cfg, shape), cfg.d_model), f32
+            )
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    # decode
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "cur_len": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def encdec_src_len(cfg: ModelConfig, shape: ShapeCell) -> int:
+    """Source frames for enc-dec cells: match S for train/prefill; decode
+    uses a fixed 4096-frame memory (the 32k/500k axis is the decoder cache)."""
+    if shape.kind in ("train", "prefill"):
+        return shape.seq_len
+    return 4096
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeCell) -> Any:
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: init_cache(cfg, B, S, src_len=encdec_src_len(cfg, shape))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def embedding_param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    n = math.prod(tree["embed"].shape)
+    if "unembed" in tree:
+        n += math.prod(tree["unembed"].shape)
+    return n
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: top_k of n_experts routed)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    tree = abstract_params(cfg)
+    moe_total = sum(
+        math.prod(x.shape)
+        for path, x in jax.tree_util.tree_leaves_with_path(tree)
+        if any(getattr(k, "key", None) == "moe" for k in path)
+    )
+    router = cfg.n_layers * cfg.d_model * cfg.n_experts
+    expert_params = moe_total - router
+    active = total - expert_params + expert_params * cfg.top_k / cfg.n_experts
+    return int(active)

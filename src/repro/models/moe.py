@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded scatter
+dispatch and expert-parallel (EP) sharding over the 'model' mesh axis.
+
+TPU adaptation: instead of a ragged CUDA grouped-GEMM, tokens are scattered
+into a static (E, C, D) buffer (capacity C per expert) and expert FFNs run as
+one batched einsum over stacked expert weights — the buffer's expert axis is
+sharded over 'model', so XLA inserts the dispatch all-to-all automatically.
+Overflowing tokens are dropped (standard capacity-factor routing); the
+residual path carries them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain
+from .layers import activation, init_dense
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init_dense(ks[0], (d, e), jnp.float32, fan_in=d),
+        "wi": init_dense(ks[1], (e, d, f), cfg.param_dtype, fan_in=d),
+        "wg": init_dense(ks[2], (e, d, f), cfg.param_dtype, fan_in=d),
+        "wo": init_dense(ks[3], (e, f, d), cfg.param_dtype, fan_in=f),
+    }
+
+
+def expert_capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    """Per-group (= per sequence) expert capacity."""
+    c = int(cfg.capacity_factor * group_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)  # pad to 8 for TPU-friendly layout
+
+
+def _position_in_expert(flat_e: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each (token, choice) among same-expert picks, O(N log N).
+
+    Sort-based: rank = index_in_sorted - first_index_of_expert, scattered back.
+    """
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e)                      # stable
+    sorted_e = flat_e[order]
+    first_of_expert = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    ranks_sorted = jnp.arange(n) - first_of_expert[sorted_e]
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted.astype(jnp.int32))
+    return ranks
+
+
+def moe_layer(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss). Router in fp32.
+
+    Dispatch is per-sequence (group = one batch row): the (B, E, C, D) buffer
+    keeps its leading dim sharded over the data axis, so routing/scatter is
+    DP-local and only the expert einsum crosses the mesh (all-to-all from the
+    E-axis sharding).  Capacity is per group (standard group_size routing).
+    """
+    cd = cfg.compute_dtype
+    B, S, D = x.shape
+    E, K, F = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)        # (B, S, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style), fp32
+    me = probs.mean(axis=(0, 1))                            # (E,)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)   # (B, S, K, E)
+    ce = onehot.mean(axis=(0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+
+    C = expert_capacity(cfg, S)
+
+    flat_e = expert_idx.reshape(B, S * K)                   # per-group pairs
+    pos = jax.vmap(lambda fe: _position_in_expert(fe, E))(flat_e)  # (B, S*K)
+    keep = pos < C
+    dest = jnp.where(keep, flat_e * C + pos, E * C)         # (B, S*K)
+
+    # scatter tokens into the per-group (E*C+1, D) buffer (last row = trash)
+    tok_rep = jnp.repeat(x.astype(cd), K, axis=1)           # (B, S*K, D)
+    buf = jnp.zeros((B, E * C + 1, D), cd)
+    buf = jax.vmap(lambda bb, dd, tt: bb.at[dd].set(tt, mode="drop"))(
+        buf, dest, tok_rep
+    )
+    buf = buf[:, : E * C].reshape(B, E, C, D)
+    buf = constrain(buf, "dp", "model", None, None)   # EP: experts over TP axis
+
+    # expert FFN (SwiGLU); E shards over 'model' (EP) -> all-to-all at entry
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(cd))
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(cd))
+    out = jnp.einsum("becf,efd->becd", h * activation(g, cfg.act),
+                     p["wo"].astype(cd))
+
+    # gather back and combine with gates
+    out_flat = out.reshape(B, E * C, D)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((B, 1, D), cd)], axis=1)
+    gathered = jax.vmap(lambda of, dd: of[dd])(out_flat, dest)   # (B, S*K, D)
+    gates = (gate_vals.reshape(B, S * K) * keep).astype(cd)
+    y = (gathered * gates[..., None]).reshape(B, S, K, D).sum(axis=2)
+    return y, aux

@@ -1,0 +1,245 @@
+"""Selective state-space (Mamba-2 / SSD style) blocks, chunk-parallel.
+
+TPU adaptation (DESIGN.md): the recurrence
+
+    H_t = a_t * H_{t-1} + k_t (x) v_t        y_t = q_t . H_t
+
+with a scalar per-head decay ``a_t`` is computed in *chunked* form: intra-chunk
+terms become (L x L) masked matmuls (MXU-friendly), inter-chunk terms a short
+``lax.scan`` over chunk summaries.  This is the standard SSD algorithm and is
+the TPU-native replacement for the CUDA selective-scan kernel.
+
+Decode is the O(1) recurrent step on the carried state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import init_dense
+
+
+class SSMState(NamedTuple):
+    h: jax.Array        # (B, nh, dk, dv) recurrent state
+    conv: jax.Array     # (B, w-1, di) rolling conv input window
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear recurrence (shared by SSM and mLSTM)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    q: jax.Array,       # (B, S, nh, dk)
+    k: jax.Array,       # (B, S, nh, dk)
+    v: jax.Array,       # (B, S, nh, dv)
+    log_a: jax.Array,   # (B, S, nh)  log decay in (-inf, 0]
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, nh, dk, dv)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y: (B, S, nh, dv), h_last: (B, nh, dk, dv)).  fp32 internally."""
+    B, S_in, nh, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S_in)
+    # pad to a chunk multiple: k=v=0 and log_a=0 contribute nothing to state
+    pad = (-S_in) % L
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, log_a = zpad(q), zpad(k), zpad(v), zpad(log_a)
+    S = S_in + pad
+    nc = S // L
+
+    f32 = jnp.float32
+    qc = q.reshape(B, nc, L, nh, dk).astype(f32)
+    kc = k.reshape(B, nc, L, nh, dk).astype(f32)
+    vc = v.reshape(B, nc, L, nh, dv).astype(f32)
+    lac = log_a.reshape(B, nc, L, nh).astype(f32)
+
+    A = jnp.cumsum(lac, axis=2)                      # (B, nc, L, nh) incl. own step
+    A_last = A[:, :, -1:, :]                          # (B, nc, 1, nh)
+
+    # --- intra-chunk: y_t += sum_{s<=t} exp(A_t - A_s) (q_t.k_s) v_s
+    qk = jnp.einsum("bclhd,bcmhd->bchlm", qc, kc)     # (B, nc, nh, L, L)
+    decay = A[:, :, :, None, :].transpose(0, 1, 4, 2, 3) - \
+        A[:, :, None, :, :].transpose(0, 1, 4, 2, 3)  # (B, nc, nh, L(t), L(s)) = A_t - A_s
+    causal = jnp.tril(jnp.ones((L, L), dtype=bool))
+    # mask the decay exponent BEFORE exp: above the diagonal A_t - A_s > 0
+    # and exp would overflow (it is discarded anyway).
+    decay = jnp.where(causal, decay, -jnp.inf)
+    scores = qk * jnp.exp(decay)
+    y_intra = jnp.einsum("bchlm,bcmhv->bclhv", scores, vc)
+
+    # --- chunk summaries: S_c = sum_s exp(A_last - A_s) k_s (x) v_s
+    w = jnp.exp(A_last - A)                           # (B, nc, L, nh)
+    S_c = jnp.einsum("bclh,bclhd,bclhv->bchdv", w, kc, vc)  # (B, nc, nh, dk, dv)
+    a_chunk = jnp.exp(A_last[:, :, 0, :])             # (B, nc, nh) total chunk decay
+
+    # --- inter-chunk scan
+    h_init = (
+        jnp.zeros((B, nh, dk, dv), f32) if h0 is None else h0.astype(f32)
+    )
+
+    def step(h, inputs):
+        s_c, a_c = inputs                              # (B,nh,dk,dv), (B,nh)
+        h_out = h * a_c[:, :, None, None] + s_c
+        return h_out, h                                # emit h_in for y_cross
+
+    S_cs = jnp.moveaxis(S_c, 1, 0)                     # (nc, B, nh, dk, dv)
+    a_cs = jnp.moveaxis(a_chunk, 1, 0)                 # (nc, B, nh)
+    h_last, h_ins = jax.lax.scan(step, h_init, (S_cs, a_cs))
+
+    # --- cross-chunk contribution: y_t += exp(A_t) q_t . H_in(chunk)
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                  # (B, nc, nh, dk, dv)
+    qw = qc * jnp.exp(A)[..., None]                    # (B, nc, L, nh, dk)
+    y_cross = jnp.einsum("bclhd,bchdv->bclhv", qw, h_ins)
+
+    y = (y_intra + y_cross).reshape(B, S, nh, dv)[:, :S_in]
+    return y, h_last
+
+
+def ssd_step(
+    q: jax.Array,       # (B, nh, dk)
+    k: jax.Array,
+    v: jax.Array,       # (B, nh, dv)
+    log_a: jax.Array,   # (B, nh)
+    h: jax.Array,       # (B, nh, dk, dv)
+) -> tuple[jax.Array, jax.Array]:
+    """O(1) decode step."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    h_new = h.astype(f32) * a + jnp.einsum(
+        "bhd,bhv->bhdv", k.astype(f32), v.astype(f32)
+    )
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), h_new)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style block (hymba's SSM half)
+# ---------------------------------------------------------------------------
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.head_dim
+    return di, nh
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh = ssm_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * di), cfg.param_dtype, fan_in=d),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv_width, di)) * 0.2).astype(
+            cfg.param_dtype
+        ),
+        "wbc": init_dense(ks[2], (di, 2 * n), cfg.param_dtype, fan_in=di),
+        "wdt": init_dense(ks[3], (di, nh), cfg.param_dtype, fan_in=di),
+        "a_log": jnp.zeros((nh,), cfg.param_dtype),          # A = exp(a_log) > 0
+        "d_skip": jnp.ones((nh,), cfg.param_dtype),
+        "out_proj": init_dense(ks[4], (di, d), cfg.param_dtype, fan_in=di),
+        "dt_bias": jnp.full((nh,), -1.0, cfg.param_dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
+    """Depthwise causal conv, width W.  x: (B, S, di), w: (W, di)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+W-1, di)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def _ssm_gates(xc, p, cfg, nh):
+    """Common q/k/log_a computation from conv output xc: (B, S, di)."""
+    n = cfg.ssm_state
+    bc = jnp.einsum("bsd,dn->bsn", xc, p["wbc"].astype(xc.dtype))
+    b_in, c_out = jnp.split(bc, 2, axis=-1)                 # (B, S, n) each
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xc, p["wdt"].astype(xc.dtype))
+        + p["dt_bias"].astype(xc.dtype)
+    )                                                       # (B, S, nh)
+    a_pos = jnp.exp(p["a_log"].astype(jnp.float32))         # (nh,)
+    log_a = -dt.astype(jnp.float32) * a_pos                 # (B, S, nh)
+    # dt also scales the input (Mamba discretization: B <- dt * B)
+    k = b_in[:, :, None, :] * dt[..., None]                 # (B, S, nh, n)
+    q = jnp.broadcast_to(c_out[:, :, None, :], k.shape)     # (B, S, nh, n)
+    return q, k, log_a
+
+
+def ssm_train(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  Full-sequence chunked SSM."""
+    cd = cfg.compute_dtype
+    di, nh = ssm_dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xi, p["conv"].astype(cd), None)
+    xc = jax.nn.silu(xc)
+    q, k, log_a = _ssm_gates(xc, p, cfg, nh)
+    v = xc.reshape(B, S, nh, cfg.head_dim)
+    chunk = cfg.attn_chunk or 256
+    y, _ = ssd_chunked(q, k, v, log_a, chunk)
+    y = y + v.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
+    di, nh = ssm_dims(cfg)
+    return SSMState(
+        h=jnp.zeros((batch, nh, cfg.ssm_state, cfg.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di), jnp.float32),
+    )
+
+
+def ssm_prefill(
+    x: jax.Array, p: dict, cfg: ModelConfig, state: SSMState
+) -> tuple[jax.Array, SSMState]:
+    """Like ssm_train but returns the final recurrent state (for decode)."""
+    cd = cfg.compute_dtype
+    di, nh = ssm_dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv"].astype(cd), None)
+    xc = jax.nn.silu(xc)
+    q, k, log_a = _ssm_gates(xc, p, cfg, nh)
+    v = xc.reshape(B, S, nh, cfg.head_dim)
+    chunk = cfg.attn_chunk or 256
+    y, h_last = ssd_chunked(q, k, v, log_a, chunk, h0=state.h)
+    y = y + v.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, SSMState(h=h_last, conv=conv_state.astype(jnp.float32))
+
+
+def ssm_decode(
+    x: jax.Array, p: dict, cfg: ModelConfig, state: SSMState
+) -> tuple[jax.Array, SSMState]:
+    """One-token step.  x: (B, 1, D)."""
+    cd = cfg.compute_dtype
+    di, nh = ssm_dims(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv"].astype(cd), state.conv)
+    xc = jax.nn.silu(xc)
+    q, k, log_a = _ssm_gates(xc, p, cfg, nh)
+    v = xc.reshape(B, 1, nh, cfg.head_dim)
+    y, h_new = ssd_step(q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], state.h)
+    y = y + v[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, SSMState(h=h_new, conv=conv_state.astype(jnp.float32))

@@ -1,0 +1,208 @@
+"""Decoder-only LM (all families except enc-dec): init / train / serve.
+
+The layer stack is a single ``lax.scan`` over stacked parameters, with
+configurable rematerialization.  The LM loss streams over sequence chunks so
+full (B, S, V) logits are never materialized (vocabularies here reach 257k).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .blocks import (
+    init_layer_cache,
+    init_stacked_layers,
+    layer_decode,
+    layer_flags,
+    layer_prefill,
+    layer_train,
+)
+from .layers import embed_tokens, init_dense, init_embedding, init_rms_norm, rms_norm, unembed
+from repro.distributed.ctx import constrain_tokens_3d
+
+LOSS_CHUNK = 512
+
+
+def init_lm_params(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "blocks": init_stacked_layers(ks[1], cfg, cfg.n_layers),
+        "final_ln": init_rms_norm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_embedding(ks[2], cfg.vocab_size, cfg.d_model,
+                                      cfg.param_dtype)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = init_dense(ks[3], (cfg.d_model, cfg.d_model),
+                                        cfg.param_dtype)
+    return p
+
+
+def _unembed_table(params: dict, cfg: ModelConfig) -> jax.Array:
+    return params["embed"] if cfg.tie_embeddings else params["unembed"]
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "full"
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Token embeddings, with modality-stub tokens fused at the front."""
+    x = embed_tokens(batch["tokens"], params["embed"], cfg.compute_dtype)
+    if cfg.frontend != "none":
+        fe = batch["frontend"].astype(cfg.compute_dtype)
+        fe = jnp.einsum("bfd,de->bfe", fe, params["frontend_proj"].astype(cfg.compute_dtype))
+        x = jnp.concatenate([fe, x], axis=1)     # early fusion
+    return constrain_tokens_3d(x)
+
+
+def lm_backbone(params, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """Scan the layer stack; returns (hidden states, total aux loss)."""
+    flags = layer_flags(cfg)
+
+    def body(carry, layer):
+        h, aux = carry
+        p, flag = layer
+        h, a = layer_train(p, cfg, h, positions, flag)
+        return (h, aux + a), None
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["blocks"], flags))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["blocks"])
+            (x, aux), _ = body((x, aux), (p_i, flags[i]))
+    return rms_norm(x, params["final_ln"], cfg.norm_eps), aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """Next-token CE over text positions, streamed in sequence chunks."""
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = _embed_inputs(params, cfg, batch)
+    S_total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_total, dtype=jnp.int32), (B, S_total))
+    h, aux = lm_backbone(params, cfg, x, positions)
+
+    # predictions for text tokens only: positions offset..offset+S_text-1
+    offset = S_total - S_text
+    h_text = h[:, offset:, :]
+    table = _unembed_table(params, cfg)
+
+    # stream the CE over chunks so (B, S, V) never materializes
+    n_pred = S_text - 1
+    chunk = min(LOSS_CHUNK, max(n_pred, 1))
+    n_chunks = -(-n_pred // chunk)                          # ceil
+    padded = n_chunks * chunk
+    h_pad = jnp.pad(h_text[:, :n_pred], ((0, 0), (0, padded - n_pred), (0, 0)))
+    tgt_pad = jnp.pad(tokens[:, 1 : 1 + n_pred], ((0, 0), (0, padded - n_pred)))
+    w_pad = (jnp.arange(padded) < n_pred).astype(jnp.float32)
+
+    def ce_chunk(carry, idx):
+        start = idx * chunk
+        hs = jax.lax.dynamic_slice_in_dim(h_pad, start, chunk, axis=1)
+        tgt = jax.lax.dynamic_slice_in_dim(tgt_pad, start, chunk, axis=1)
+        w = jax.lax.dynamic_slice_in_dim(w_pad, start, chunk, axis=0)
+        logits = unembed(hs, table, cfg.logit_softcap)       # (B, chunk, V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum((lse - picked) * w[None, :]), None
+
+    if cfg.scan_layers:
+        total, _ = jax.lax.scan(ce_chunk, jnp.zeros((), jnp.float32),
+                                jnp.arange(n_chunks))
+    else:  # unrolled (dry-run accounting: while bodies are cost-counted once)
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n_chunks):
+            total, _ = ce_chunk(total, jnp.int32(i))
+    loss = total / (B * n_pred)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux
+    return loss, metrics
+
+
+def lm_logits(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Full logits (small configs / tests only)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = _embed_inputs(params, cfg, batch)
+    S_total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_total, dtype=jnp.int32), (B, S_total))
+    h, _ = lm_backbone(params, cfg, x, positions)
+    return unembed(h, _unembed_table(params, cfg), cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, s_max: int):
+    caches = [init_layer_cache(cfg, batch, s_max) for _ in range(cfg.n_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def lm_prefill(params, cfg: ModelConfig, batch: dict, cache):
+    """Returns (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = _embed_inputs(params, cfg, batch)
+    S_total = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S_total, dtype=jnp.int32), (B, S_total))
+    flags = layer_flags(cfg)
+
+    def body(h, layer):
+        p, flag, c = layer
+        h, c_new = layer_prefill(p, cfg, h, positions, c, flag)
+        return h, c_new
+
+    body = _remat(body, cfg)
+    h, new_cache = _scan_or_unroll(body, x, (params["blocks"], flags, cache),
+                                   cfg.n_layers, cfg.scan_layers)
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = unembed(h[:, -1:, :], _unembed_table(params, cfg), cfg.logit_softcap)
+    return logits[:, 0, :], new_cache
+
+
+def lm_decode_step(params, cfg: ModelConfig, token: jax.Array, cur_len, cache):
+    """token: (B,) int32; cur_len: scalar int32 (tokens already cached)."""
+    B = token.shape[0]
+    x = embed_tokens(token[:, None], params["embed"], cfg.compute_dtype)
+    flags = layer_flags(cfg)
+
+    def body(h, layer):
+        p, flag, c = layer
+        h, c_new = layer_decode(p, cfg, h, cur_len, c, flag)
+        return h, c_new
+
+    h, new_cache = _scan_or_unroll(body, x, (params["blocks"], flags, cache),
+                                   cfg.n_layers, cfg.scan_layers)
+    h = rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = unembed(h[:, -1:, :], _unembed_table(params, cfg), cfg.logit_softcap)
+    return logits[:, 0, :], new_cache
+
+
+def _scan_or_unroll(body, carry, xs, n: int, use_scan: bool):
+    """lax.scan, or an unrolled loop that restacks the per-layer outputs."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, stacked

@@ -1,0 +1,205 @@
+"""xLSTM blocks: chunk-parallel mLSTM (matrix memory) + sequential sLSTM.
+
+mLSTM is a gated linear recurrence and reuses the SSD machinery from
+:mod:`repro.models.ssm`; its normalizer state is carried as an extra value
+column (v' = [v, 1]) so a single matrix state covers both C and n:
+
+    C_t = f_t C_{t-1} + i_t k_t (x) v_t        n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (q_t C_t) / max(|q_t n_t|, 1)
+
+sLSTM keeps per-head scalar memory with exponential gating and a stabilizer
+state; it is inherently sequential (recurrent gate inputs) and runs as a
+``lax.scan`` over time — the published xLSTM accepts this cost and so do we
+(one sLSTM block every ``slstm_every`` layers).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import init_dense
+from .ssm import ssd_chunked, ssd_step
+
+
+class MLSTMState(NamedTuple):
+    h: jax.Array          # (B, nh, dk, dv+1) matrix memory incl. normalizer
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array          # (B, nh, hd)
+    n: jax.Array          # (B, nh, hd)
+    m: jax.Array          # (B, nh, hd) stabilizer
+    y: jax.Array          # (B, nh, hd) previous output (recurrent input)
+
+
+def xlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.n_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, hd = xlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * di), cfg.param_dtype, fan_in=d),
+        "wq": init_dense(ks[1], (di, nh, hd), cfg.param_dtype, fan_in=di),
+        "wk": init_dense(ks[2], (di, nh, hd), cfg.param_dtype, fan_in=di),
+        "wif": init_dense(ks[3], (di, 2 * nh), cfg.param_dtype, fan_in=di),
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((nh,)), jnp.full((nh,), 3.0)]
+        ).astype(cfg.param_dtype),                       # forget bias ~ +3
+        "out_proj": init_dense(ks[4], (di, d), cfg.param_dtype, fan_in=di),
+    }
+
+
+def _mlstm_qkvg(xi, p, cfg, nh, hd):
+    cd = xi.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xi, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xi, p["wk"].astype(cd)) * (hd ** -0.5)
+    v = xi.reshape(*xi.shape[:2], nh, hd)
+    gates = jnp.einsum("bsd,dh->bsh", xi, p["wif"].astype(cd)) + p["if_bias"].astype(cd)
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)        # (B, S, nh)
+    log_f = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    i_sig = jax.nn.sigmoid(i_gate.astype(jnp.float32))   # stabilized input gate
+    return q, k, v, i_sig, log_f
+
+
+def _mlstm_read(y_aug):
+    """Split [C-readout | normalizer] and normalize."""
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    return y / jnp.maximum(jnp.abs(norm), 1.0)
+
+
+def mlstm_train(x: jax.Array, p: dict, cfg: ModelConfig,
+                state: MLSTMState | None = None,
+                return_state: bool = False):
+    cd = cfg.compute_dtype
+    di, nh, hd = xlstm_dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_sig, log_f = _mlstm_qkvg(xi, p, cfg, nh, hd)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1) * i_sig[..., None]
+    chunk = cfg.attn_chunk or 256
+    h0 = state.h if state is not None else None
+    y_aug, h_last = ssd_chunked(q, k, v_aug, log_f, chunk, h0=h0)
+    y = _mlstm_read(y_aug).reshape(B, S, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    if return_state:
+        return out, MLSTMState(h=h_last)
+    return out
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    di, nh, hd = xlstm_dims(cfg)
+    return MLSTMState(h=jnp.zeros((batch, nh, hd, hd + 1), jnp.float32))
+
+
+def mlstm_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: MLSTMState):
+    cd = cfg.compute_dtype
+    di, nh, hd = xlstm_dims(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, i_sig, log_f = _mlstm_qkvg(xi, p, cfg, nh, hd)
+    ones = jnp.ones((*v.shape[:-1], 1), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1) * i_sig[..., None]
+    y_aug, h_new = ssd_step(q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0], state.h)
+    y = _mlstm_read(y_aug).reshape(B, 1, di).astype(cd)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    return out, MLSTMState(h=h_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential, exponential gating with stabilizer)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, hd = xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": init_dense(ks[0], (d, nh, 4 * hd), cfg.param_dtype, fan_in=d),
+        "r_in": init_dense(ks[1], (nh, hd, 4 * hd), cfg.param_dtype, fan_in=hd),
+        "bias": jnp.zeros((nh, 4 * hd), cfg.param_dtype),
+        "out_proj": init_dense(ks[2], (di, d), cfg.param_dtype, fan_in=di),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    di, nh, hd = xlstm_dims(cfg)
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, m=z - 1e9, y=z)
+
+
+def _slstm_cell(p, cfg, x_proj_t, st: SLSTMState) -> tuple[jax.Array, SLSTMState]:
+    """One sLSTM step.  x_proj_t: (B, nh, 4*hd) — input part precomputed
+    outside the scan (hoisting the big matmul keeps the sequential body to
+    the recurrent R term only)."""
+    di, nh, hd = xlstm_dims(cfg)
+    f32 = jnp.float32
+    pre = (
+        x_proj_t
+        + jnp.einsum("bhj,hjk->bhk", st.y, p["r_in"].astype(f32))
+        + p["bias"].astype(f32)
+    )                                                     # (B, nh, 4*hd)
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    z_t = jnp.tanh(zi)
+    o_t = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + st.m, ii)
+    i_p = jnp.exp(ii - m_new)
+    f_p = jnp.exp(log_f + st.m - m_new)
+    c_new = f_p * st.c + i_p * z_t
+    n_new = f_p * st.n + i_p
+    y_new = o_t * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return y_new, SLSTMState(c=c_new, n=n_new, m=m_new, y=y_new)
+
+
+def slstm_train(x: jax.Array, p: dict, cfg: ModelConfig,
+                state: SLSTMState | None = None,
+                return_state: bool = False):
+    """Sequential scan over time.  x: (B, S, D)."""
+    cd = cfg.compute_dtype
+    di, nh, hd = xlstm_dims(cfg)
+    B, S, _ = x.shape
+    st0 = state if state is not None else init_slstm_state(cfg, B)
+    x_proj = jnp.einsum("bsd,dhk->bshk", x.astype(jnp.float32),
+                        p["w_in"].astype(jnp.float32))     # hoisted from scan
+
+    def step(st, xp_t):
+        y, st_new = _slstm_cell(p, cfg, xp_t, st)
+        return st_new, y
+
+    st_last, ys = jax.lax.scan(step, st0, jnp.moveaxis(x_proj, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+    if return_state:
+        return out, st_last
+    return out
+
+
+def slstm_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: SLSTMState):
+    cd = cfg.compute_dtype
+    di, nh, hd = xlstm_dims(cfg)
+    B = x.shape[0]
+    xp = jnp.einsum("bd,dhk->bhk", x[:, 0].astype(jnp.float32),
+                    p["w_in"].astype(jnp.float32))
+    y, st = _slstm_cell(p, cfg, xp, state)
+    out = jnp.einsum(
+        "bse,ed->bsd", y.reshape(B, 1, di).astype(cd), p["out_proj"].astype(cd)
+    )
+    return out, st

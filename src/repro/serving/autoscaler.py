@@ -1,0 +1,208 @@
+"""Replica autoscaler — the paper's technique as a first-class serving feature.
+
+Maps the paper's algorithms onto model-serving replicas:
+
+  * last-empty-server-first  ->  last-empty-REPLICA-first (LIFO stack);
+    a session is pinned to its replica for its whole lifetime, so the
+    no-job-migration property becomes a no-KV-cache-migration property.
+  * per-server ski-rental    ->  each idle replica independently decides
+    off-vs-idle after (1-alpha)*Delta (A1) or a randomized wait (A2/A3),
+    peeking an alpha*Delta prediction window.
+  * the peek uses only the LIFO structure: a replica at stack depth p is
+    popped iff predicted concurrency exceeds busy_now + p (paper Sec. IV-B).
+
+Delta = (beta_on + beta_off)/P with beta_on the replica spin-up cost
+(weight load + compile, amortized) — see ``replica_cost_model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core.costs import CostModel
+from repro.core.ski_rental import (
+    A1Deterministic,
+    A2Randomized,
+    A3Randomized,
+    OfflinePolicy,
+)
+
+POLICIES = {
+    "A1": A1Deterministic,
+    "A2": A2Randomized,
+    "A3": A3Randomized,
+    "offline": OfflinePolicy,
+}
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    replica_id: int
+    state: str = "off"            # off | idle | busy
+    since: float = 0.0            # time of last state change
+    session: int | None = None
+
+
+@dataclasses.dataclass
+class ScalerReport:
+    energy: float = 0.0
+    n_turn_on: int = 0
+    n_turn_off: int = 0
+    busy_time: float = 0.0
+    idle_time: float = 0.0
+
+    def total_cost(self, costs: CostModel) -> float:
+        return (
+            self.energy
+            + costs.beta_on * self.n_turn_on
+            + costs.beta_off * self.n_turn_off
+        )
+
+
+class ReplicaAutoscaler:
+    """Event-driven live autoscaler (no future knowledge beyond the window)."""
+
+    def __init__(
+        self,
+        n_replicas: int,
+        costs: CostModel,
+        policy: str = "A1",
+        alpha: float = 0.0,
+        predictor: Callable[[float, float], float] | None = None,
+        rng: np.random.Generator | None = None,
+        initial_busy: int = 0,
+    ):
+        self.costs = costs
+        self.policy = POLICIES[policy](alpha=alpha)
+        self.alpha = alpha
+        self.predictor = predictor            # (t0, t1) -> max predicted load
+        self.rng = rng or np.random.default_rng(0)
+        self.replicas = [ReplicaState(i) for i in range(n_replicas)]
+        # stack of replica ids (idle or off); bottom..top
+        self.stack: list[int] = list(range(n_replicas - 1, initial_busy - 1, -1))
+        for i in range(initial_busy):
+            self.replicas[i].state = "busy"
+        self.busy: set[int] = set(range(initial_busy))
+        self.report = ScalerReport()
+        self._timers: list[tuple[float, int, int]] = []   # (deadline, seq, rid)
+        self._seq = 0
+        self._timer_valid: dict[int, float] = {}
+
+    # ------------------------------------------------------------------ events
+    def acquire(self, t: float) -> int:
+        """Session start: pop the last-empty replica (LIFO)."""
+        self.advance(t)
+        rid = self.stack.pop()
+        r = self.replicas[rid]
+        if r.state == "idle":
+            self.report.energy += self.costs.P * (t - r.since)
+            self.report.idle_time += t - r.since
+        else:  # off -> on
+            self.report.n_turn_on += 1
+        r.state = "busy"
+        r.since = t
+        self.busy.add(rid)
+        self._timer_valid.pop(rid, None)
+        return rid
+
+    def release(self, t: float, rid: int) -> None:
+        """Session end: push the replica; start its ski-rental clock."""
+        self.advance(t)
+        r = self.replicas[rid]
+        self.report.energy += self.costs.P * (t - r.since)
+        self.report.busy_time += t - r.since
+        self.busy.discard(rid)
+        r.state = "idle"
+        r.since = t
+        self.stack.append(rid)
+        wait = self.policy.wait_time(self.costs.delta, self.rng)
+        if isinstance(self.policy, OfflinePolicy):
+            wait = 0.0
+        deadline = t + wait
+        self._seq += 1
+        self._timer_valid[rid] = deadline
+        heapq.heappush(self._timers, (deadline, self._seq, rid))
+
+    def advance(self, t: float) -> None:
+        """Fire all ski-rental decisions due at or before time t."""
+        while self._timers and self._timers[0][0] <= t:
+            deadline, _, rid = heapq.heappop(self._timers)
+            if self._timer_valid.get(rid) != deadline:
+                continue
+            del self._timer_valid[rid]
+            r = self.replicas[rid]
+            if r.state != "idle":
+                continue
+            if not self._predicted_pop(rid, deadline):
+                # turn off
+                self.report.energy += self.costs.P * (deadline - r.since)
+                self.report.idle_time += deadline - r.since
+                r.state = "off"
+                r.since = deadline
+                self.report.n_turn_off += 1
+            # else: stay idle until popped
+
+    def finalize(self, t_end: float) -> ScalerReport:
+        """Horizon end: x(T) = a(T) — force idle replicas off."""
+        self.advance(t_end)
+        for r in self.replicas:
+            if r.state == "idle":
+                self.report.energy += self.costs.P * (t_end - r.since)
+                self.report.idle_time += t_end - r.since
+                r.state = "off"
+                self.report.n_turn_off += 1
+            elif r.state == "busy":
+                self.report.energy += self.costs.P * (t_end - r.since)
+                self.report.busy_time += t_end - r.since
+                r.since = t_end
+        return self.report
+
+    # ------------------------------------------------------------------ peek
+    def _stack_depth(self, rid: int) -> int:
+        """0 = top of stack."""
+        return len(self.stack) - 1 - self.stack.index(rid)
+
+    def _predicted_pop(self, rid: int, t: float) -> bool:
+        """Will this replica be popped within (t, t + alpha*Delta]?
+
+        Under LIFO the replica at depth p is popped iff concurrency exceeds
+        busy_now + p within the window.
+        """
+        if self.predictor is None or self.alpha <= 0.0:
+            return False
+        if rid not in self.stack:
+            return False
+        window_end = t + self.alpha * self.costs.delta
+        predicted_max = self.predictor(t, window_end)
+        threshold = len(self.busy) + self._stack_depth(rid) + 1
+        return predicted_max >= threshold
+
+    def n_on(self) -> int:
+        return sum(1 for r in self.replicas if r.state != "off")
+
+
+def replica_cost_model(
+    weights_bytes_per_device: float,
+    n_chips: int,
+    idle_power_w: float = 120.0,
+    peak_power_w: float = 250.0,
+    hbm_bw: float = 819e9,
+    compile_s: float = 30.0,
+    slot_s: float = 600.0,
+) -> CostModel:
+    """Derive the paper's (P, beta) constants for one model replica.
+
+    beta_on ~ energy of the spin-up: weight load (HBM-bandwidth bound) +
+    compile/warmup at peak power; beta_off ~ drain at idle power.  P = idle
+    power per slot (serving energy is charged to sessions either way).
+    Units: energy per slot (slot_s seconds).
+    """
+    load_s = weights_bytes_per_device / hbm_bw + compile_s
+    beta_on = n_chips * peak_power_w * load_s / (idle_power_w * slot_s)
+    beta_off = n_chips * idle_power_w * 0.25 * compile_s / (idle_power_w * slot_s)
+    # normalize so P = 1 per slot per replica
+    return CostModel(P=1.0, beta_on=beta_on / n_chips, beta_off=max(beta_off / n_chips, 0.1))

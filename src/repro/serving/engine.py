@@ -1,0 +1,67 @@
+"""Per-replica inference engine: prefill + decode with a slot-based cache.
+
+One engine == one replica (a mesh slice in production; the whole host mesh in
+local runs).  Sessions are admitted in rolling batches and decoded in
+lockstep; the cluster layer (and the paper's autoscaler) handles everything
+across replicas.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_fn, init_cache, prefill_fn
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, n_new)
+    prefill_len: int
+
+
+class InferenceEngine:
+    """Greedy-decoding engine for a (reduced) model on the local backend."""
+
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill_fn(p, cfg, b, c)
+        )
+        self._decode = jax.jit(
+            lambda p, t, l, c: decode_fn(p, cfg, t, l, c)
+        )
+
+    def generate(self, tokens: np.ndarray, n_new: int) -> GenerationResult:
+        """tokens: (B, S_prompt) int32. Greedy-decodes n_new tokens."""
+        B, S = tokens.shape
+        assert B <= self.max_batch and S + n_new <= self.max_seq
+        cache = init_cache(self.cfg, B, self.max_seq, src_len=S)
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if self.cfg.frontend == "vision_stub":
+            nf = self.cfg.n_frontend_tokens
+            batch["frontend"] = jnp.zeros((B, nf, self.cfg.d_model), jnp.bfloat16)
+        elif self.cfg.frontend == "audio_stub":
+            batch["frontend"] = jnp.zeros((B, S, self.cfg.d_model), jnp.bfloat16)
+        logits, cache = self._prefill(self.params, batch, cache)
+        prefix = S + (
+            self.cfg.n_frontend_tokens if self.cfg.frontend == "vision_stub" else 0
+        )
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        for i in range(n_new - 1):
+            logits, cache = self._decode(
+                self.params, tok, jnp.int32(prefix + i), cache
+            )
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        return GenerationResult(tokens=np.stack(out, axis=1), prefill_len=S)

@@ -1,0 +1,134 @@
+"""Fault-tolerant training loop.
+
+Wires together: step builders (pjit train step with FSDP x TP shardings),
+deterministic step-indexed data, async atomic checkpoints with auto-resume,
+preemption handling, straggler detection, and optional int8 gradient
+compression with error feedback.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer, latest_step, restore
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.data.tokens import TokenPipeline
+from repro.distributed.compression import (
+    compress_grads,
+    init_error_feedback,
+)
+from repro.distributed.fault_tolerance import PreemptionGuard, StragglerDetector
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_zoo as zoo
+from repro.optim import AdamWConfig, adamw_update, init_adamw
+from repro.utils import get_logger
+
+log = get_logger("trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    batch: int = 8
+    seq: int = 128
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    grad_compression: bool = False
+    model_parallel: int = 1
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, tcfg: TrainerConfig,
+                 hooks: dict[str, Callable] | None = None):
+        self.model_cfg = model_cfg
+        self.tcfg = tcfg
+        self.hooks = hooks or {}
+        self.mesh = make_host_mesh(tcfg.model_parallel)
+        self.pipeline = TokenPipeline(model_cfg, tcfg.batch, tcfg.seq, tcfg.seed)
+        self.ckpt = Checkpointer(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.guard = PreemptionGuard()
+        self.straggler = StragglerDetector()
+        self._build()
+
+    def _build(self) -> None:
+        cfg, tcfg = self.model_cfg, self.tcfg
+
+        def train_step(params, opt_state, ef_state, batch):
+            def lf(p):
+                return zoo.loss_fn(p, cfg, batch)
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            cmetrics = {}
+            if tcfg.grad_compression:
+                grads, ef_state, cmetrics = compress_grads(grads, ef_state)
+            params, opt_state, omet = adamw_update(grads, opt_state, params, tcfg.opt)
+            return params, opt_state, ef_state, dict(
+                metrics, loss=loss, **omet, **cmetrics
+            )
+
+        self._step = jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    def init_state(self):
+        params = zoo.init_params(self.model_cfg, jax.random.key(self.tcfg.seed))
+        return params, init_adamw(params), init_error_feedback(params)
+
+    def run(self, fail_at_step: int | None = None) -> dict:
+        """Train; auto-resumes from the newest checkpoint in ckpt_dir.
+
+        ``fail_at_step`` injects a crash (tests the restart path).
+        """
+        tcfg = self.tcfg
+        self.guard.install()
+        params, opt_state, ef_state = self.init_state()
+        start = 0
+        last = latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            log.info("resuming from checkpoint step %d", last)
+            params, opt_state, ef_state = restore(
+                tcfg.ckpt_dir, last, (params, opt_state, ef_state)
+            )
+            start = last
+
+        history = []
+        for step in range(start, tcfg.total_steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.monotonic()
+            batch = self.pipeline.batch_at(step)
+            params, opt_state, ef_state, metrics = self._step(
+                params, opt_state, ef_state, batch
+            )
+            dt = time.monotonic() - t0
+            self.straggler.observe(0, dt)
+            if (step + 1) % tcfg.log_every == 0 or step == start:
+                loss = float(metrics["loss"])
+                history.append((step + 1, loss))
+                log.info("step %d loss %.4f (%.2fs)", step + 1, loss, dt)
+                if "on_log" in self.hooks:
+                    self.hooks["on_log"](step + 1, metrics)
+            if (step + 1) % tcfg.ckpt_every == 0:
+                self.ckpt.save_async(step + 1, (params, opt_state, ef_state),
+                                     extra={"loss": float(metrics["loss"])})
+            if self.guard.should_stop():
+                log.info("preemption requested: checkpointing at step %d", step + 1)
+                self.ckpt.wait()
+                self.ckpt.save_async(step + 1, (params, opt_state, ef_state))
+                break
+        self.ckpt.wait()
+        final = {
+            "params": params,
+            "opt_state": opt_state,
+            "history": history,
+            "final_step": step + 1 if tcfg.total_steps > start else start,
+        }
+        return final

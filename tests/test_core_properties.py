@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for the provisioning core invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    A1Deterministic,
+    CostModel,
+    a0_cost,
+    a0_schedule,
+    critical_times,
+    dp_optimal_cost,
+    fluid_cost,
+    fluid_scan,
+    optimal_schedule_constructed,
+    schedule_cost,
+    simulate,
+    trace_from_intervals,
+)
+
+COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+
+
+@st.composite
+def brick_traces(draw):
+    n = draw(st.integers(min_value=1, max_value=14))
+    horizon = 60.0
+    jobs = []
+    used: set[float] = set()
+
+    def fresh(lo, hi):
+        t = draw(st.floats(min_value=lo, max_value=hi, allow_nan=False))
+        while round(t, 6) in used:
+            t += 0.000013
+        used.add(round(t, 6))
+        return t
+
+    for _ in range(n):
+        a = fresh(0.01, horizon - 1.0)
+        d = fresh(a + 0.001, min(a + 25.0, horizon - 0.001))
+        jobs.append((a, d))
+    return trace_from_intervals(jobs, horizon)
+
+
+@st.composite
+def fluid_traces(draw):
+    n = draw(st.integers(min_value=3, max_value=60))
+    return np.array(draw(st.lists(st.integers(0, 7), min_size=n, max_size=n)))
+
+
+@given(brick_traces())
+@settings(max_examples=60, deadline=None)
+def test_prop_a0_matches_construction(tr):
+    """Theorem 5 as a property: A0 cost == constructed optimum cost."""
+    xa = a0_schedule(tr, COSTS)
+    xc = optimal_schedule_constructed(tr, COSTS)
+    fl = float(tr.final_count())
+    assert schedule_cost(xa, COSTS, final_level=fl) == pytest.approx(
+        schedule_cost(xc, COSTS, final_level=fl), rel=1e-9
+    )
+
+
+@given(brick_traces())
+@settings(max_examples=60, deadline=None)
+def test_prop_lemma2_construction_meets_a_at_critical_times(tr):
+    """Lemma 2: x*(t) meets a(t) at every critical time."""
+    x = optimal_schedule_constructed(tr, COSTS)
+    for tc in critical_times(tr):
+        if tc >= tr.horizon:
+            continue
+        assert x.at(tc) == tr.a_at(tc) or x.before(tc) == tr.a_before(tc)
+
+
+@given(brick_traces())
+@settings(max_examples=40, deadline=None)
+def test_prop_feasibility_and_online_upper_bound(tr):
+    """x(t) >= a(t) always; A1 never beats the offline optimum."""
+    x = a0_schedule(tr, COSTS)
+    times, vals = tr.a_breakpoints()
+    for t, v in zip(times, vals):
+        assert x.at(t) >= v
+    opt = a0_cost(tr, COSTS)
+    for alpha in (0.0, 0.5, 1.0):
+        on = simulate(tr, A1Deterministic(alpha=alpha), COSTS).cost
+        assert on >= opt - 1e-9
+        assert on <= (2 - alpha) * opt + COSTS.delta * 3  # + boundary slack
+
+
+@given(fluid_traces(), st.integers(0, 8))
+@settings(max_examples=60, deadline=None)
+def test_prop_fluid_dp_and_engines_agree(a, window):
+    """Level decomposition == DP oracle; scan engine == closed form (det.)."""
+    opt_closed = fluid_cost(a, "offline", COSTS).cost
+    assert opt_closed == pytest.approx(dp_optimal_cost(a, COSTS), rel=1e-9)
+    scan = fluid_scan(a, "offline", COSTS).cost
+    assert scan == pytest.approx(opt_closed, rel=1e-9)
+    a1_closed = fluid_cost(a, "A1", COSTS, window=window).cost
+    a1_scan = fluid_scan(a, "A1", COSTS, window=window).cost
+    assert a1_scan == pytest.approx(a1_closed, rel=1e-9)
+
+
+@given(fluid_traces())
+@settings(max_examples=40, deadline=None)
+def test_prop_fluid_monotone_in_window(a):
+    """More future info never hurts A1 (deterministic)."""
+    prev = None
+    for w in range(0, 9):
+        c = fluid_cost(a, "A1", COSTS, window=w).cost
+        if prev is not None:
+            assert c <= prev + 1e-9
+        prev = c
+
+
+@given(fluid_traces(), st.floats(0.1, 8.0), st.floats(0.1, 8.0))
+@settings(max_examples=40, deadline=None)
+def test_prop_fluid_dp_cost_model_sweep(a, bon, boff):
+    costs = CostModel(P=1.0, beta_on=bon, beta_off=boff)
+    assert fluid_cost(a, "offline", costs).cost == pytest.approx(
+        dp_optimal_cost(a, costs), rel=1e-9
+    )

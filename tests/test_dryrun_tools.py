@@ -1,0 +1,63 @@
+"""Unit tests for dry-run accounting tools (parser, extrapolation, mesh)."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import collective_bytes
+
+
+def test_collective_parser_sync_ops():
+    hlo = """
+  %all-reduce = f32[256,1024]{1,0} all-reduce(%dot), channel_id=2, replica_groups={{0,1}}, to_apply=%add
+  %ag = bf16[64,512]{1,0} all-gather(%p0), channel_id=3, dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%x), channel_id=4, to_apply=%add
+  %unrelated = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 256 * 1024 * 4
+    assert got["all-gather"] == 64 * 512 * 2
+    assert got["reduce-scatter"] == 32 * 4
+    assert "dot" not in got
+
+
+def test_collective_parser_async_pairs_not_double_counted():
+    hlo = """
+  %ars = (f32[128]{0}, f32[128]{0}) all-reduce-start(%x), channel_id=5, to_apply=%add
+  %ard = f32[128]{0} all-reduce-done(%ars)
+"""
+    got = collective_bytes(hlo)
+    # only the -start line counts (both tuple shapes belong to it)
+    assert got["all-reduce"] == 2 * 128 * 4
+
+
+def test_collective_parser_tuple_shapes():
+    hlo = "  %a2a = (bf16[16,64]{1,0}, bf16[16,64]{1,0}) all-to-all(%x, %y), channel_id=7\n"
+    got = collective_bytes(hlo)
+    assert got["all-to-all"] == 2 * 16 * 64 * 2
+
+
+def test_depth_extrapolation_linear():
+    """total(L) = f(p) + (L/p - 1) * (f(2p) - f(p)) is exact for linear f."""
+    base, per_layer = 7.0, 3.0
+    f = lambda k: base + per_layer * k
+    p, L = 1, 95
+    got = f(p) + (L // p - 1) * (f(2 * p) - f(p))
+    assert got == pytest.approx(base + per_layer * L)
+
+
+def test_production_mesh_shapes():
+    import subprocess, sys, os
+
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys; sys.path.insert(0, "src")
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert m1.devices.size == 256 and m1.axis_names == ("data", "model")
+m2 = make_production_mesh(multi_pod=True)
+assert m2.devices.size == 512 and m2.axis_names == ("pod", "data", "model")
+print("MESH_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, cwd=os.getcwd(), timeout=120)
+    assert "MESH_OK" in r.stdout, r.stdout + r.stderr

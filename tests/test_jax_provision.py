@@ -1,0 +1,65 @@
+"""Jitted JAX provisioning engine == numpy reference engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CostModel, fluid_cost, fluid_scan, msr_like_trace
+from repro.core.jax_provision import (
+    _level_schedule,
+    provision_cost,
+    provision_schedule,
+    provision_schedule_sharded,
+)
+
+COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+B = int(COSTS.delta)
+
+
+@pytest.mark.parametrize("window", [0, 1, 3, 5, 8])
+@pytest.mark.parametrize("seed", range(4))
+def test_a1_jax_matches_numpy_scan(window, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 8, size=60)
+    want = fluid_scan(a, "A1", COSTS, window=window)
+    got_x = provision_schedule(
+        jnp.asarray(a, jnp.int32), n_levels=int(a.max()) + 1, delta=B,
+        window=window, policy="A1",
+    )
+    np.testing.assert_array_equal(np.asarray(got_x), want.x)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_offline_jax_matches_optimal_cost(seed):
+    rng = np.random.default_rng(seed + 100)
+    a = rng.integers(0, 6, size=50)
+    n = int(a.max()) + 1
+    ons = _level_schedule(jnp.asarray(a, jnp.int32), n, B, 0, "offline")
+    cost = provision_cost(jnp.asarray(a), ons, COSTS.P, COSTS.beta_on,
+                          COSTS.beta_off)
+    want = fluid_cost(a, "offline", COSTS).cost
+    assert float(cost) == pytest.approx(want, rel=1e-9)
+
+
+def test_a1_jax_cost_matches_numpy_cost():
+    a = msr_like_trace(np.random.default_rng(1), n_slots=300, mean_jobs=15.0)
+    for w in (0, 2, 5):
+        ons = _level_schedule(jnp.asarray(a, jnp.int32), int(a.max()) + 1, B, w, "A1")
+        cost = float(provision_cost(jnp.asarray(a), ons, COSTS.P,
+                                    COSTS.beta_on, COSTS.beta_off))
+        want = fluid_scan(a, "A1", COSTS, window=w).cost
+        assert cost == pytest.approx(want, rel=1e-9)
+
+
+def test_sharded_fleet_matches_single_device():
+    """shard_map level-sharded provisioning == single-device result."""
+    a = msr_like_trace(np.random.default_rng(2), n_slots=200, mean_jobs=20.0)
+    n = int(a.max()) + 1
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    got = provision_schedule_sharded(
+        mesh, jnp.asarray(a, jnp.int32), n_levels=n, delta=B, window=2
+    )
+    want = provision_schedule(
+        jnp.asarray(a, jnp.int32), n_levels=n, delta=B, window=2, policy="A1"
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import decode_attention_ref, flash_attention_ref
+
+
+def rand(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.5).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kvh,hd,bq,bk",
+    [
+        (2, 256, 4, 4, 64, 128, 128),    # MHA
+        (1, 256, 8, 2, 64, 128, 128),    # GQA 4x
+        (2, 128, 4, 1, 128, 128, 128),   # MQA
+        (1, 512, 2, 2, 64, 256, 128),    # rectangular blocks
+        (1, 384, 2, 1, 64, 128, 128),    # non-power-of-two S
+    ],
+)
+def test_flash_attention_causal(dtype, b, s, h, kvh, hd, bq, bk):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = rand(ks[0], (b, s, h, hd), dtype)
+    k = rand(ks[1], (b, s, kvh, hd), dtype)
+    v = rand(ks[2], (b, s, kvh, hd), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("window", [32, 128, 256])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.key(1), 3)
+    b, s, h, kvh, hd = 1, 256, 4, 2, 64
+    q = rand(ks[0], (b, s, h, hd), jnp.float32)
+    k = rand(ks[1], (b, s, kvh, hd), jnp.float32)
+    v = rand(ks[2], (b, s, kvh, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=128, block_k=128, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.key(2), 3)
+    b, s, h, kvh, hd = 1, 256, 2, 2, 64
+    q = rand(ks[0], (b, s, h, hd), jnp.float32)
+    k = rand(ks[1], (b, s, kvh, hd), jnp.float32)
+    v = rand(ks[2], (b, s, kvh, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=False, block_q=128, block_k=128,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kvh,hd,bk",
+    [
+        (2, 512, 8, 2, 64, 128),
+        (1, 1024, 4, 4, 128, 256),
+        (3, 256, 8, 1, 64, 128),
+    ],
+)
+def test_decode_attention(dtype, b, s, h, kvh, hd, bk):
+    ks = jax.random.split(jax.random.key(3), 4)
+    q = rand(ks[0], (b, h, hd), dtype)
+    kc = rand(ks[1], (b, s, kvh, hd), dtype)
+    vc = rand(ks[2], (b, s, kvh, hd), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    got = decode_attention(q, kc, vc, lengths, block_k=bk, interpret=True)
+    want = decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+    )
+
+
+def test_decode_attention_full_and_single_lengths():
+    b, s, h, kvh, hd = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = rand(ks[0], (b, h, hd), jnp.float32)
+    kc = rand(ks[1], (b, s, kvh, hd), jnp.float32)
+    vc = rand(ks[2], (b, s, kvh, hd), jnp.float32)
+    for lens in ([s, s], [1, 1], [1, s]):
+        lengths = jnp.asarray(lens, jnp.int32)
+        got = decode_attention(q, kc, vc, lengths, block_k=128, interpret=True)
+        want = decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Kernel semantics == the model's einsum attention path (same masks)."""
+    from repro.models.attention import _causal_mask, _expand_kv, _sdpa
+
+    b, s, h, kvh, hd = 1, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = rand(ks[0], (b, s, h, hd), jnp.float32)
+    k = rand(ks[1], (b, s, kvh, hd), jnp.float32)
+    v = rand(ks[2], (b, s, kvh, hd), jnp.float32)
+    mask = _causal_mask(s, s, 0, 0)[None, None]
+    want = _sdpa(q * hd ** -0.5 / hd ** -0.5, _expand_kv(k, h), _expand_kv(v, h),
+                 mask, jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,81 @@
+"""Serving cluster + autoscaler integration tests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import CostModel, a0_cost, simulate, OfflinePolicy, A1Deterministic
+from repro.data.requests import generate_sessions
+from repro.models import init_params
+from repro.serving import (
+    InferenceEngine,
+    make_window_max_predictor,
+    replica_cost_model,
+    run_cluster,
+)
+
+COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+
+
+@pytest.fixture(scope="module")
+def session_trace():
+    return generate_sessions(np.random.default_rng(0), n_slots=120,
+                             mean_concurrency=6.0)
+
+
+def test_autoscaler_a1_zero_info_matches_brick_simulator(session_trace):
+    """The live autoscaler (alpha=0) must equal the validated brick simulator."""
+    brick = session_trace.to_brick()
+    want = simulate(brick, A1Deterministic(alpha=0.0), COSTS).cost
+    rep = run_cluster(session_trace, COSTS, policy="A1", alpha=0.0)
+    assert rep.total_cost == pytest.approx(want, rel=1e-6)
+
+
+def test_autoscaler_with_window_matches_brick_simulator(session_trace):
+    """With a perfect predictor, the LIFO-depth peek == the matched-pop peek."""
+    brick = session_trace.to_brick()
+    for alpha in (0.5, 1.0):
+        want = simulate(brick, A1Deterministic(alpha=alpha), COSTS).cost
+        pred = make_window_max_predictor(session_trace)
+        rep = run_cluster(session_trace, COSTS, policy="A1", alpha=alpha,
+                          predictor=pred)
+        assert rep.total_cost == pytest.approx(want, rel=1e-6), alpha
+
+
+def test_autoscaler_respects_competitive_bound(session_trace):
+    brick = session_trace.to_brick()
+    opt = a0_cost(brick, COSTS)
+    for alpha in (0.0, 0.5, 1.0):
+        pred = make_window_max_predictor(session_trace)
+        rep = run_cluster(session_trace, COSTS, policy="A1", alpha=alpha,
+                          predictor=pred)
+        slack = COSTS.delta * 3  # horizon-truncation slack
+        assert rep.total_cost <= (2 - alpha) * opt + slack
+
+
+def test_cluster_saves_energy_vs_static(session_trace):
+    rep = run_cluster(session_trace, COSTS, policy="A1", alpha=0.0)
+    assert rep.reduction > 0.3, rep
+
+
+def test_end_to_end_generation_with_autoscaler():
+    """Real prefill/decode on pinned replicas while the autoscaler runs."""
+    trace = generate_sessions(np.random.default_rng(3), n_slots=30,
+                              mean_concurrency=2.0)
+    cfg = get_config("llama3.2-1b", reduced=True).replace(remat="none")
+    import jax
+
+    params = init_params(cfg, jax.random.key(0))
+
+    def factory():
+        return InferenceEngine(cfg, params, max_batch=1, max_seq=64)
+
+    rep = run_cluster(trace, COSTS, policy="A1", alpha=0.0,
+                      engine_factory=factory)
+    assert rep.tokens_generated > 0
+    assert rep.sessions_served == len(trace.sessions)
+
+
+def test_replica_cost_model_sane():
+    cm = replica_cost_model(weights_bytes_per_device=8e9, n_chips=16)
+    assert cm.beta_on > 0 and cm.beta_off > 0
+    assert 0.1 < cm.delta < 100

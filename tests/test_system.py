@@ -1,0 +1,92 @@
+"""End-to-end behaviour tests: the paper's headline experimental claims."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    fluid_cost,
+    fluid_scan,
+    msr_like_trace,
+    pmr,
+    scale_to_pmr,
+    with_prediction_error,
+)
+
+COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)  # paper: Delta = 6 slots
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return msr_like_trace(np.random.default_rng(0))
+
+
+def test_trace_matches_paper_statistics(trace):
+    """One week of 10-minute slots, PMR ~ 4.63 (paper Section V-A)."""
+    assert len(trace) == 1008
+    assert 4.2 <= pmr(trace) <= 5.1
+
+
+def test_cost_reduction_beyond_66_percent_with_zero_future_info(trace):
+    """Paper Sec. V-B: >66% reduction vs static provisioning even at window 0."""
+    static = fluid_cost(trace, "static", COSTS).cost
+    for policy in ("A1", "A2", "A3"):
+        c = fluid_cost(trace, policy, COSTS, window=0,
+                       rng=np.random.default_rng(1)).cost
+        assert 1.0 - c / static > 0.60, f"{policy}: {(1.0 - c / static):.3f}"
+
+
+def test_reduction_grows_with_window_and_reaches_optimal(trace):
+    """Fig. 4b: linear growth to the optimum at window Delta - 1."""
+    static = fluid_cost(trace, "static", COSTS).cost
+    opt = fluid_cost(trace, "offline", COSTS).cost
+    prev = -1.0
+    for w in range(0, 6):
+        c = fluid_cost(trace, "A1", COSTS, window=w).cost
+        red = 1.0 - c / static
+        assert red >= prev - 1e-12
+        prev = red
+    assert fluid_cost(trace, "A1", COSTS, window=5).cost == pytest.approx(opt)
+
+
+def test_ordering_offline_best_then_a3_a2_a1(trace):
+    """Expected ranking at intermediate window sizes (in expectation)."""
+    opt = fluid_cost(trace, "offline", COSTS).cost
+    runs = 30
+    means = {}
+    for name in ("A1", "A2", "A3"):
+        tot = sum(
+            fluid_cost(trace, name, COSTS, window=2,
+                       rng=np.random.default_rng(r)).cost
+            for r in range(runs)
+        )
+        means[name] = tot / runs
+    assert opt <= min(means.values()) + 1e-9
+
+
+def test_robust_to_prediction_error(trace):
+    """Fig. 4c: performance degrades gracefully with 50% Gaussian error."""
+    static = fluid_cost(trace, "static", COSTS).cost
+    exact = fluid_scan(trace, "A1", COSTS, window=4).cost
+    rng = np.random.default_rng(5)
+    noisy_costs = []
+    for _ in range(10):
+        pred = with_prediction_error(trace, rng, 0.5)
+        noisy_costs.append(fluid_scan(trace, "A1", COSTS, window=4,
+                                      predicted=pred).cost)
+    noisy = float(np.mean(noisy_costs))
+    assert 1.0 - noisy / static > 0.55
+    assert noisy >= exact - 1e-9 or abs(noisy - exact) / exact < 0.1
+
+
+def test_pmr_sweep_monotone_savings():
+    """Fig. 4d: higher PMR -> larger savings from dynamic provisioning."""
+    base = msr_like_trace(np.random.default_rng(2), mean_jobs=40.0)
+    reductions = []
+    for target in (2.0, 4.0, 7.0, 10.0):
+        a = scale_to_pmr(base.astype(float), target)
+        a = np.maximum(np.rint(a / a.mean() * 40.0), 0).astype(np.int64)
+        static = fluid_cost(a, "static", COSTS).cost
+        c = fluid_cost(a, "offline", COSTS).cost
+        reductions.append(1.0 - c / static)
+    assert all(b >= a - 0.02 for a, b in zip(reductions, reductions[1:])), reductions
+    assert reductions[0] > 0.25 and reductions[-1] > 0.7
