@@ -1,5 +1,7 @@
-"""Provisioning-engine benchmarks: throughput of the jitted fleet provisioner
-and the event-driven brick simulator (cluster-controller capacity)."""
+"""Provisioning-engine benchmarks: throughput of the batched jitted fleet
+provisioner (traces x alpha-sweep x levels as one device program), the fused
+Pallas scan path, and the event-driven brick simulator (cluster-controller
+capacity)."""
 from __future__ import annotations
 
 import time
@@ -8,22 +10,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CostModel, generate_brick_trace, msr_like_trace, simulate
-from repro.core.jax_provision import provision_schedule
+from repro.core import (
+    RANDOMIZED_POLICIES,
+    CostModel,
+    generate_brick_trace,
+    msr_like_trace,
+    simulate,
+)
+from repro.core.jax_provision import (
+    provision_schedule,
+    provision_sweep_costs,
+)
 from repro.core.ski_rental import A1Deterministic
+from repro.kernels.provision_scan import provision_scan
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+DELTA = int(COSTS.delta)
+N_SLOTS = 1008
+
+
+def _trace(n_levels: int, seed: int = 0) -> np.ndarray:
+    return msr_like_trace(
+        np.random.default_rng(seed), mean_jobs=n_levels / 4.0, n_slots=N_SLOTS
+    )
 
 
 def jax_provisioner_throughput(rows: list[str]) -> None:
+    """Single-trace A1 path (the serving autoscaler's hot loop)."""
     for n_levels in (64, 512, 4096):
-        a = jnp.asarray(
-            msr_like_trace(np.random.default_rng(0), mean_jobs=n_levels / 4.0,
-                           n_slots=1008),
-            jnp.int32,
-        )
+        a = jnp.asarray(_trace(n_levels), jnp.int32)
         fn = lambda: provision_schedule(
-            a, n_levels=n_levels, delta=6, window=2, policy="A1"
+            a, n_levels=n_levels, delta=DELTA, window=2, policy="A1"
         )
         jax.block_until_ready(fn())
         t0 = time.perf_counter()
@@ -32,7 +49,54 @@ def jax_provisioner_throughput(rows: list[str]) -> None:
         us = (time.perf_counter() - t0) / 5 * 1e6
         rows.append(
             f"jax_provision_levels{n_levels},{us:.1f},"
-            f"slots=1008;decisions_per_s={n_levels * 1008 / (us / 1e6):.3e}"
+            f"slots={N_SLOTS};decisions_per_s={n_levels * N_SLOTS / (us / 1e6):.3e}"
+        )
+
+
+def batched_sweep_throughput(rows: list[str]) -> None:
+    """The batched engine: (traces x alpha values x levels) per second."""
+    n_levels = 256
+    n_windows = DELTA
+    windows = jnp.arange(n_windows, dtype=jnp.int32)
+    for policy, n_traces in (("A1", 32), ("A3", 32)):
+        a = jnp.asarray(
+            np.stack([_trace(n_levels, seed=s) for s in range(n_traces)]), jnp.int32
+        )
+        key = jax.random.key(0)
+        fn = lambda: provision_sweep_costs(
+            a, n_levels=n_levels, delta=DELTA, windows=windows, policy=policy,
+            key=key if policy in RANDOMIZED_POLICIES else None,
+            P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
+        )
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        cells = n_traces * n_windows * n_levels * N_SLOTS
+        rows.append(
+            f"batched_sweep_{policy}_b{n_traces}_w{n_windows}_n{n_levels},{us:.1f},"
+            f"decisions_per_s={cells / (us / 1e6):.3e}"
+        )
+
+
+def pallas_scan_throughput(rows: list[str]) -> None:
+    """Fused Pallas per-level scan (interpret mode off-TPU)."""
+    for n_levels in (512, 4096):
+        a = jnp.asarray(_trace(n_levels), jnp.int32)
+        thresholds = jnp.full((n_levels,), float(DELTA - 3), jnp.float32)
+        fn = jax.jit(
+            lambda a_, m_: provision_scan(a_, m_, delta=DELTA, horizon=3)
+        )
+        jax.block_until_ready(fn(a, thresholds))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn(a, thresholds))
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+        rows.append(
+            f"pallas_scan_{mode}_levels{n_levels},{us:.1f},"
+            f"decisions_per_s={n_levels * N_SLOTS / (us / 1e6):.3e}"
         )
 
 
@@ -50,4 +114,6 @@ def brick_simulator_throughput(rows: list[str]) -> None:
 
 def run(rows: list[str]) -> None:
     jax_provisioner_throughput(rows)
+    batched_sweep_throughput(rows)
+    pallas_scan_throughput(rows)
     brick_simulator_throughput(rows)

@@ -14,12 +14,34 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import CostModel
+from repro.core import RANDOMIZED_POLICIES, CostModel
 from repro.data.requests import generate_sessions
 from repro.models import init_params
-from repro.serving import InferenceEngine, make_window_max_predictor, run_cluster
+from repro.serving import (
+    FleetProvisioner,
+    InferenceEngine,
+    make_window_max_predictor,
+    run_cluster,
+)
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+
+
+def slot_concurrency(trace, n_slots: int) -> np.ndarray:
+    """Per-slot peak session concurrency — planner input."""
+    events = sorted(
+        [(s.arrival, 1) for s in trace.sessions]
+        + [(s.departure, -1) for s in trace.sessions]
+    )
+    a = np.zeros(n_slots, np.int64)
+    cur, i = 0, 0
+    for t in range(n_slots):
+        a[t] = cur                      # concurrency carried in from slot start
+        while i < len(events) and events[i][0] < t + 1:
+            cur += events[i][1]
+            a[t] = max(a[t], cur)
+            i += 1
+    return a
 
 
 def main() -> None:
@@ -36,6 +58,23 @@ def main() -> None:
     )
     print(f"sessions: {len(trace.sessions)}, horizon {trace.horizon:.0f} slots, "
           f"peak concurrency {trace.to_brick().max_concurrency()}")
+
+    # capacity planning on the batched jitted engine: evaluate every policy's
+    # whole alpha-sweep as one device program, pick the cheapest window.
+    demand = slot_concurrency(trace, args.slots)
+    windows = np.arange(int(COSTS.delta))
+    print("\nplanned cost by policy/window (batched engine, one program each):")
+    for policy in ("A1", "A3"):
+        planner = FleetProvisioner(
+            COSTS, policy=policy, max_replicas=int(demand.max()) + 1,
+            key=jax.random.key(0) if policy in RANDOMIZED_POLICIES else None,
+        )
+        costs = planner.sweep_costs(demand, windows)
+        best = int(np.argmin(costs))
+        line = " ".join(f"w={w}:{c:,.0f}" for w, c in zip(windows, costs))
+        print(f"  {policy}: {line}  -> best window {windows[best]} "
+              f"(alpha={min(1.0, (windows[best] + 1) / COSTS.delta):.2f})")
+    print()
 
     cfg = get_config(args.arch, reduced=True).replace(remat="none")
     params = init_params(cfg, jax.random.key(0))

@@ -1,5 +1,6 @@
 """Paper experiments, interactive: competitive ratios, PMR sweep, and the
-fleet-scale jitted provisioner (levels sharded over the mesh via shard_map).
+fleet-scale jitted provisioner (batched multi-policy engine + Pallas scan,
+levels sharded over the mesh via shard_map).
 
     PYTHONPATH=src python examples/trace_provisioning.py
 """
@@ -11,31 +12,40 @@ from repro.core import (
     CostModel,
     fluid_cost,
     msr_like_trace,
+    provision_schedule,
+    provision_schedule_sharded,
+    provision_sweep_costs,
     scale_to_pmr,
     theoretical_ratio,
 )
-from repro.core.jax_provision import provision_schedule, provision_schedule_sharded
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+DELTA = int(COSTS.delta)
 
 
 def main() -> None:
     trace = msr_like_trace(np.random.default_rng(0))
+    n_levels = int(trace.max()) + 1
+    windows = jnp.arange(DELTA, dtype=jnp.int32)
 
-    # --- Fig. 3: worst-case vs empirical ratios over alpha
-    print("Fig.3 — competitive ratios (Delta = 6):")
+    # --- Fig. 3: worst-case vs empirical ratios over alpha — the whole
+    # (runs x alpha) grid per policy is ONE jitted device program.
+    print("Fig.3 — competitive ratios (Delta = 6, batched engine):")
     print(f"{'alpha':>6} {'A1 bound':>9} {'A1 emp':>8} {'A3 bound':>9} {'A3 emp':>8}")
     opt = fluid_cost(trace, "offline", COSTS).cost
-    for w in (0, 1, 2, 3, 4, 5):
+    cost_kw = dict(P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off)
+    a1 = np.asarray(provision_sweep_costs(
+        jnp.asarray(trace, jnp.int32), n_levels=n_levels, delta=DELTA,
+        windows=windows, policy="A1", **cost_kw)) / opt
+    runs = 20
+    batch = jnp.asarray(np.tile(trace, (runs, 1)), jnp.int32)
+    a3 = np.asarray(provision_sweep_costs(
+        batch, n_levels=n_levels, delta=DELTA, windows=windows, policy="A3",
+        key=jax.random.key(0), **cost_kw)).mean(axis=1) / opt
+    for i, w in enumerate(range(DELTA)):
         alpha = min(1.0, (w + 1) / COSTS.delta)
-        a1 = fluid_cost(trace, "A1", COSTS, window=w).cost / opt
-        a3 = np.mean([
-            fluid_cost(trace, "A3", COSTS, window=w,
-                       rng=np.random.default_rng(r)).cost
-            for r in range(20)
-        ]) / opt
-        print(f"{alpha:>6.2f} {theoretical_ratio('A1', alpha):>9.3f} {a1:>8.3f} "
-              f"{theoretical_ratio('A3', alpha):>9.3f} {a3:>8.3f}")
+        print(f"{alpha:>6.2f} {theoretical_ratio('A1', alpha):>9.3f} {a1[i]:>8.3f} "
+              f"{theoretical_ratio('A3', alpha):>9.3f} {a3[i]:>8.3f}")
 
     # --- Fig. 4d: PMR sweep
     print("\nFig.4d — savings vs peak-to-mean ratio (offline optimum):")
@@ -48,17 +58,21 @@ def main() -> None:
         print(f"  PMR={target:>2}: reduction {1 - op / st:6.1%}")
 
     # --- fleet-scale jitted provisioner
-    print("\nJAX fleet provisioner (A1, jit + shard_map over levels):")
+    print("\nJAX fleet provisioner (jit + shard_map over levels, Pallas scan):")
     a = jnp.asarray(trace, jnp.int32)
-    x = provision_schedule(a, n_levels=int(trace.max()) + 1,
-                           delta=int(COSTS.delta), window=2, policy="A1")
-    print(f"  x(t): max={int(x.max())}, mean={float(x.mean()):.1f} "
+    x = provision_schedule(a, n_levels=n_levels, delta=DELTA, window=2,
+                           policy="A1")
+    print(f"  A1 x(t): max={int(x.max())}, mean={float(x.mean()):.1f} "
           f"(demand mean {trace.mean():.1f})")
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    xs = provision_schedule_sharded(mesh, a, n_levels=int(trace.max()) + 1,
-                                    delta=int(COSTS.delta), window=2)
+    xs = provision_schedule_sharded(mesh, a, n_levels=n_levels, delta=DELTA,
+                                    window=2)
     assert (np.asarray(x) == np.asarray(xs)).all()
     print(f"  sharded over {len(jax.devices())} device(s): identical schedule ✓")
+    x3 = provision_schedule_sharded(mesh, a, n_levels=n_levels, delta=DELTA,
+                                    window=2, policy="A3", key=jax.random.key(1))
+    print(f"  A3 (randomized, sharded Pallas scan): max={int(x3.max())}, "
+          f"mean={float(x3.mean()):.1f}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,14 @@ from .costs import PAPER_COSTS, CostModel, schedule_cost
 from .dp_oracle import dp_optimal_cost
 from .events import BrickTrace, Job, generate_brick_trace, trace_from_intervals
 from .fluid import FluidResult, fluid_cost, fluid_scan
+from .jax_provision import (
+    RANDOMIZED as RANDOMIZED_POLICIES,
+    provision_cost,
+    provision_schedule,
+    provision_schedule_sharded,
+    provision_sweep,
+    provision_sweep_costs,
+)
 from .offline import a0_cost, a0_schedule, optimal_cost, optimal_schedule_constructed
 from .online import SimResult, simulate
 from .segments import CriticalSegment, SegmentType, critical_segments, critical_times
@@ -44,6 +52,12 @@ __all__ = [
     "FluidResult",
     "fluid_cost",
     "fluid_scan",
+    "RANDOMIZED_POLICIES",
+    "provision_cost",
+    "provision_schedule",
+    "provision_schedule_sharded",
+    "provision_sweep",
+    "provision_sweep_costs",
     "a0_cost",
     "a0_schedule",
     "optimal_cost",

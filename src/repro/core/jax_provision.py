@@ -1,13 +1,32 @@
-"""The paper's provisioning algorithms as composable, jit-able JAX modules.
+"""The paper's provisioning algorithms as a batched, jit-able JAX engine.
 
 The fluid-model level decomposition (DESIGN.md §2) makes every algorithm an
 independent per-level computation, so the whole fleet is one vectorized
-``lax.scan`` over slots — and for very large fleets the *level* axis shards
-over the mesh with ``shard_map`` (per-level instances are embarrassingly
-parallel).  This is the form the serving autoscaler and the elastic trainer
-consume on-device.
+``lax.scan`` over slots.  On top of that single scan this module layers
+
+  * all five policies — ``A1`` (deterministic, ratio ``2 - α``), ``A2``
+    (randomized, ``(e-α)/(e-1)``), ``A3`` (randomized, ``e/(e-1+α)``),
+    ``offline`` (hindsight optimum, closed form) and ``delayedoff`` — with
+    the randomized waits sampled per level via an explicit PRNG key,
+    matching :mod:`repro.core.ski_rental` semantics;
+  * a leading batch axis over demand traces (``(B, T)`` demand, one subkey
+    per trace) via ``vmap``;
+  * a vectorized sweep axis over prediction windows (``α = (w+1)/Δ``) via
+    ``vmap`` with common random numbers across the sweep, so a whole
+    (traces × α × policies) competitive-ratio table is one device program;
+  * a fused Pallas per-level scan (:mod:`repro.kernels.provision_scan`,
+    interpret-mode fallback off-TPU) used by the ``shard_map`` fleet path.
 
 Semantics mirror :func:`repro.core.fluid.fluid_scan` exactly (tested).
+
+PRNG contract: ``A2``/``A3`` require ``key``.  The engine draws two
+``(T, n_levels)`` uniform tables per trace; the draw at ``[t, l]`` is
+consumed iff level ``l`` becomes newly idle in slot ``t`` — a pattern that
+depends only on the trace (a level enters idle exactly when it stops being
+busy), so schedules are reproducible given (trace, key) and independent
+draws are never reused across idle periods.  Batched calls split the key
+per trace; the α-sweep reuses the same tables across windows (common
+random numbers, variance reduction for ratio curves).
 """
 from __future__ import annotations
 
@@ -21,56 +40,88 @@ from jax.experimental.shard_map import shard_map
 
 E = math.e
 
-
-@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "window", "policy"))
-def provision_schedule(
-    a: jax.Array,          # (T,) int32 demand per slot
-    *,
-    n_levels: int,
-    delta: int,            # critical interval in slots (beta/P)
-    window: int = 0,       # future slots visible (current slot always known)
-    policy: str = "A1",    # A1 | offline | delayedoff
-    predicted: jax.Array | None = None,
-) -> jax.Array:
-    """Returns x: (T,) int32 — number of powered-on servers per slot."""
-    on_matrix = _level_schedule(a, n_levels, delta, window, policy, predicted)
-    return on_matrix.sum(axis=1).astype(jnp.int32)
+POLICIES = ("A1", "A2", "A3", "offline", "delayedoff")
+RANDOMIZED = ("A2", "A3")
 
 
-def _level_schedule(a, n_levels, delta, window, policy, predicted=None):
-    """(T, n_levels) bool on-matrix."""
+# ---------------------------------------------------------------------------
+# Randomized-wait sampling (ski-rental thresholds)
+# ---------------------------------------------------------------------------
+
+def _uniforms(key: jax.Array, T: int, n_levels: int) -> tuple[jax.Array, jax.Array]:
+    """Two (T, n_levels) U(0,1) tables: atom draw (A3) and value draw."""
+    k0, k1 = jax.random.split(key)
+    return (
+        jax.random.uniform(k0, (T, n_levels)),
+        jax.random.uniform(k1, (T, n_levels)),
+    )
+
+
+def _waits_from_uniforms(policy, u0, u, window, delta):
+    """Transform uniform tables into wait thresholds for a given window.
+
+    A2: Z ~ e^{z/((1-α)Δ)} / ((e-1)(1-α)Δ) on [0, (1-α)Δ]  (inverse CDF).
+    A3: atom at 0 w.p. α/(e-1+α), else A2's density (corrected atom, see
+    ski_rental.py).  Keeping the transform separate from the draws lets the
+    α-sweep share draws across windows.
+    """
+    b = float(delta)
+    alpha = jnp.clip((jnp.asarray(window, jnp.float32) + 1.0) / b, 0.0, 1.0)
+    span = (1.0 - alpha) * b
+    waits = span * jnp.log1p(u * (E - 1.0))
+    if policy == "A3":
+        p0 = alpha / (E - 1.0 + alpha)
+        waits = jnp.where(u0 < p0, 0.0, waits)
+    return waits
+
+
+# ---------------------------------------------------------------------------
+# The per-level slot scan (all online policies)
+# ---------------------------------------------------------------------------
+
+def _on_matrix_scan(a, pred, levels, *, delta, window, policy, waits=None):
+    """(T, N) bool on-matrix via one lax.scan over slots.
+
+    ``window`` may be a python int or a traced scalar (the α-sweep vmaps
+    over it).  ``waits``: (T, N) sampled thresholds for A2/A3; the entry at
+    ``[t, l]`` is consumed iff level ``l`` becomes newly idle in slot ``t``.
+    """
     T = a.shape[0]
-    pred = a if predicted is None else predicted
-    b = delta
-    w = window
-    m = max(0.0, b - w - 1) if policy == "A1" else float(b)   # delayedoff: m=b
-    horizon = int(min(w + 1, b)) if policy == "A1" else 0
-    levels = jnp.arange(n_levels)
-
-    if policy == "offline":
-        return _offline_levels(a, n_levels, b)
-
-    pad = jnp.concatenate([pred, jnp.zeros((max(horizon, 1),), pred.dtype)])
+    b = float(delta)
+    max_h = int(delta)              # the peek never exceeds the critical interval
+    pad = jnp.concatenate([pred, jnp.zeros((max_h,), pred.dtype)])
+    w = jnp.asarray(window, jnp.float32)
+    if policy == "delayedoff":      # timer Δ, no peek
+        horizon = jnp.float32(0.0)
+        m_static = jnp.float32(b)
+    else:
+        horizon = jnp.minimum(w + 1.0, b)
+        m_static = jnp.maximum(0.0, b - w - 1.0)
+    hslots = jnp.arange(max_h, dtype=jnp.float32)
 
     def step(carry, t):
-        r, on = carry                                  # (N,) f32, (N,) bool
+        r, on, wait = carry                            # (N,) f32, bool, f32
         busy = a[t] > levels
         on = on | busy                                 # dispatcher turn-on
         r = jnp.where(busy, 0.0, r)
         idle = on & ~busy
+        if waits is not None:
+            wait = jnp.where(idle & (r == 0.0), waits[t], wait)
         r = jnp.where(idle, r + 1.0, r)
-        if horizon > 0:
-            fut = jax.lax.dynamic_slice(pad, (t + 1,), (horizon,))
-            seen = (fut[None, :] > levels[:, None]).any(axis=1)
-        else:
-            seen = jnp.zeros_like(idle)
-        off_now = idle & (r - 1.0 >= m) & ~seen
+        fut = jax.lax.dynamic_slice(pad, (t + 1,), (max_h,))
+        seen = ((fut[None, :] > levels[:, None]) & (hslots[None, :] < horizon)).any(axis=1)
+        off_now = idle & (r - 1.0 >= wait) & ~seen
         on = on & ~off_now
         r = jnp.where(off_now, 0.0, r)
-        return (r, on), on
+        return (r, on, wait), on
 
-    init = (levels * 0.0, a[0] > levels)   # derived from `levels` so the
-    (_, _), ons = jax.lax.scan(step, init, jnp.arange(T))  # carry stays varying
+    n = levels.shape[0]
+    init = (
+        jnp.zeros((n,), jnp.float32),
+        a[0] > levels,                                  # x(0) = a(0)
+        jnp.full((n,), m_static) if waits is None else jnp.zeros((n,), jnp.float32),
+    )
+    (_, _, _), ons = jax.lax.scan(step, init, jnp.arange(T))
     return ons
 
 
@@ -95,27 +146,169 @@ def _offline_levels(a, n_levels, b):
     return busy | (~busy & keep_idle)
 
 
-def provision_cost(
-    a: jax.Array, on_matrix: jax.Array, P: float, beta_on: float, beta_off: float
-) -> jax.Array:
-    """Total cost of a per-level schedule (energy + toggles + forced final off)."""
-    energy = P * on_matrix.sum()
-    up = jnp.clip(on_matrix[1:].astype(jnp.int32) - on_matrix[:-1].astype(jnp.int32), 0)
-    down = jnp.clip(on_matrix[:-1].astype(jnp.int32) - on_matrix[1:].astype(jnp.int32), 0)
-    # initial state x(0)=a(0) is free; final forced off to a(T)
-    levels = jnp.arange(on_matrix.shape[1])
-    init_on = a[0] > levels
-    first_turn_on = (on_matrix[0] & ~init_on).sum()
-    final_off = (on_matrix[-1] & ~(a[-1] > levels)).sum()
-    return (
-        energy
-        + beta_on * (up.sum() + first_turn_on)
-        + beta_off * (down.sum() + final_off)
+def _level_schedule(a, n_levels, delta, window, policy, predicted=None, key=None):
+    """(T, n_levels) bool on-matrix for one trace (any policy)."""
+    if policy not in POLICIES:
+        raise KeyError(policy)
+    pred = a if predicted is None else predicted
+    if policy == "offline":
+        return _offline_levels(a, n_levels, delta)
+    waits = None
+    if policy in RANDOMIZED:
+        if key is None:
+            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
+        u0, u = _uniforms(key, a.shape[0], n_levels)
+        waits = _waits_from_uniforms(policy, u0, u, window, delta)
+    levels = jnp.arange(n_levels)
+    return _on_matrix_scan(
+        a, pred, levels, delta=delta, window=window, policy=policy, waits=waits
     )
 
 
 # ---------------------------------------------------------------------------
-# Fleet-scale: shard the level axis over the mesh
+# Public engine: single trace or batched, plus the α-sweep
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "window", "policy"))
+def provision_schedule(
+    a: jax.Array,          # (T,) or (B, T) int32 demand per slot
+    *,
+    n_levels: int,
+    delta: int,            # critical interval in slots (beta/P)
+    window: int = 0,       # future slots visible (current slot always known)
+    policy: str = "A1",    # A1 | A2 | A3 | offline | delayedoff
+    predicted: jax.Array | None = None,
+    key: jax.Array | None = None,   # required for A2/A3; split per trace if batched
+) -> jax.Array:
+    """Returns x: (T,) or (B, T) int32 — number of powered-on servers per slot."""
+    a = jnp.asarray(a)
+    pred = a if predicted is None else jnp.asarray(predicted)
+    if a.ndim == 1:
+        ons = _level_schedule(a, n_levels, delta, window, policy, pred, key)
+        return ons.sum(axis=1).astype(jnp.int32)
+
+    def one(ai, pi, ki):
+        ons = _level_schedule(ai, n_levels, delta, window, policy, pi, ki)
+        return ons.sum(axis=1).astype(jnp.int32)
+
+    if policy in RANDOMIZED:
+        if key is None:
+            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
+        keys = jax.random.split(key, a.shape[0])
+        return jax.vmap(one)(a, pred, keys)
+    return jax.vmap(lambda ai, pi: one(ai, pi, None))(a, pred)
+
+
+def _sweep(a, n_levels, delta, windows, policy, key, predicted, reduce_fn):
+    """Shared body of the α-sweep: vmap windows × vmap traces, CRN draws."""
+    a = jnp.asarray(a)
+    squeeze = a.ndim == 1
+    ab = a[None] if squeeze else a
+    pred = ab if predicted is None else jnp.asarray(predicted).reshape(ab.shape)
+    windows = jnp.asarray(windows)
+    B, T = ab.shape
+
+    if policy == "offline":        # window-independent: compute once, broadcast
+        def off_one(ai, pi):
+            return reduce_fn(ai, _offline_levels(ai, n_levels, delta))
+        out = jax.vmap(off_one)(ab, pred)
+        out = jnp.broadcast_to(out[None], (windows.shape[0],) + out.shape)
+        return out[:, 0] if squeeze else out
+
+    if policy in RANDOMIZED:
+        if key is None:
+            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
+        # a (T,) trace consumes the key directly (same stream as
+        # provision_schedule); a (B, T) batch splits it per trace.
+        keys = key[None] if squeeze else jax.random.split(key, B)
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)  # (B, T, N)
+    else:
+        u0 = u = jnp.zeros((B, 0, 0))
+
+    levels = jnp.arange(n_levels)
+
+    def per_window(w):
+        def per_trace(ai, pi, u0i, ui):
+            waits = (
+                _waits_from_uniforms(policy, u0i, ui, w, delta)
+                if policy in RANDOMIZED
+                else None
+            )
+            ons = _on_matrix_scan(
+                ai, pi, levels, delta=delta, window=w, policy=policy, waits=waits
+            )
+            return reduce_fn(ai, ons)
+
+        return jax.vmap(per_trace)(ab, pred, u0, u)
+
+    out = jax.vmap(per_window)(windows)                 # (W, B, ...)
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "policy"))
+def provision_sweep(
+    a: jax.Array,
+    *,
+    n_levels: int,
+    delta: int,
+    windows: jax.Array,    # (W,) prediction windows in slots; α = (w+1)/Δ
+    policy: str = "A1",
+    key: jax.Array | None = None,
+    predicted: jax.Array | None = None,
+) -> jax.Array:
+    """x over the whole sweep: (W, T) for a (T,) trace, (W, B, T) batched."""
+    reduce_fn = lambda ai, ons: ons.sum(axis=1).astype(jnp.int32)
+    return _sweep(a, n_levels, delta, windows, policy, key, predicted, reduce_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "policy"))
+def provision_sweep_costs(
+    a: jax.Array,
+    *,
+    n_levels: int,
+    delta: int,
+    windows: jax.Array,
+    policy: str = "A1",
+    key: jax.Array | None = None,
+    predicted: jax.Array | None = None,
+    P: float = 1.0,
+    beta_on: float = 3.0,
+    beta_off: float = 3.0,
+) -> jax.Array:
+    """Schedule costs over the sweep: (W,) or (W, B) — one device program.
+
+    The on-matrices are reduced to costs inside the vmap lanes, so the sweep
+    never materializes the full (W, B, T, N) tensor.
+    """
+    reduce_fn = lambda ai, ons: provision_cost(ai, ons, P, beta_on, beta_off)
+    return _sweep(a, n_levels, delta, windows, policy, key, predicted, reduce_fn)
+
+
+def provision_cost(
+    a: jax.Array, on_matrix: jax.Array, P: float, beta_on: float, beta_off: float
+) -> jax.Array:
+    """Total cost of a per-level schedule (energy + toggles + forced final off).
+
+    Supports leading batch axes: ``a`` (..., T), ``on_matrix`` (..., T, N).
+    """
+    ob = on_matrix.astype(bool)
+    on = ob.astype(jnp.int32)
+    energy = P * on.sum(axis=(-2, -1))
+    up = jnp.clip(on[..., 1:, :] - on[..., :-1, :], 0).sum(axis=(-2, -1))
+    down = jnp.clip(on[..., :-1, :] - on[..., 1:, :], 0).sum(axis=(-2, -1))
+    # initial state x(0)=a(0) is free; final forced off to a(T)
+    levels = jnp.arange(on_matrix.shape[-1])
+    first_turn_on = (ob[..., 0, :] & ~(a[..., 0, None] > levels)).sum(axis=-1)
+    final_off = (ob[..., -1, :] & ~(a[..., -1, None] > levels)).sum(axis=-1)
+    return (
+        energy
+        + beta_on * (up + first_turn_on)
+        + beta_off * (down + final_off)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale: shard the level axis over the mesh (fused Pallas scan)
 # ---------------------------------------------------------------------------
 
 def provision_schedule_sharded(
@@ -126,57 +319,62 @@ def provision_schedule_sharded(
     delta: int,
     window: int = 0,
     axis: str = "data",
+    policy: str = "A1",
+    key: jax.Array | None = None,
+    use_pallas: bool = True,
 ) -> jax.Array:
     """Same as provision_schedule, levels sharded over ``axis`` via shard_map.
 
     The demand trace is replicated (tiny); each shard runs its own level
-    block; the final x(t) is a psum over shards.  Scales to fleets far past
-    one host's memory (1000+ node deployments decide locally, paper Sec. IV).
+    block through the fused Pallas scan kernel (interpret mode off-TPU);
+    the final x(t) is a psum over shards.  Scales to fleets far past one
+    host's memory (1000+ node deployments decide locally, paper Sec. IV).
     """
+    from repro.kernels.provision_scan import provision_scan
+
+    if policy not in POLICIES or policy == "offline":
+        raise KeyError(f"sharded path supports online policies, got {policy!r}")
+    a = jnp.asarray(a)
+    T = a.shape[0]
     size = mesh.shape[axis]
     n_padded = -(-n_levels // size) * size
     per_shard = n_padded // size
 
-    def local(a_local):
+    b = float(delta)
+    if policy in RANDOMIZED:
+        if key is None:
+            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
+        u0, u = _uniforms(key, T, n_padded)
+        thresholds = _waits_from_uniforms(policy, u0, u, window, delta)  # (T, Np)
+        thr_spec = P(None, axis)
+    else:
+        m = b if policy == "delayedoff" else max(0.0, b - window - 1.0)
+        thresholds = jnp.full((n_padded,), m, jnp.float32)
+        thr_spec = P(axis)
+    horizon = 0 if policy == "delayedoff" else int(min(window + 1, delta))
+
+    def local(a_local, thr_local):
         i = jax.lax.axis_index(axis)
         base = i * per_shard
-        ons = _level_schedule_offset(a_local, per_shard, base, delta, window)
+        if use_pallas:
+            ons = provision_scan(
+                a_local, thr_local, delta=delta, horizon=horizon, base_level=base
+            )
+        else:
+            levels = base + jnp.arange(per_shard)
+            waits = thr_local if thr_local.ndim == 2 else None
+            ons = _on_matrix_scan(
+                a_local, a_local, levels,
+                delta=delta, window=window, policy=policy, waits=waits,
+            )
         x_local = ons.sum(axis=1).astype(jnp.int32)
         return jax.lax.psum(x_local, axis)
 
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=P(),
+        in_specs=(P(), thr_spec),
         out_specs=P(),
+        check_rep=False,    # no replication rule for pallas_call yet
     )
-    return fn(a)
-
-
-def _level_schedule_offset(a, n_levels, base, delta, window):
-    """A1 level schedule for levels [base, base + n_levels)."""
-    T = a.shape[0]
-    b = delta
-    w = window
-    m = max(0.0, b - w - 1)
-    horizon = int(min(w + 1, b))
-    levels = base + jnp.arange(n_levels)
-    pad = jnp.concatenate([a, jnp.zeros((max(horizon, 1),), a.dtype)])
-
-    def step(carry, t):
-        r, on = carry
-        busy = a[t] > levels
-        on = on | busy
-        r = jnp.where(busy, 0.0, r)
-        idle = on & ~busy
-        r = jnp.where(idle, r + 1.0, r)
-        fut = jax.lax.dynamic_slice(pad, (t + 1,), (horizon,))
-        seen = (fut[None, :] > levels[:, None]).any(axis=1)
-        off_now = idle & (r - 1.0 >= m) & ~seen
-        on = on & ~off_now
-        r = jnp.where(off_now, 0.0, r)
-        return (r, on), on
-
-    init = (levels * 0.0, a[0] > levels)
-    (_, _), ons = jax.lax.scan(step, init, jnp.arange(T))
-    return ons
+    return fn(a, thresholds)

@@ -15,6 +15,25 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 
+_ZIPF_EXPONENT = 1.1
+_zipf_cdf_cache: dict[int, np.ndarray] = {}
+
+
+def _zipf_tokens(rng: np.random.Generator, vocab: int, shape: tuple) -> np.ndarray:
+    """Zipf-distributed token ids: p(k) ~ 1/(k+2)^s.
+
+    Uniform tokens carry zero learnable signal (the loss floor is log(V) and
+    any training step is pure noise), so convergence tests were measuring the
+    optimizer's random walk.  A Zipfian unigram stream gives the model real
+    structure to learn while keeping batch_at(step) pure and seekable.
+    """
+    cdf = _zipf_cdf_cache.get(vocab)
+    if cdf is None:
+        p = 1.0 / np.power(np.arange(vocab, dtype=np.float64) + 2.0, _ZIPF_EXPONENT)
+        cdf = np.cumsum(p / p.sum())
+        _zipf_cdf_cache[vocab] = cdf
+    return np.searchsorted(cdf, rng.uniform(size=shape)).astype(np.int64)
+
 
 def make_token_batch(cfg: ModelConfig, rng: np.random.Generator, batch: int,
                      seq: int) -> dict:
@@ -23,21 +42,21 @@ def make_token_batch(cfg: ModelConfig, rng: np.random.Generator, batch: int,
     if cfg.frontend == "vision_stub":
         nf = cfg.n_frontend_tokens
         out["tokens"] = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, seq - nf)), jnp.int32
+            _zipf_tokens(rng, cfg.vocab_size, (batch, seq - nf)), jnp.int32
         )
         out["frontend"] = jnp.asarray(
             rng.standard_normal((batch, nf, cfg.d_model)), jnp.bfloat16
         )
     elif cfg.frontend == "audio_stub":
         out["tokens"] = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32
+            _zipf_tokens(rng, cfg.vocab_size, (batch, seq)), jnp.int32
         )
         out["frontend"] = jnp.asarray(
             rng.standard_normal((batch, seq, cfg.d_model)), jnp.bfloat16
         )
     else:
         out["tokens"] = jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32
+            _zipf_tokens(rng, cfg.vocab_size, (batch, seq)), jnp.int32
         )
     return out
 

@@ -5,5 +5,6 @@ are the TPU execution path and are validated against ref.py in interpret
 mode on CPU (tests/test_kernels.py).
 """
 from .ops import decode_attention, flash_attention
+from .provision_scan import provision_scan
 
-__all__ = ["decode_attention", "flash_attention"]
+__all__ = ["decode_attention", "flash_attention", "provision_scan"]

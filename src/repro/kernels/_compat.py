@@ -1,0 +1,15 @@
+"""Version tolerance for Pallas TPU API drift.
+
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x) was renamed to
+``pltpu.CompilerParams`` (jax >= 0.5); resolve whichever exists so the
+kernels compile under both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

@@ -1,0 +1,123 @@
+"""Fused per-level provisioning scan as a Pallas TPU kernel.
+
+The provisioning engine's inner loop (repro.core.jax_provision) is a
+sequential scan over slots with an embarrassingly parallel level axis.  For
+large fleets the lax.scan path materializes (T, N) intermediates per step;
+this kernel fuses the whole scan into one program per level block:
+
+  grid = (N/BN,); each program keeps its block's state — idle run length,
+  on/off bit, sampled wait threshold — in registers/VMEM across all T slots
+  and streams the on-matrix out row by row.
+
+The demand trace (and its peek pad) is scalar-prefetched into SMEM, so the
+per-slot ``a(t) > level`` compare and the ``horizon``-slot peek are SMEM
+scalar reads against a resident level-id vector — no HBM traffic beyond
+the threshold table and the output.
+
+Thresholds are (N,) constants for the deterministic policies (A1's
+``max(0, Δ-w-1)``, DELAYEDOFF's ``Δ``) or a (T, N) table of sampled waits
+for A2/A3 (entry [t, l] is consumed iff level l becomes newly idle in slot
+t, matching the engine's PRNG contract).  The peek reads the true trace
+(exact predictions — the fleet path); erroneous-prediction experiments use
+the lax.scan engine.
+
+Off-TPU the kernel runs in interpret mode (auto-detected), so the sharded
+fleet path is testable on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams
+
+DEFAULT_BN = 128     # level-block width (lane dimension)
+
+
+def _scan_kernel(
+    base_ref, a_ref,            # scalar prefetch (SMEM): (1,), (T + max_h,)
+    m_ref,                      # (1 | T, BN) f32 wait thresholds
+    o_ref,                      # (T, BN) int32 on-matrix block
+    *, T: int, bn: int, horizon: int, time_varying: bool,
+):
+    blk = pl.program_id(0)
+    levels = base_ref[0] + blk * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+
+    def body(t, carry):
+        r, on, wait = carry                         # (1, BN) f32, bool, f32
+        busy = a_ref[t] > levels
+        on = on | busy                              # dispatcher turn-on
+        r = jnp.where(busy, 0.0, r)
+        idle = on & ~busy
+        if time_varying:
+            wait = jnp.where(idle & (r == 0.0), m_ref[pl.ds(t, 1), :], wait)
+        r = jnp.where(idle, r + 1.0, r)
+        seen = jnp.zeros_like(busy)
+        for h in range(horizon):                    # static unroll, <= Delta
+            seen = seen | (a_ref[t + 1 + h] > levels)
+        off_now = idle & (r - 1.0 >= wait) & ~seen
+        on = on & ~off_now
+        r = jnp.where(off_now, 0.0, r)
+        o_ref[pl.ds(t, 1), :] = on.astype(jnp.int32)
+        return (r, on, wait)
+
+    init = (
+        jnp.zeros((1, bn), jnp.float32),
+        jnp.zeros((1, bn), jnp.bool_),              # x(0) = a(0): busy turns it on
+        jnp.zeros((1, bn), jnp.float32) if time_varying else m_ref[pl.ds(0, 1), :],
+    )
+    jax.lax.fori_loop(0, T, body, init)
+
+
+def provision_scan(
+    a: jax.Array,               # (T,) int32 demand per slot
+    thresholds: jax.Array,      # (N,) constant waits or (T, N) sampled waits
+    *,
+    delta: int,
+    horizon: int,               # peek slots: min(w+1, delta), 0 = no peek
+    base_level: jax.Array | int = 0,
+    block_levels: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(T, N) bool on-matrix for levels [base_level, base_level + N)."""
+    a = jnp.asarray(a, jnp.int32)
+    T = a.shape[0]
+    max_h = int(delta)
+    assert 0 <= horizon <= max_h, (horizon, delta)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    time_varying = thresholds.ndim == 2
+    n = thresholds.shape[-1]
+    bn = block_levels
+    n_padded = -(-n // bn) * bn
+    pad_n = n_padded - n
+    m2d = thresholds if time_varying else thresholds[None, :]
+    if pad_n:
+        m2d = jnp.pad(m2d, ((0, 0), (0, pad_n)))
+    a_pad = jnp.concatenate([a, jnp.zeros((max_h,), jnp.int32)])
+    base = jnp.asarray(base_level, jnp.int32).reshape((1,))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _scan_kernel, T=T, bn=bn, horizon=horizon, time_varying=time_varying
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_padded // bn,),
+        in_specs=[
+            pl.BlockSpec((m2d.shape[0], bn), lambda i, base, ap: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((T, bn), lambda i, base, ap: (0, i)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, n_padded), jnp.int32),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(base, a_pad, m2d)
+    return out[:, :n].astype(bool)

@@ -1,9 +1,15 @@
 """Serving: per-replica engines + the paper's autoscaler + cluster simulation."""
-from .autoscaler import ReplicaAutoscaler, ScalerReport, replica_cost_model
+from .autoscaler import (
+    FleetProvisioner,
+    ReplicaAutoscaler,
+    ScalerReport,
+    replica_cost_model,
+)
 from .cluster import ClusterReport, make_window_max_predictor, run_cluster
 from .engine import GenerationResult, InferenceEngine
 
 __all__ = [
+    "FleetProvisioner",
     "ReplicaAutoscaler",
     "ScalerReport",
     "replica_cost_model",

@@ -11,6 +11,14 @@ Maps the paper's algorithms onto model-serving replicas:
   * the peek uses only the LIFO structure: a replica at stack depth p is
     popped iff predicted concurrency exceeds busy_now + p (paper Sec. IV-B).
 
+Two front-ends share the math:
+
+  * :class:`ReplicaAutoscaler` — event-driven, reacts live to session
+    arrivals/departures (the serving cluster's control loop);
+  * :class:`FleetProvisioner` — slot-based capacity planning on the batched
+    jitted engine (:mod:`repro.core.jax_provision`): many fleets' demand
+    traces, any policy, and a whole α-sweep evaluate as one device program.
+
 Delta = (beta_on + beta_off)/P with beta_on the replica spin-up cost
 (weight load + compile, amortized) — see ``replica_cost_model``.
 """
@@ -183,6 +191,96 @@ class ReplicaAutoscaler:
 
     def n_on(self) -> int:
         return sum(1 for r in self.replicas if r.state != "off")
+
+
+class FleetProvisioner:
+    """Slot-based capacity planner on the batched jitted provisioning engine.
+
+    Where :class:`ReplicaAutoscaler` reacts to one fleet's live events, this
+    planner takes per-slot (predicted) session concurrency for B fleets at
+    once — shape ``(T,)`` or ``(B, T)`` — and returns the per-slot replica
+    counts x(t) a policy would run, entirely on-device.  ``plan_sweep`` /
+    ``sweep_costs`` evaluate every prediction window in one program, which
+    is how an operator picks α for a fleet (paper Fig. 4b as a planning
+    tool).  Randomized policies need an explicit PRNG ``key``.
+    """
+
+    def __init__(
+        self,
+        costs: CostModel,
+        policy: str = "A1",
+        window: int = 0,
+        max_replicas: int = 1024,
+        key=None,
+    ):
+        from repro.core.jax_provision import RANDOMIZED
+
+        self.costs = costs
+        self.policy = policy
+        self.window = int(window)
+        self.max_replicas = int(max_replicas)
+        if policy in RANDOMIZED and key is None:
+            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
+        self.key = key
+        self._delta = int(round(costs.delta))
+
+    def plan(self, demand, predicted=None) -> np.ndarray:
+        """x(t) replica counts: (T,) -> (T,) or (B, T) -> (B, T) int32."""
+        from repro.core.jax_provision import provision_schedule
+
+        a = self._as_i32(demand)
+        x = provision_schedule(
+            a,
+            n_levels=self.max_replicas,
+            delta=self._delta,
+            window=self.window,
+            policy=self.policy,
+            predicted=None if predicted is None else self._as_i32(predicted),
+            key=self.key,
+        )
+        return np.asarray(x)
+
+    def plan_sweep(self, demand, windows) -> np.ndarray:
+        """x over an α-sweep: (W, T) or (W, B, T) for windows (W,)."""
+        from repro.core.jax_provision import provision_sweep
+
+        return np.asarray(
+            provision_sweep(
+                self._as_i32(demand),
+                n_levels=self.max_replicas,
+                delta=self._delta,
+                windows=np.asarray(windows, np.int32),
+                policy=self.policy,
+                key=self.key,
+            )
+        )
+
+    def sweep_costs(self, demand, windows) -> np.ndarray:
+        """Schedule costs over an α-sweep: (W,) or (W, B)."""
+        from repro.core.jax_provision import provision_sweep_costs
+
+        return np.asarray(
+            provision_sweep_costs(
+                self._as_i32(demand),
+                n_levels=self.max_replicas,
+                delta=self._delta,
+                windows=np.asarray(windows, np.int32),
+                policy=self.policy,
+                key=self.key,
+                P=self.costs.P,
+                beta_on=self.costs.beta_on,
+                beta_off=self.costs.beta_off,
+            )
+        )
+
+    def _as_i32(self, demand):
+        import jax.numpy as jnp
+
+        a = jnp.asarray(np.asarray(demand), jnp.int32)
+        peak = int(np.asarray(demand).max())
+        if peak > self.max_replicas:
+            raise ValueError(f"demand peak {peak} exceeds max_replicas {self.max_replicas}")
+        return a
 
 
 def replica_cost_model(

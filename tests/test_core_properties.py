@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for the provisioning core invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -4,13 +4,28 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import CostModel, fluid_cost, fluid_scan, msr_like_trace
+from repro.core import (
+    A2Randomized,
+    A3Randomized,
+    A1Deterministic,
+    CostModel,
+    brick_trace_from_fluid,
+    fluid_cost,
+    fluid_scan,
+    msr_like_trace,
+    simulate,
+)
 from repro.core.jax_provision import (
     _level_schedule,
+    _uniforms,
+    _waits_from_uniforms,
     provision_cost,
     provision_schedule,
     provision_schedule_sharded,
+    provision_sweep,
+    provision_sweep_costs,
 )
+from repro.kernels.provision_scan import provision_scan
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
 B = int(COSTS.delta)
@@ -49,6 +64,181 @@ def test_a1_jax_cost_matches_numpy_cost():
                                     COSTS.beta_on, COSTS.beta_off))
         want = fluid_scan(a, "A1", COSTS, window=w).cost
         assert cost == pytest.approx(want, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-policy engine: A2/A3, batching, sweep, Pallas scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["A2", "A3"])
+@pytest.mark.parametrize("window", [0, 2, 4])
+def test_randomized_jax_matches_fluid_scan_in_expectation(policy, window):
+    """Jitted A2/A3 mean cost over keys == numpy slot-scan mean over seeds."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 6, size=60)
+    n = int(a.max()) + 1
+    runs = 300
+    ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
+    costs = provision_sweep_costs(
+        ab, n_levels=n, delta=B, windows=jnp.array([window]), policy=policy,
+        key=jax.random.key(7),
+        P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
+    )
+    jit_mean = float(jnp.mean(costs[0]))
+    ref_mean = np.mean([
+        fluid_scan(a, policy, COSTS, window=window,
+                   rng=np.random.default_rng(r)).cost
+        for r in range(runs)
+    ])
+    assert jit_mean == pytest.approx(ref_mean, rel=0.02)
+
+
+@pytest.mark.parametrize("policy,cls", [("A2", A2Randomized), ("A3", A3Randomized)])
+@pytest.mark.parametrize("window", [0, 2, 4])
+def test_randomized_jax_matches_event_simulator_in_expectation(policy, cls, window):
+    """Jitted A2/A3 match core/online.py brick-simulator costs in expectation.
+
+    The fluid (slot) and brick (continuous) models differ by a fixed
+    discretization factor; deterministic A1 measures it exactly, and the
+    randomized policies must sit at the same factor within sampling noise.
+    """
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 6, size=80)
+    n = int(a.max()) + 1
+    alpha = min(1.0, (window + 1) / COSTS.delta)
+    tr = brick_trace_from_fluid(a)
+
+    calibration = (
+        fluid_scan(a, "A1", COSTS, window=window).cost
+        / simulate(tr, A1Deterministic(alpha=alpha), COSTS).cost
+    )
+    runs = 300
+    ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
+    costs = provision_sweep_costs(
+        ab, n_levels=n, delta=B, windows=jnp.array([window]), policy=policy,
+        key=jax.random.key(3),
+        P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
+    )
+    jit_mean = float(jnp.mean(costs[0]))
+    brick_mean = np.mean([
+        simulate(tr, cls(alpha=alpha), COSTS, rng=np.random.default_rng(r)).cost
+        for r in range(150)
+    ])
+    assert jit_mean / brick_mean == pytest.approx(calibration, rel=0.05)
+
+
+@pytest.mark.parametrize("policy", ["A1", "A3", "delayedoff", "offline"])
+def test_batched_matches_unbatched(policy):
+    """(B, T) demand == stacking per-trace (T,) schedules (split keys)."""
+    rng = np.random.default_rng(2)
+    n_traces = 5
+    ab = jnp.asarray(rng.integers(0, 7, size=(n_traces, 60)), jnp.int32)
+    key = jax.random.key(11)
+    kw = dict(n_levels=7, delta=B, window=2, policy=policy)
+    if policy in ("A2", "A3"):
+        kw["key"] = key
+    xb = provision_schedule(ab, **kw)
+    keys = jax.random.split(key, n_traces)
+    for i in range(n_traces):
+        if policy in ("A2", "A3"):
+            kw["key"] = keys[i]
+        xi = provision_schedule(ab[i], **kw)
+        np.testing.assert_array_equal(np.asarray(xb[i]), np.asarray(xi))
+
+
+def test_sweep_matches_individual_windows():
+    """provision_sweep over W windows == W separate A1 schedules."""
+    a = jnp.asarray(msr_like_trace(np.random.default_rng(5), n_slots=200,
+                                   mean_jobs=10.0), jnp.int32)
+    n = int(a.max()) + 1
+    xs = provision_sweep(a, n_levels=n, delta=B, windows=jnp.arange(B),
+                         policy="A1")
+    for w in range(B):
+        want = provision_schedule(a, n_levels=n, delta=B, window=w, policy="A1")
+        np.testing.assert_array_equal(np.asarray(xs[w]), np.asarray(want))
+
+
+def test_sweep_matches_single_schedule_randomized():
+    """For a (T,) trace, sweep and single-window calls share the key stream."""
+    rng = np.random.default_rng(14)
+    a = jnp.asarray(rng.integers(0, 6, size=60), jnp.int32)
+    key = jax.random.key(21)
+    xs = provision_sweep(a, n_levels=6, delta=B, windows=jnp.arange(3),
+                         policy="A3", key=key)
+    for w in range(3):
+        want = provision_schedule(a, n_levels=6, delta=B, window=w,
+                                  policy="A3", key=key)
+        np.testing.assert_array_equal(np.asarray(xs[w]), np.asarray(want))
+
+
+def test_randomized_requires_key():
+    a = jnp.zeros((10,), jnp.int32)
+    with pytest.raises(ValueError, match="randomized"):
+        provision_schedule(a, n_levels=4, delta=B, policy="A2")
+
+
+def test_delayedoff_jax_matches_numpy_scan():
+    rng = np.random.default_rng(6)
+    a = rng.integers(0, 8, size=80)
+    want = fluid_scan(a, "delayedoff", COSTS)
+    got = provision_schedule(jnp.asarray(a, jnp.int32),
+                             n_levels=int(a.max()) + 1, delta=B,
+                             policy="delayedoff")
+    np.testing.assert_array_equal(np.asarray(got), want.x)
+
+
+@pytest.mark.parametrize("window", [0, 2, 5])
+def test_pallas_scan_matches_scan_engine(window):
+    """Fused Pallas kernel (interpret mode) == lax.scan engine, exactly."""
+    rng = np.random.default_rng(8)
+    a = rng.integers(0, 9, size=90)
+    n = int(a.max()) + 1
+    aj = jnp.asarray(a, jnp.int32)
+    horizon = int(min(window + 1, B))
+    # deterministic thresholds (A1)
+    m = max(0.0, B - window - 1)
+    want = _level_schedule(aj, n, B, window, "A1")
+    got = provision_scan(aj, jnp.full((n,), m, jnp.float32), delta=B,
+                         horizon=horizon)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # sampled wait table (A2) — same table through both paths
+    key = jax.random.key(9)
+    u0, u = _uniforms(key, len(a), n)
+    waits = _waits_from_uniforms("A2", u0, u, window, B)
+    want = _level_schedule(aj, n, B, window, "A2", key=key)
+    got = provision_scan(aj, waits, delta=B, horizon=horizon)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sharded_randomized_matches_unsharded():
+    """Sharded Pallas path (1 device => same key stream) == jitted engine."""
+    rng = np.random.default_rng(10)
+    a = jnp.asarray(rng.integers(0, 6, size=70), jnp.int32)
+    n = 6
+    key = jax.random.key(12)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    if len(jax.devices()) > 1:
+        pytest.skip("key-stream equality only holds unsharded")
+    got = provision_schedule_sharded(mesh, a, n_levels=n, delta=B, window=2,
+                                     policy="A3", key=key)
+    want = provision_schedule(a, n_levels=n, delta=B, window=2, policy="A3",
+                              key=key)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_batched_cost_matches_per_trace_cost():
+    rng = np.random.default_rng(13)
+    ab = rng.integers(0, 6, size=(4, 50))
+    ons = np.stack([
+        np.asarray(_level_schedule(jnp.asarray(ai, jnp.int32), 6, B, 1, "A1"))
+        for ai in ab
+    ])
+    batched = provision_cost(jnp.asarray(ab), jnp.asarray(ons),
+                             COSTS.P, COSTS.beta_on, COSTS.beta_off)
+    for i in range(4):
+        single = provision_cost(jnp.asarray(ab[i]), jnp.asarray(ons[i]),
+                                COSTS.P, COSTS.beta_on, COSTS.beta_off)
+        assert float(batched[i]) == pytest.approx(float(single))
 
 
 def test_sharded_fleet_matches_single_device():
