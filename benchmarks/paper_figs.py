@@ -1,9 +1,10 @@
 """Paper-figure benchmarks: one function per table/figure (Section V).
 
-Fig. 3 and Fig. 4b run on the batched jitted engine: each policy's whole
-(runs x alpha) grid is ONE device program (`provision_sweep_costs`) instead
-of a Python loop per (trace, policy, alpha) triple.  LCP keeps the
-closed-form numpy path (it is not one of the paper's ski-rental policies).
+Fig. 3 and Fig. 4b run on the declarative jitted engine: each policy's
+whole (runs x alpha) grid is ONE device program (`provision` with a
+`PolicySpec(windows=...)` sweep) instead of a Python loop per (trace,
+policy, alpha) triple.  LCP keeps the closed-form numpy path (it is not
+one of the paper's ski-rental policies).
 """
 from __future__ import annotations
 
@@ -16,17 +17,18 @@ import numpy as np
 from repro.core import (
     RANDOMIZED_POLICIES,
     CostModel,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
     fluid_cost,
-    fluid_scan,
     msr_like_trace,
-    provision_sweep_costs,
+    provision,
     scale_to_pmr,
     theoretical_ratio,
     with_prediction_error,
 )
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)   # Delta = 6, paper Sec. V-A
-DELTA = int(COSTS.delta)
 
 
 def _trace():
@@ -47,14 +49,19 @@ def _sweep_mean_costs(a: np.ndarray, policy: str, windows, runs: int, seed: int 
     """
     n_levels = int(a.max()) + 1
     ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
+    spec = ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=ab),
+        policy=PolicySpec(
+            policy,
+            windows=jnp.asarray(windows, jnp.int32),
+            key=jax.random.key(seed) if policy in RANDOMIZED_POLICIES else None,
+        ),
+        n_levels=n_levels,
+    )
 
     def once():
-        return jax.block_until_ready(provision_sweep_costs(
-            ab, n_levels=n_levels, delta=DELTA,
-            windows=jnp.asarray(windows, jnp.int32), policy=policy,
-            key=jax.random.key(seed) if policy in RANDOMIZED_POLICIES else None,
-            P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
-        ))
+        return jax.block_until_ready(provision(spec).cost)
 
     costs = once()
     t0 = time.perf_counter()
@@ -105,21 +112,35 @@ def fig4b_cost_reduction_vs_window(rows: list[str]) -> None:
 
 
 def fig4c_prediction_error(rows: list[str]) -> None:
-    """Fig. 4c: robustness to zero-mean Gaussian prediction error."""
+    """Fig. 4c: robustness to zero-mean Gaussian prediction error.
+
+    The engine consumes a distinct ``predicted`` trace per replica, so the
+    whole (replicas x error-std) study is batched device programs; parity
+    of the predicted-trace path against the numpy ``fluid_scan`` reference
+    is covered by tests/test_jax_provision.py.
+    """
     a = _trace()
     static = fluid_cost(a, "static", COSTS).cost
     rng = np.random.default_rng(7)
+    runs = 10
+    ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
     for w in (2, 4):
         for std in (0.0, 0.1, 0.25, 0.5):
-            costs = []
+            preds = jnp.asarray(
+                np.stack([with_prediction_error(a, rng, std) for _ in range(runs)]),
+                jnp.int32,
+            )
+            spec = ProvisionSpec(
+                costs=COSTS,
+                workload=Workload(demand=ab, predicted=preds),
+                policy=PolicySpec("A1", window=w),
+                n_levels=int(a.max()) + 1,
+            )
+            jax.block_until_ready(provision(spec).cost)       # warm the jit cache
             t0 = time.perf_counter()
-            for r in range(10):
-                pred = with_prediction_error(a, rng, std)
-                costs.append(
-                    fluid_scan(a, "A1", COSTS, window=w, predicted=pred).cost
-                )
-            us = (time.perf_counter() - t0) * 1e6 / 10
-            red = 1 - float(np.mean(costs)) / static
+            costs = jax.block_until_ready(provision(spec).cost)
+            us = (time.perf_counter() - t0) * 1e6 / runs
+            red = 1 - float(jnp.mean(costs)) / static
             rows.append(
                 f"fig4c_A1_w{w}_std{int(std * 100)},{us:.1f},reduction={red:.4f}"
             )

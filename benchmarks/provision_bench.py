@@ -1,9 +1,19 @@
-"""Provisioning-engine benchmarks: throughput of the batched jitted fleet
-provisioner (traces x alpha-sweep x levels as one device program), the fused
-Pallas scan path, and the event-driven brick simulator (cluster-controller
-capacity)."""
+"""Provisioning-engine benchmarks: throughput of the declarative jitted fleet
+provisioner (traces x alpha-sweep x levels as one `provision(spec)` program),
+the fused Pallas scan path, heterogeneous per-level cost models, and the
+event-driven brick simulator (cluster-controller capacity).
+
+Run standalone for the CI smoke leg:
+
+    PYTHONPATH=src python benchmarks/provision_bench.py --smoke
+
+The smoke run uses small shapes and additionally asserts that re-pricing a
+fleet (new CostModel values, same shapes/policy) does NOT grow the engine's
+jit cache — the spec's cost fields are pytree data, not compile keys.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -13,13 +23,13 @@ import numpy as np
 from repro.core import (
     RANDOMIZED_POLICIES,
     CostModel,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
     generate_brick_trace,
     msr_like_trace,
+    provision,
     simulate,
-)
-from repro.core.jax_provision import (
-    provision_schedule,
-    provision_sweep_costs,
 )
 from repro.core.ski_rental import A1Deterministic
 from repro.kernels.provision_scan import provision_scan
@@ -29,19 +39,30 @@ DELTA = int(COSTS.delta)
 N_SLOTS = 1008
 
 
-def _trace(n_levels: int, seed: int = 0) -> np.ndarray:
+def _trace(n_levels: int, seed: int = 0, n_slots: int = N_SLOTS) -> np.ndarray:
     return msr_like_trace(
-        np.random.default_rng(seed), mean_jobs=n_levels / 4.0, n_slots=N_SLOTS
+        np.random.default_rng(seed), mean_jobs=n_levels / 4.0, n_slots=n_slots
     )
 
 
-def jax_provisioner_throughput(rows: list[str]) -> None:
+def _spec(a, n_levels, policy="A1", windows=None, costs=COSTS, key=None):
+    return ProvisionSpec(
+        costs=costs,
+        workload=Workload(demand=jnp.asarray(a, jnp.int32)),
+        policy=PolicySpec(
+            policy, window=2, windows=windows,
+            key=key if policy in RANDOMIZED_POLICIES else None,
+        ),
+        n_levels=n_levels,
+    )
+
+
+def jax_provisioner_throughput(rows: list[str], sizes=(64, 512, 4096)) -> None:
     """Single-trace A1 path (the serving autoscaler's hot loop)."""
-    for n_levels in (64, 512, 4096):
-        a = jnp.asarray(_trace(n_levels), jnp.int32)
-        fn = lambda: provision_schedule(
-            a, n_levels=n_levels, delta=DELTA, window=2, policy="A1"
-        )
+    for n_levels in sizes:
+        a = _trace(n_levels)
+        spec = _spec(a, n_levels)
+        fn = lambda: provision(spec).x
         jax.block_until_ready(fn())
         t0 = time.perf_counter()
         for _ in range(5):
@@ -49,40 +70,52 @@ def jax_provisioner_throughput(rows: list[str]) -> None:
         us = (time.perf_counter() - t0) / 5 * 1e6
         rows.append(
             f"jax_provision_levels{n_levels},{us:.1f},"
-            f"slots={N_SLOTS};decisions_per_s={n_levels * N_SLOTS / (us / 1e6):.3e}"
+            f"slots={len(a)};decisions_per_s={n_levels * len(a) / (us / 1e6):.3e}"
         )
 
 
-def batched_sweep_throughput(rows: list[str]) -> None:
+def batched_sweep_throughput(rows: list[str], n_levels=256, n_traces=32) -> None:
     """The batched engine: (traces x alpha values x levels) per second."""
-    n_levels = 256
     n_windows = DELTA
     windows = jnp.arange(n_windows, dtype=jnp.int32)
-    for policy, n_traces in (("A1", 32), ("A3", 32)):
-        a = jnp.asarray(
-            np.stack([_trace(n_levels, seed=s) for s in range(n_traces)]), jnp.int32
-        )
-        key = jax.random.key(0)
-        fn = lambda: provision_sweep_costs(
-            a, n_levels=n_levels, delta=DELTA, windows=windows, policy=policy,
-            key=key if policy in RANDOMIZED_POLICIES else None,
-            P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
-        )
+    for policy in ("A1", "A3"):
+        a = np.stack([_trace(n_levels, seed=s) for s in range(n_traces)])
+        spec = _spec(a, n_levels, policy, windows=windows, key=jax.random.key(0))
+        fn = lambda: provision(spec).cost
         jax.block_until_ready(fn())
         t0 = time.perf_counter()
         for _ in range(3):
             jax.block_until_ready(fn())
         us = (time.perf_counter() - t0) / 3 * 1e6
-        cells = n_traces * n_windows * n_levels * N_SLOTS
+        cells = n_traces * n_windows * n_levels * a.shape[1]
         rows.append(
             f"batched_sweep_{policy}_b{n_traces}_w{n_windows}_n{n_levels},{us:.1f},"
             f"decisions_per_s={cells / (us / 1e6):.3e}"
         )
 
 
-def pallas_scan_throughput(rows: list[str]) -> None:
+def heterogeneous_throughput(rows: list[str], n_levels=256) -> None:
+    """Per-level cost arrays (two server classes) vs the scalar model."""
+    a = _trace(n_levels)
+    beta = np.where(np.arange(n_levels) < n_levels // 2, 4.5, 1.5)
+    het = CostModel(P=1.0, beta_on=beta, beta_off=beta)
+    for tag, costs in (("homog", COSTS), ("hetero", het)):
+        spec = _spec(a, n_levels, costs=costs)
+        fn = lambda: provision(spec).cost
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append(
+            f"provision_{tag}_n{n_levels},{us:.1f},"
+            f"decisions_per_s={n_levels * len(a) / (us / 1e6):.3e}"
+        )
+
+
+def pallas_scan_throughput(rows: list[str], sizes=(512, 4096)) -> None:
     """Fused Pallas per-level scan (interpret mode off-TPU)."""
-    for n_levels in (512, 4096):
+    for n_levels in sizes:
         a = jnp.asarray(_trace(n_levels), jnp.int32)
         thresholds = jnp.full((n_levels,), float(DELTA - 3), jnp.float32)
         fn = jax.jit(
@@ -96,7 +129,7 @@ def pallas_scan_throughput(rows: list[str]) -> None:
         mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
         rows.append(
             f"pallas_scan_{mode}_levels{n_levels},{us:.1f},"
-            f"decisions_per_s={n_levels * N_SLOTS / (us / 1e6):.3e}"
+            f"decisions_per_s={n_levels * a.shape[0] / (us / 1e6):.3e}"
         )
 
 
@@ -112,8 +145,58 @@ def brick_simulator_throughput(rows: list[str]) -> None:
     )
 
 
+def jit_cache_reuse(rows: list[str]) -> None:
+    """Re-pricing the fleet must hit the compiled program, not rebuild it.
+
+    The spec's cost fields are pytree leaves; only (policy, shapes, Δ's
+    static scan bound) key the jit cache.  A regression here (e.g. a field
+    accidentally made a meta/static) blows the cache up per price point.
+    """
+    from repro.core.jax_provision import _run
+
+    if not hasattr(_run, "_cache_size"):      # private JAX API; skip if gone
+        rows.append("jit_cache_repricing,0.0,skipped=no_cache_size_api")
+        return
+    a = _trace(32, n_slots=160)
+    before = _run._cache_size()
+    # vary the price point but keep ceil(max Delta) fixed (it IS a shape key)
+    for beta in (2.6, 2.75, 2.9, 3.0):
+        spec = _spec(a, 32, costs=CostModel(P=1.0, beta_on=beta, beta_off=beta))
+        jax.block_until_ready(provision(spec).cost)
+    grew = _run._cache_size() - before
+    assert grew <= 1, f"jit cache grew by {grew} entries across re-pricings"
+    rows.append(f"jit_cache_repricing,0.0,entries_added={grew}")
+
+
 def run(rows: list[str]) -> None:
     jax_provisioner_throughput(rows)
     batched_sweep_throughput(rows)
+    heterogeneous_throughput(rows)
     pallas_scan_throughput(rows)
     brick_simulator_throughput(rows)
+    jit_cache_reuse(rows)
+
+
+def run_smoke(rows: list[str]) -> None:
+    """CI leg: small shapes, every code path, plus the jit-cache assertion."""
+    jax_provisioner_throughput(rows, sizes=(64,))
+    batched_sweep_throughput(rows, n_levels=32, n_traces=4)
+    heterogeneous_throughput(rows, n_levels=32)
+    pallas_scan_throughput(rows, sizes=(128,))
+    jit_cache_reuse(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + jit-cache assertion (CI)")
+    args = ap.parse_args()
+    rows: list[str] = []
+    (run_smoke if args.smoke else run)(rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

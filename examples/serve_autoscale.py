@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import RANDOMIZED_POLICIES, CostModel
+from repro.core import RANDOMIZED_POLICIES, CostModel, PolicySpec
 from repro.data.requests import generate_sessions
 from repro.models import init_params
 from repro.serving import (
@@ -66,8 +66,12 @@ def main() -> None:
     print("\nplanned cost by policy/window (batched engine, one program each):")
     for policy in ("A1", "A3"):
         planner = FleetProvisioner(
-            COSTS, policy=policy, max_replicas=int(demand.max()) + 1,
-            key=jax.random.key(0) if policy in RANDOMIZED_POLICIES else None,
+            COSTS,
+            policy=PolicySpec(
+                policy,
+                key=jax.random.key(0) if policy in RANDOMIZED_POLICIES else None,
+            ),
+            max_replicas=int(demand.max()) + 1,
         )
         costs = planner.sweep_costs(demand, windows)
         best = int(np.argmin(costs))

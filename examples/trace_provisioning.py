@@ -1,6 +1,7 @@
 """Paper experiments, interactive: competitive ratios, PMR sweep, and the
-fleet-scale jitted provisioner (batched multi-policy engine + Pallas scan,
-levels sharded over the mesh via shard_map).
+fleet-scale declarative provisioner (one `provision(spec)` program per
+policy — batching, α-sweep, heterogeneous per-level costs, and shard_map
+level sharding through the Pallas scan are all spec fields).
 
     PYTHONPATH=src python examples/trace_provisioning.py
 """
@@ -10,16 +11,18 @@ import numpy as np
 
 from repro.core import (
     CostModel,
+    PAPER_COSTS,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
     fluid_cost,
     msr_like_trace,
-    provision_schedule,
-    provision_schedule_sharded,
-    provision_sweep_costs,
+    provision,
     scale_to_pmr,
     theoretical_ratio,
 )
 
-COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+COSTS = PAPER_COSTS                       # P = 1, beta 3/3 => Delta = 6
 DELTA = int(COSTS.delta)
 
 
@@ -30,18 +33,23 @@ def main() -> None:
 
     # --- Fig. 3: worst-case vs empirical ratios over alpha — the whole
     # (runs x alpha) grid per policy is ONE jitted device program.
-    print("Fig.3 — competitive ratios (Delta = 6, batched engine):")
+    print("Fig.3 — competitive ratios (Delta = 6, declarative engine):")
     print(f"{'alpha':>6} {'A1 bound':>9} {'A1 emp':>8} {'A3 bound':>9} {'A3 emp':>8}")
     opt = fluid_cost(trace, "offline", COSTS).cost
-    cost_kw = dict(P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off)
-    a1 = np.asarray(provision_sweep_costs(
-        jnp.asarray(trace, jnp.int32), n_levels=n_levels, delta=DELTA,
-        windows=windows, policy="A1", **cost_kw)) / opt
+    a1 = np.asarray(provision(ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=jnp.asarray(trace, jnp.int32)),
+        policy=PolicySpec("A1", windows=windows),
+        n_levels=n_levels,
+    )).cost) / opt
     runs = 20
     batch = jnp.asarray(np.tile(trace, (runs, 1)), jnp.int32)
-    a3 = np.asarray(provision_sweep_costs(
-        batch, n_levels=n_levels, delta=DELTA, windows=windows, policy="A3",
-        key=jax.random.key(0), **cost_kw)).mean(axis=1) / opt
+    a3 = np.asarray(provision(ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=batch),
+        policy=PolicySpec("A3", windows=windows, key=jax.random.key(0)),
+        n_levels=n_levels,
+    )).cost).mean(axis=1) / opt
     for i, w in enumerate(range(DELTA)):
         alpha = min(1.0, (w + 1) / COSTS.delta)
         print(f"{alpha:>6.2f} {theoretical_ratio('A1', alpha):>9.3f} {a1[i]:>8.3f} "
@@ -57,22 +65,48 @@ def main() -> None:
         op = fluid_cost(a, "offline", COSTS).cost
         print(f"  PMR={target:>2}: reduction {1 - op / st:6.1%}")
 
-    # --- fleet-scale jitted provisioner
+    # --- heterogeneous fleet: the bottom of the LIFO stack is cheap-to-idle
+    # baseload (big Delta), the top is bursty spot capacity (small Delta) —
+    # one (n_levels,) CostModel, same single program.
+    print("\nHeterogeneous fleet (per-level Delta, one provision(spec) call):")
+    frac_base = 0.5
+    n_base = int(n_levels * frac_base)
+    beta = np.where(np.arange(n_levels) < n_base, 4.5, 1.5)   # Delta 9 / 3
+    het = CostModel(P=1.0, beta_on=beta, beta_off=beta)
+    res = provision(ProvisionSpec(
+        costs=het,
+        workload=Workload(demand=jnp.asarray(trace, jnp.int32)),
+        policy=PolicySpec("A1", window=2),
+    ))
+    lc = np.asarray(res.level_cost)
+    print(f"  total={float(res.cost):,.0f}  energy={float(res.energy):,.0f} "
+          f"toggles={float(res.toggle_cost):,.0f}")
+    print(f"  baseload levels (Delta=9): {lc[:n_base].sum():,.0f}; "
+          f"spot levels (Delta=3): {lc[n_base:].sum():,.0f}")
+
+    # --- fleet-scale: same spec, levels sharded over the mesh (Pallas scan)
     print("\nJAX fleet provisioner (jit + shard_map over levels, Pallas scan):")
     a = jnp.asarray(trace, jnp.int32)
-    x = provision_schedule(a, n_levels=n_levels, delta=DELTA, window=2,
-                           policy="A1")
-    print(f"  A1 x(t): max={int(x.max())}, mean={float(x.mean()):.1f} "
+    spec = ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=a),
+        policy=PolicySpec("A1", window=2),
+        n_levels=n_levels,
+    )
+    res = provision(spec)
+    print(f"  A1 x(t): max={int(res.x.max())}, mean={float(res.x.mean()):.1f} "
           f"(demand mean {trace.mean():.1f})")
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    xs = provision_schedule_sharded(mesh, a, n_levels=n_levels, delta=DELTA,
-                                    window=2)
-    assert (np.asarray(x) == np.asarray(xs)).all()
+    import dataclasses
+    res_sh = provision(dataclasses.replace(spec, mesh=mesh))
+    assert (np.asarray(res.x) == np.asarray(res_sh.x)).all()
     print(f"  sharded over {len(jax.devices())} device(s): identical schedule ✓")
-    x3 = provision_schedule_sharded(mesh, a, n_levels=n_levels, delta=DELTA,
-                                    window=2, policy="A3", key=jax.random.key(1))
-    print(f"  A3 (randomized, sharded Pallas scan): max={int(x3.max())}, "
-          f"mean={float(x3.mean()):.1f}")
+    res3 = provision(dataclasses.replace(
+        spec, mesh=mesh,
+        policy=PolicySpec("A3", window=2, key=jax.random.key(1)),
+    ))
+    print(f"  A3 (randomized, sharded Pallas scan): max={int(res3.x.max())}, "
+          f"mean={float(res3.x.mean()):.1f}")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,41 @@
 """The paper's contribution: power-proportional dynamic provisioning.
 
 Public API:
+  * Declarative provisioning: ``provision(ProvisionSpec(...))`` with
+    ``CostModel`` (scalar or per-level), ``Workload``, ``PolicySpec``,
+    ``PredictionNoise`` — returns a ``ProvisionResult``.
   * Brick (continuous-time) model: ``BrickTrace``, ``simulate`` (online),
     ``a0_schedule``/``a0_cost``/``optimal_schedule_constructed`` (offline),
     ``critical_segments``.
   * Fluid (discrete-time) model: ``fluid_cost``, ``fluid_scan``.
   * Policies: ``A1Deterministic``, ``A2Randomized``, ``A3Randomized``.
   * Validation: ``dp_optimal_cost``.
+
+The loose-kwargs ``provision_schedule``/``provision_sweep[_costs]``/
+``provision_cost``/``provision_schedule_sharded`` functions are deprecated
+wrappers around ``provision``.
 """
 from .costs import PAPER_COSTS, CostModel, schedule_cost
 from .dp_oracle import dp_optimal_cost
 from .events import BrickTrace, Job, generate_brick_trace, trace_from_intervals
 from .fluid import FluidResult, fluid_cost, fluid_scan
 from .jax_provision import (
+    POLICIES,
     RANDOMIZED as RANDOMIZED_POLICIES,
+    on_matrix_cost,
     provision_cost,
     provision_schedule,
     provision_schedule_sharded,
     provision_sweep,
     provision_sweep_costs,
+)
+from .provision import (
+    PolicySpec,
+    PredictionNoise,
+    ProvisionResult,
+    ProvisionSpec,
+    Workload,
+    provision,
 )
 from .offline import a0_cost, a0_schedule, optimal_cost, optimal_schedule_constructed
 from .online import SimResult, simulate
@@ -52,7 +69,15 @@ __all__ = [
     "FluidResult",
     "fluid_cost",
     "fluid_scan",
+    "POLICIES",
     "RANDOMIZED_POLICIES",
+    "PolicySpec",
+    "PredictionNoise",
+    "ProvisionResult",
+    "ProvisionSpec",
+    "Workload",
+    "provision",
+    "on_matrix_cost",
     "provision_cost",
     "provision_schedule",
     "provision_schedule_sharded",

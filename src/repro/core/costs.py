@@ -1,27 +1,87 @@
-"""Server-operation cost model (paper Section II-B, problem SCP)."""
+"""Server-operation cost model (paper Section II-B, problem SCP).
+
+``CostModel`` is JAX-native: ``P``/``beta_on``/``beta_off`` accept python
+scalars **or** ``(n_levels,)`` arrays, so one model describes either the
+paper's homogeneous fleet or a heterogeneous one (per-level server types,
+Albers & Quedenfeld, PAPERS.md).  The critical interval ``delta`` is always
+*derived* — Δ = (β_on + β_off) / P per level (paper eq. 12) — never passed
+separately.  The class is a registered pytree so specs built from it flow
+through ``jax.jit``/``vmap`` as data, not as static compile keys.
+"""
 from __future__ import annotations
 
 import dataclasses
+import math
+
+import jax
+import numpy as np
 
 from .stepfn import StepFn
 
+ArrayLike = "float | np.ndarray | jax.Array"
 
-@dataclasses.dataclass(frozen=True)
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class CostModel:
-    """P: energy per unit time per running server; beta_on/off: toggle costs."""
+    """P: energy per unit time per running server; beta_on/off: toggle costs.
 
-    P: float = 1.0
-    beta_on: float = 3.0
-    beta_off: float = 3.0
+    Each field is a scalar (homogeneous fleet) or an ``(n_levels,)`` array
+    (per-level server types); scalars broadcast against array fields.
+    """
+
+    P: "ArrayLike" = 1.0
+    beta_on: "ArrayLike" = 3.0
+    beta_off: "ArrayLike" = 3.0
 
     @property
-    def beta(self) -> float:
+    def beta(self):
         return self.beta_on + self.beta_off
 
     @property
-    def delta(self) -> float:
-        """Critical interval Delta = (beta_on + beta_off) / P  (paper eq. 12)."""
+    def delta(self):
+        """Critical interval Delta = (beta_on + beta_off) / P  (paper eq. 12).
+
+        Scalar for homogeneous models, ``(n_levels,)`` for heterogeneous.
+        """
         return self.beta / self.P
+
+    @property
+    def is_heterogeneous(self) -> bool:
+        return any(np.ndim(f) > 0 for f in (self.P, self.beta_on, self.beta_off))
+
+    @property
+    def n_levels(self) -> int | None:
+        """Fleet size the model pins down, or None for scalar models."""
+        sizes = {np.shape(f)[0] for f in (self.P, self.beta_on, self.beta_off)
+                 if np.ndim(f) > 0}
+        if not sizes:
+            return None
+        if len(sizes) > 1:
+            raise ValueError(f"inconsistent per-level field lengths: {sorted(sizes)}")
+        return int(sizes.pop())
+
+    def delta_slots(self) -> int:
+        """Static scan bound: ceil of the largest per-level Delta (slots)."""
+        return int(math.ceil(float(np.max(np.asarray(self.delta)))))
+
+    def per_level(self, n_levels: int):
+        """(P, beta_on, beta_off) broadcast to ``(n_levels,)`` float32 arrays."""
+        import jax.numpy as jnp
+
+        own = self.n_levels
+        if own is not None and own != n_levels:
+            raise ValueError(
+                f"cost model is pinned to {own} levels, asked for {n_levels}"
+            )
+        return tuple(
+            jnp.broadcast_to(jnp.asarray(f, jnp.float32), (n_levels,))
+            for f in (self.P, self.beta_on, self.beta_off)
+        )
+
+
+jax.tree_util.register_dataclass(
+    CostModel, data_fields=["P", "beta_on", "beta_off"], meta_fields=[]
+)
 
 
 #: The paper's experimental setting: P = 1, beta_on + beta_off = 6 => Delta = 6.
@@ -32,8 +92,11 @@ def schedule_cost(x: StepFn, costs: CostModel, *, final_level: float | None = No
     """Total cost of a schedule x(t): P * integral(x) + toggle costs.
 
     ``final_level``: if given, enforce the boundary x(T) = a(T) by charging the
-    final forced turn-off/on at T (paper eq. 5).
+    final forced turn-off/on at T (paper eq. 5).  Homogeneous models only —
+    a StepFn carries no per-level identity.
     """
+    if costs.is_heterogeneous:
+        raise ValueError("schedule_cost needs a homogeneous (scalar) CostModel")
     energy = costs.P * x.integral()
     up, down = x.switching()
     cost = energy + costs.beta_on * up + costs.beta_off * down

@@ -9,13 +9,24 @@ independent per-level computation, so the whole fleet is one vectorized
     ``offline`` (hindsight optimum, closed form) and ``delayedoff`` — with
     the randomized waits sampled per level via an explicit PRNG key,
     matching :mod:`repro.core.ski_rental` semantics;
+  * heterogeneous per-level cost models: ``Δ``, ``P`` and the toggle costs
+    may all be ``(n_levels,)`` arrays (one server type per level), with the
+    per-level critical interval driving waits, peek horizons and costs;
   * a leading batch axis over demand traces (``(B, T)`` demand, one subkey
     per trace) via ``vmap``;
   * a vectorized sweep axis over prediction windows (``α = (w+1)/Δ``) via
     ``vmap`` with common random numbers across the sweep, so a whole
     (traces × α × policies) competitive-ratio table is one device program;
   * a fused Pallas per-level scan (:mod:`repro.kernels.provision_scan`,
-    interpret-mode fallback off-TPU) used by the ``shard_map`` fleet path.
+    interpret-mode fallback off-TPU) used by the ``shard_map`` fleet path,
+    with a separate scalar-prefetched prediction trace.
+
+The public entrypoint is :func:`repro.core.provision.provision`, driven by a
+declarative :class:`~repro.core.provision.ProvisionSpec`.  The loose-kwargs
+functions that predate it (``provision_schedule``, ``provision_sweep``,
+``provision_sweep_costs``, ``provision_cost``,
+``provision_schedule_sharded``) remain as thin deprecated wrappers that
+forward to the same engine.
 
 Semantics mirror :func:`repro.core.fluid.fluid_scan` exactly (tested).
 
@@ -32,6 +43,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +54,18 @@ E = math.e
 
 POLICIES = ("A1", "A2", "A3", "offline", "delayedoff")
 RANDOMIZED = ("A2", "A3")
+
+
+def _check_policy(policy: str) -> None:
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown policy {policy!r}: valid policies are {POLICIES}"
+        )
+
+
+def _require_key(policy: str, key) -> None:
+    if key is None:
+        raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
 
 
 # ---------------------------------------------------------------------------
@@ -62,10 +86,12 @@ def _waits_from_uniforms(policy, u0, u, window, delta):
 
     A2: Z ~ e^{z/((1-α)Δ)} / ((e-1)(1-α)Δ) on [0, (1-α)Δ]  (inverse CDF).
     A3: atom at 0 w.p. α/(e-1+α), else A2's density (corrected atom, see
-    ski_rental.py).  Keeping the transform separate from the draws lets the
-    α-sweep share draws across windows.
+    ski_rental.py).  ``delta`` is a scalar or a per-level ``(N,)`` array —
+    heterogeneous fleets get a distinct α and span per level.  Keeping the
+    transform separate from the draws lets the α-sweep share draws across
+    windows.
     """
-    b = float(delta)
+    b = jnp.asarray(delta, jnp.float32)
     alpha = jnp.clip((jnp.asarray(window, jnp.float32) + 1.0) / b, 0.0, 1.0)
     span = (1.0 - alpha) * b
     waits = span * jnp.log1p(u * (E - 1.0))
@@ -79,21 +105,24 @@ def _waits_from_uniforms(policy, u0, u, window, delta):
 # The per-level slot scan (all online policies)
 # ---------------------------------------------------------------------------
 
-def _on_matrix_scan(a, pred, levels, *, delta, window, policy, waits=None):
+def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None):
     """(T, N) bool on-matrix via one lax.scan over slots.
 
-    ``window`` may be a python int or a traced scalar (the α-sweep vmaps
-    over it).  ``waits``: (T, N) sampled thresholds for A2/A3; the entry at
-    ``[t, l]`` is consumed iff level ``l`` becomes newly idle in slot ``t``.
+    ``delta`` is a scalar or per-level ``(N,)`` array of critical intervals;
+    ``max_h`` is the static peek bound (``ceil(max Δ)`` — the peek never
+    exceeds the largest critical interval).  ``window`` may be a python int
+    or a traced scalar (the α-sweep vmaps over it).  ``waits``: (T, N)
+    sampled thresholds for A2/A3; the entry at ``[t, l]`` is consumed iff
+    level ``l`` becomes newly idle in slot ``t``.
     """
     T = a.shape[0]
-    b = float(delta)
-    max_h = int(delta)              # the peek never exceeds the critical interval
+    n = levels.shape[0]
+    b = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
     pad = jnp.concatenate([pred, jnp.zeros((max_h,), pred.dtype)])
     w = jnp.asarray(window, jnp.float32)
     if policy == "delayedoff":      # timer Δ, no peek
-        horizon = jnp.float32(0.0)
-        m_static = jnp.float32(b)
+        horizon = jnp.zeros((n,), jnp.float32)
+        m_static = b
     else:
         horizon = jnp.minimum(w + 1.0, b)
         m_static = jnp.maximum(0.0, b - w - 1.0)
@@ -109,29 +138,32 @@ def _on_matrix_scan(a, pred, levels, *, delta, window, policy, waits=None):
             wait = jnp.where(idle & (r == 0.0), waits[t], wait)
         r = jnp.where(idle, r + 1.0, r)
         fut = jax.lax.dynamic_slice(pad, (t + 1,), (max_h,))
-        seen = ((fut[None, :] > levels[:, None]) & (hslots[None, :] < horizon)).any(axis=1)
+        seen = (
+            (fut[None, :] > levels[:, None]) & (hslots[None, :] < horizon[:, None])
+        ).any(axis=1)
         off_now = idle & (r - 1.0 >= wait) & ~seen
         on = on & ~off_now
         r = jnp.where(off_now, 0.0, r)
         return (r, on, wait), on
 
-    n = levels.shape[0]
     init = (
         jnp.zeros((n,), jnp.float32),
         a[0] > levels,                                  # x(0) = a(0)
-        jnp.full((n,), m_static) if waits is None else jnp.zeros((n,), jnp.float32),
+        m_static if waits is None else jnp.zeros((n,), jnp.float32),
     )
     (_, _, _), ons = jax.lax.scan(step, init, jnp.arange(T))
     return ons
 
 
-def _offline_levels(a, n_levels, b):
+def _offline_levels(a, n_levels, delta):
     """Hindsight-optimal per-level schedule, closed form (no scan).
 
     Level on at slot t iff busy, or inside an interior idle gap of length
-    <= Delta (prev and next busy exist and next - prev - 1 <= b).
+    <= Delta_l (prev and next busy exist and next - prev - 1 <= b_l); the
+    per-level Delta makes this heterogeneous-ready.
     """
     T = a.shape[0]
+    b = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n_levels,))
     levels = jnp.arange(n_levels)
     busy = a[:, None] > levels[None, :]                    # (T, N)
     idx = jnp.arange(T)[:, None]
@@ -147,29 +179,252 @@ def _offline_levels(a, n_levels, b):
 
 
 def _level_schedule(a, n_levels, delta, window, policy, predicted=None, key=None):
-    """(T, n_levels) bool on-matrix for one trace (any policy)."""
-    if policy not in POLICIES:
-        raise KeyError(policy)
+    """(T, n_levels) bool on-matrix for one trace (any policy).
+
+    ``delta`` must be concrete (a python number or per-level array) — this
+    convenience wrapper derives the static peek bound from it.
+    """
+    _check_policy(policy)
+    max_h = int(math.ceil(float(jnp.max(jnp.asarray(delta)))))
     pred = a if predicted is None else predicted
     if policy == "offline":
         return _offline_levels(a, n_levels, delta)
     waits = None
     if policy in RANDOMIZED:
-        if key is None:
-            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
+        _require_key(policy, key)
         u0, u = _uniforms(key, a.shape[0], n_levels)
         waits = _waits_from_uniforms(policy, u0, u, window, delta)
     levels = jnp.arange(n_levels)
     return _on_matrix_scan(
-        a, pred, levels, delta=delta, window=window, policy=policy, waits=waits
+        a, pred, levels, delta=delta, max_h=max_h, window=window, policy=policy,
+        waits=waits,
     )
 
 
 # ---------------------------------------------------------------------------
-# Public engine: single trace or batched, plus the α-sweep
+# Per-level cost reduction (heterogeneous-ready)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "window", "policy"))
+def _cost_terms(a, on_matrix, P_lv, beta_on_lv, beta_off_lv, levels=None):
+    """Per-level cost components of a schedule, each ``(..., N)``.
+
+    ``a`` (..., T) demand, ``on_matrix`` (..., T, N); the cost fields are
+    scalars or ``(N,)`` arrays.  ``levels``: the level ids the on-matrix
+    columns correspond to (defaults to 0..N-1; the sharded path passes its
+    block's offset ids).  Initial state x(0)=a(0) is free; the final slot is
+    forced to x(T)=a(T) (paper eq. 5).
+    """
+    ob = on_matrix.astype(bool)
+    on = ob.astype(jnp.int32)
+    if levels is None:
+        levels = jnp.arange(on_matrix.shape[-1])
+    run_slots = on.sum(axis=-2)                                   # (..., N)
+    up = jnp.clip(on[..., 1:, :] - on[..., :-1, :], 0).sum(axis=-2)
+    down = jnp.clip(on[..., :-1, :] - on[..., 1:, :], 0).sum(axis=-2)
+    first_on = (ob[..., 0, :] & ~(a[..., 0, None] > levels)).astype(jnp.int32)
+    final_off = (ob[..., -1, :] & ~(a[..., -1, None] > levels)).astype(jnp.int32)
+    return {
+        "energy": P_lv * run_slots,
+        "on_cost": beta_on_lv * (up + first_on),
+        "off_cost": beta_off_lv * (down + final_off),
+    }
+
+
+def on_matrix_cost(a, on_matrix, costs):
+    """Total cost of a per-level schedule under a (possibly per-level) model.
+
+    ``costs`` is a :class:`repro.core.costs.CostModel`; supports leading
+    batch axes: ``a`` (..., T), ``on_matrix`` (..., T, N).
+    """
+    P_lv, bon_lv, boff_lv = costs.per_level(on_matrix.shape[-1])
+    terms = _cost_terms(jnp.asarray(a), on_matrix, P_lv, bon_lv, boff_lv)
+    return (terms["energy"] + terms["on_cost"] + terms["off_cost"]).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# The one engine body: (windows × traces × levels) in a single program
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy"))
+def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
+         n_levels, max_h, policy):
+    """Shared engine body behind :func:`repro.core.provision.provision`.
+
+    ``ab``/``predb``: (B, T) int32; ``windows``: (W,); ``delta``/cost
+    fields: (N,) float32; ``keys``: (B,) typed keys or None.  Returns a dict
+    of ``x`` (W, B, T) int32 and per-level cost terms (W, B, N) float32.
+    The cost model enters as pytree *data*, so re-pricing a fleet reuses
+    the compiled program — only (policy, shapes) are compile keys.
+    """
+    B, T = ab.shape
+    levels = jnp.arange(n_levels)
+
+    def reduce(ai, ons):
+        out = _cost_terms(ai, ons, P_lv, beta_on_lv, beta_off_lv)
+        out["x"] = ons.sum(axis=1).astype(jnp.int32)
+        return out
+
+    if policy in ("offline", "delayedoff"):
+        # window-independent policies: compute once, broadcast over the sweep
+        def one(ai, pi):
+            ons = (
+                _offline_levels(ai, n_levels, delta)
+                if policy == "offline"
+                else _on_matrix_scan(ai, pi, levels, delta=delta, max_h=max_h,
+                                     window=0, policy=policy)
+            )
+            return reduce(ai, ons)
+
+        out = jax.vmap(one)(ab, predb)
+        return jax.tree.map(
+            lambda o: jnp.broadcast_to(o[None], (windows.shape[0],) + o.shape), out
+        )
+
+    if policy in RANDOMIZED:
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)   # (B, T, N)
+    else:
+        u0 = u = jnp.zeros((B, 0, 0))
+
+    def per_window(w):
+        def per_trace(ai, pi, u0i, ui):
+            waits = (
+                _waits_from_uniforms(policy, u0i, ui, w, delta)
+                if policy in RANDOMIZED
+                else None
+            )
+            ons = _on_matrix_scan(
+                ai, pi, levels, delta=delta, max_h=max_h, window=w,
+                policy=policy, waits=waits,
+            )
+            return reduce(ai, ons)
+
+        return jax.vmap(per_trace)(ab, predb, u0, u)
+
+    return jax.vmap(per_window)(windows)                 # each leaf (W, B, ...)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale engine body: shard the level axis over the mesh (Pallas scan)
+# ---------------------------------------------------------------------------
+
+def _sharded_run(mesh, axis, a, pred, delta, P_lv, beta_on_lv, beta_off_lv, *,
+                 n_levels, max_h, window, policy, key=None, use_pallas=True):
+    """Level-sharded engine body: one trace, one window, levels over ``axis``.
+
+    The demand and prediction traces are replicated (tiny); the per-level
+    arrays (thresholds, peek horizons, Δ, cost fields) are sharded.  Each
+    shard runs its level block through the fused Pallas scan (interpret mode
+    off-TPU); x(t) is a psum and the per-level cost terms an all_gather, so
+    the caller sees the same dict as :func:`_run`.  Scales to fleets far
+    past one host's memory (1000+ node deployments decide locally, paper
+    Sec. IV).
+    """
+    from repro.kernels.provision_scan import provision_scan
+
+    _check_policy(policy)
+    if policy == "offline":
+        raise ValueError(
+            "sharded path supports online policies (offline has no slot scan); "
+            f"valid policies are {tuple(p for p in POLICIES if p != 'offline')}"
+        )
+    a = jnp.asarray(a)
+    T = a.shape[0]
+    size = mesh.shape[axis]
+    n_padded = -(-n_levels // size) * size
+    per_shard = n_padded // size
+
+    def pad_lv(v, fill):
+        v = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n_levels,))
+        return jnp.pad(v, (0, n_padded - n_levels), constant_values=fill)
+
+    b = pad_lv(delta, 1.0)          # padded levels are masked out; Δ irrelevant
+    w = float(window)
+    if policy in RANDOMIZED:
+        _require_key(policy, key)
+        # draw at n_levels (NOT n_padded) so the (trace, key) -> schedule
+        # contract holds regardless of mesh size, then pad the table
+        u0, u = _uniforms(key, T, n_levels)
+        thresholds = _waits_from_uniforms(policy, u0, u, window, b[:n_levels])
+        thresholds = jnp.pad(thresholds, ((0, 0), (0, n_padded - n_levels)))
+        thr_spec = P(None, axis)
+    else:
+        m = b if policy == "delayedoff" else jnp.maximum(0.0, b - w - 1.0)
+        thresholds = m.astype(jnp.float32)
+        thr_spec = P(axis)
+    if policy == "delayedoff":
+        horizon_lv = jnp.zeros((n_padded,), jnp.float32)
+        h_unroll = 0
+    else:
+        horizon_lv = jnp.minimum(w + 1.0, b)
+        h_unroll = int(min(window + 1, max_h))
+    P_pad = pad_lv(P_lv, 0.0)
+    bon_pad = pad_lv(beta_on_lv, 0.0)
+    boff_pad = pad_lv(beta_off_lv, 0.0)
+
+    def local(a_l, p_l, thr_l, hor_l, b_l, Pp, bon, boff):
+        i = jax.lax.axis_index(axis)
+        base = i * per_shard
+        levels = base + jnp.arange(per_shard)
+        if use_pallas:
+            ons = provision_scan(
+                a_l, thr_l, delta=max_h, horizon=h_unroll, base_level=base,
+                predicted=p_l, level_horizon=hor_l,
+            )
+        else:
+            waits = thr_l if thr_l.ndim == 2 else None
+            ons = _on_matrix_scan(
+                a_l, p_l, levels,
+                delta=b_l, max_h=max_h, window=window, policy=policy,
+                waits=waits,
+            )
+        # phantom padded levels (ids >= n_levels) turn on whenever demand
+        # exceeds the fleet cap; mask them so x(t) matches the unsharded
+        # engine regardless of mesh size
+        ons = ons & (levels < n_levels)[None, :]
+        x = jax.lax.psum(ons.sum(axis=1).astype(jnp.int32), axis)
+        terms = _cost_terms(a_l, ons, Pp, bon, boff, levels=levels)
+        terms = {
+            k: jax.lax.all_gather(v, axis).reshape(-1) for k, v in terms.items()
+        }
+        terms["x"] = x
+        return terms
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), thr_spec, P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs={"x": P(), "energy": P(), "on_cost": P(), "off_cost": P()},
+        check_rep=False,    # no replication rule for pallas_call yet
+    )
+    pred = a if pred is None else jnp.asarray(pred)
+    out = fn(a, pred, thresholds, horizon_lv, b, P_pad, bon_pad, boff_pad)
+    return {
+        k: (v if k == "x" else v[:n_levels]) for k, v in out.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Deprecated loose-kwargs API (forwards to the spec engine)
+# ---------------------------------------------------------------------------
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"deprecated: {old} — build a ProvisionSpec and call "
+        f"repro.core.provision ({new})",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _dynamics_costs(delta):
+    """A CostModel whose derived Δ equals the wrapper's free-floating delta."""
+    from .costs import CostModel
+
+    d = jnp.asarray(delta, jnp.float32)
+    half = d / 2.0 if d.ndim else float(delta) / 2.0
+    return CostModel(P=1.0, beta_on=half, beta_off=half)
+
+
 def provision_schedule(
     a: jax.Array,          # (T,) or (B, T) int32 demand per slot
     *,
@@ -180,72 +435,22 @@ def provision_schedule(
     predicted: jax.Array | None = None,
     key: jax.Array | None = None,   # required for A2/A3; split per trace if batched
 ) -> jax.Array:
-    """Returns x: (T,) or (B, T) int32 — number of powered-on servers per slot."""
-    a = jnp.asarray(a)
-    pred = a if predicted is None else jnp.asarray(predicted)
-    if a.ndim == 1:
-        ons = _level_schedule(a, n_levels, delta, window, policy, pred, key)
-        return ons.sum(axis=1).astype(jnp.int32)
+    """Deprecated: use ``provision(ProvisionSpec(...))``.
 
-    def one(ai, pi, ki):
-        ons = _level_schedule(ai, n_levels, delta, window, policy, pi, ki)
-        return ons.sum(axis=1).astype(jnp.int32)
+    Returns x: (T,) or (B, T) int32 — number of powered-on servers per slot.
+    """
+    from .provision import PolicySpec, ProvisionSpec, Workload, provision
 
-    if policy in RANDOMIZED:
-        if key is None:
-            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
-        keys = jax.random.split(key, a.shape[0])
-        return jax.vmap(one)(a, pred, keys)
-    return jax.vmap(lambda ai, pi: one(ai, pi, None))(a, pred)
+    _warn_deprecated("provision_schedule(...)", "result.x")
+    spec = ProvisionSpec(
+        costs=_dynamics_costs(delta),
+        workload=Workload(demand=a, predicted=predicted),
+        policy=PolicySpec(name=policy, window=window, key=key),
+        n_levels=n_levels,
+    )
+    return provision(spec).x
 
 
-def _sweep(a, n_levels, delta, windows, policy, key, predicted, reduce_fn):
-    """Shared body of the α-sweep: vmap windows × vmap traces, CRN draws."""
-    a = jnp.asarray(a)
-    squeeze = a.ndim == 1
-    ab = a[None] if squeeze else a
-    pred = ab if predicted is None else jnp.asarray(predicted).reshape(ab.shape)
-    windows = jnp.asarray(windows)
-    B, T = ab.shape
-
-    if policy == "offline":        # window-independent: compute once, broadcast
-        def off_one(ai, pi):
-            return reduce_fn(ai, _offline_levels(ai, n_levels, delta))
-        out = jax.vmap(off_one)(ab, pred)
-        out = jnp.broadcast_to(out[None], (windows.shape[0],) + out.shape)
-        return out[:, 0] if squeeze else out
-
-    if policy in RANDOMIZED:
-        if key is None:
-            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
-        # a (T,) trace consumes the key directly (same stream as
-        # provision_schedule); a (B, T) batch splits it per trace.
-        keys = key[None] if squeeze else jax.random.split(key, B)
-        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)  # (B, T, N)
-    else:
-        u0 = u = jnp.zeros((B, 0, 0))
-
-    levels = jnp.arange(n_levels)
-
-    def per_window(w):
-        def per_trace(ai, pi, u0i, ui):
-            waits = (
-                _waits_from_uniforms(policy, u0i, ui, w, delta)
-                if policy in RANDOMIZED
-                else None
-            )
-            ons = _on_matrix_scan(
-                ai, pi, levels, delta=delta, window=w, policy=policy, waits=waits
-            )
-            return reduce_fn(ai, ons)
-
-        return jax.vmap(per_trace)(ab, pred, u0, u)
-
-    out = jax.vmap(per_window)(windows)                 # (W, B, ...)
-    return out[:, 0] if squeeze else out
-
-
-@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "policy"))
 def provision_sweep(
     a: jax.Array,
     *,
@@ -256,12 +461,22 @@ def provision_sweep(
     key: jax.Array | None = None,
     predicted: jax.Array | None = None,
 ) -> jax.Array:
-    """x over the whole sweep: (W, T) for a (T,) trace, (W, B, T) batched."""
-    reduce_fn = lambda ai, ons: ons.sum(axis=1).astype(jnp.int32)
-    return _sweep(a, n_levels, delta, windows, policy, key, predicted, reduce_fn)
+    """Deprecated: use ``provision(ProvisionSpec(...))`` with ``windows=``.
+
+    x over the whole sweep: (W, T) for a (T,) trace, (W, B, T) batched.
+    """
+    from .provision import PolicySpec, ProvisionSpec, Workload, provision
+
+    _warn_deprecated("provision_sweep(...)", "result.x with a windows axis")
+    spec = ProvisionSpec(
+        costs=_dynamics_costs(delta),
+        workload=Workload(demand=a, predicted=predicted),
+        policy=PolicySpec(name=policy, windows=windows, key=key),
+        n_levels=n_levels,
+    )
+    return provision(spec).x
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "delta", "policy"))
 def provision_sweep_costs(
     a: jax.Array,
     *,
@@ -275,41 +490,45 @@ def provision_sweep_costs(
     beta_on: float = 3.0,
     beta_off: float = 3.0,
 ) -> jax.Array:
-    """Schedule costs over the sweep: (W,) or (W, B) — one device program.
+    """Deprecated: use ``provision(ProvisionSpec(...))`` and ``result.cost``.
 
-    The on-matrices are reduced to costs inside the vmap lanes, so the sweep
-    never materializes the full (W, B, T, N) tensor.
+    Schedule costs over the sweep: (W,) or (W, B) — one device program.
+    The redundant ``delta`` kwarg must equal the derived
+    ``(beta_on + beta_off) / P`` (the spec API removes it entirely).
     """
-    reduce_fn = lambda ai, ons: provision_cost(ai, ons, P, beta_on, beta_off)
-    return _sweep(a, n_levels, delta, windows, policy, key, predicted, reduce_fn)
+    from .costs import CostModel
+    from .provision import PolicySpec, ProvisionSpec, Workload, provision
+
+    _warn_deprecated("provision_sweep_costs(...)", "result.cost with a windows axis")
+    derived = (beta_on + beta_off) / P
+    if abs(derived - float(delta)) > 1e-6:
+        raise ValueError(
+            f"delta={delta} disagrees with (beta_on+beta_off)/P={derived}; "
+            "the spec API derives delta from CostModel — drop the delta kwarg"
+        )
+    spec = ProvisionSpec(
+        costs=CostModel(P=P, beta_on=beta_on, beta_off=beta_off),
+        workload=Workload(demand=a, predicted=predicted),
+        policy=PolicySpec(name=policy, windows=windows, key=key),
+        n_levels=n_levels,
+    )
+    return provision(spec).cost
 
 
 def provision_cost(
     a: jax.Array, on_matrix: jax.Array, P: float, beta_on: float, beta_off: float
 ) -> jax.Array:
-    """Total cost of a per-level schedule (energy + toggles + forced final off).
+    """Deprecated: use ``on_matrix_cost(a, on_matrix, CostModel(...))`` or the
+    ``cost``/``level_cost`` fields of a :func:`provision` result.
 
+    Total cost of a per-level schedule (energy + toggles + forced final off).
     Supports leading batch axes: ``a`` (..., T), ``on_matrix`` (..., T, N).
     """
-    ob = on_matrix.astype(bool)
-    on = ob.astype(jnp.int32)
-    energy = P * on.sum(axis=(-2, -1))
-    up = jnp.clip(on[..., 1:, :] - on[..., :-1, :], 0).sum(axis=(-2, -1))
-    down = jnp.clip(on[..., :-1, :] - on[..., 1:, :], 0).sum(axis=(-2, -1))
-    # initial state x(0)=a(0) is free; final forced off to a(T)
-    levels = jnp.arange(on_matrix.shape[-1])
-    first_turn_on = (ob[..., 0, :] & ~(a[..., 0, None] > levels)).sum(axis=-1)
-    final_off = (ob[..., -1, :] & ~(a[..., -1, None] > levels)).sum(axis=-1)
-    return (
-        energy
-        + beta_on * (up + first_turn_on)
-        + beta_off * (down + final_off)
-    )
+    from .costs import CostModel
 
+    _warn_deprecated("provision_cost(...)", "result.cost / on_matrix_cost")
+    return on_matrix_cost(a, on_matrix, CostModel(P=P, beta_on=beta_on, beta_off=beta_off))
 
-# ---------------------------------------------------------------------------
-# Fleet-scale: shard the level axis over the mesh (fused Pallas scan)
-# ---------------------------------------------------------------------------
 
 def provision_schedule_sharded(
     mesh: Mesh,
@@ -321,60 +540,23 @@ def provision_schedule_sharded(
     axis: str = "data",
     policy: str = "A1",
     key: jax.Array | None = None,
+    predicted: jax.Array | None = None,
     use_pallas: bool = True,
 ) -> jax.Array:
-    """Same as provision_schedule, levels sharded over ``axis`` via shard_map.
+    """Deprecated: use ``provision(ProvisionSpec(..., mesh=mesh))``.
 
-    The demand trace is replicated (tiny); each shard runs its own level
-    block through the fused Pallas scan kernel (interpret mode off-TPU);
-    the final x(t) is a psum over shards.  Scales to fleets far past one
-    host's memory (1000+ node deployments decide locally, paper Sec. IV).
+    Same as provision_schedule, levels sharded over ``axis`` via shard_map.
     """
-    from repro.kernels.provision_scan import provision_scan
+    from .provision import PolicySpec, ProvisionSpec, Workload, provision
 
-    if policy not in POLICIES or policy == "offline":
-        raise KeyError(f"sharded path supports online policies, got {policy!r}")
-    a = jnp.asarray(a)
-    T = a.shape[0]
-    size = mesh.shape[axis]
-    n_padded = -(-n_levels // size) * size
-    per_shard = n_padded // size
-
-    b = float(delta)
-    if policy in RANDOMIZED:
-        if key is None:
-            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
-        u0, u = _uniforms(key, T, n_padded)
-        thresholds = _waits_from_uniforms(policy, u0, u, window, delta)  # (T, Np)
-        thr_spec = P(None, axis)
-    else:
-        m = b if policy == "delayedoff" else max(0.0, b - window - 1.0)
-        thresholds = jnp.full((n_padded,), m, jnp.float32)
-        thr_spec = P(axis)
-    horizon = 0 if policy == "delayedoff" else int(min(window + 1, delta))
-
-    def local(a_local, thr_local):
-        i = jax.lax.axis_index(axis)
-        base = i * per_shard
-        if use_pallas:
-            ons = provision_scan(
-                a_local, thr_local, delta=delta, horizon=horizon, base_level=base
-            )
-        else:
-            levels = base + jnp.arange(per_shard)
-            waits = thr_local if thr_local.ndim == 2 else None
-            ons = _on_matrix_scan(
-                a_local, a_local, levels,
-                delta=delta, window=window, policy=policy, waits=waits,
-            )
-        x_local = ons.sum(axis=1).astype(jnp.int32)
-        return jax.lax.psum(x_local, axis)
-
-    fn = shard_map(
-        local,
+    _warn_deprecated("provision_schedule_sharded(...)", "mesh= on the spec")
+    spec = ProvisionSpec(
+        costs=_dynamics_costs(delta),
+        workload=Workload(demand=a, predicted=predicted),
+        policy=PolicySpec(name=policy, window=window, key=key),
+        n_levels=n_levels,
         mesh=mesh,
-        in_specs=(P(), thr_spec),
-        out_specs=P(),
-        check_rep=False,    # no replication rule for pallas_call yet
+        mesh_axis=axis,
+        use_pallas=use_pallas,
     )
-    return fn(a, thresholds)
+    return provision(spec).x

@@ -1,0 +1,257 @@
+"""One declarative provisioning API: ``provision(ProvisionSpec(...))``.
+
+The spec is three pytree-registered frozen dataclasses plus options:
+
+  * :class:`~repro.core.costs.CostModel` — ``P``/``beta_on``/``beta_off`` as
+    scalars or ``(n_levels,)`` arrays (heterogeneous fleets); the critical
+    interval Δ is always *derived* per level (paper eq. 12), never passed;
+  * :class:`Workload` — demand ``(T,)`` or ``(B, T)``, an optional
+    ``predicted`` trace, or an optional :class:`PredictionNoise` model that
+    synthesizes one (paper Sec. V-C);
+  * :class:`PolicySpec` — policy name, a single ``window`` or a ``windows``
+    sweep axis (α = (w+1)/Δ), and the PRNG ``key`` for A2/A3.
+
+:func:`provision` runs the whole (windows × traces × levels) grid as one
+jitted device program and returns a :class:`ProvisionResult` carrying the
+schedule, total/energy/toggle costs, and the per-level cost breakdown.
+Passing ``mesh=`` shards the level axis over the mesh through the fused
+Pallas scan (:mod:`repro.kernels.provision_scan`).
+
+Shape convention: the result keeps a leading windows axis iff the spec used
+``windows=`` and a batch axis iff demand was ``(B, T)`` — mirroring the
+inputs, so ``result.x`` is ``(T,)``, ``(B, T)``, ``(W, T)`` or ``(W, B, T)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from .costs import CostModel
+from . import jax_provision as _engine
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PredictionNoise:
+    """Zero-mean Gaussian prediction error, std = ``std_frac`` × actual load.
+
+    The JAX-native form of :func:`repro.core.traces.with_prediction_error`
+    (paper Sec. V-C): the peek step reads ``max(round(a + ε), 0)`` with
+    ``ε ~ N(0, (std_frac · a)²)`` drawn from ``key``.
+    """
+
+    std_frac: float
+    key: jax.Array
+
+    def apply(self, demand: jax.Array) -> jax.Array:
+        """(T,) draws from ``key`` directly; (B, T) splits it per trace —
+        the same convention as ``PolicySpec.key``, so batched noise studies
+        reduce to their unbatched rows exactly."""
+        a = jnp.asarray(demand, jnp.float32)
+
+        def one(key, ai):
+            err = jax.random.normal(key, ai.shape) * self.std_frac * ai
+            return jnp.maximum(jnp.rint(ai + err), 0.0).astype(jnp.int32)
+
+        if a.ndim == 2:
+            return jax.vmap(one)(jax.random.split(self.key, a.shape[0]), a)
+        return one(self.key, a)
+
+
+jax.tree_util.register_dataclass(
+    PredictionNoise, data_fields=["std_frac", "key"], meta_fields=[]
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Workload:
+    """Demand trace(s) plus what the peek step is allowed to see.
+
+    ``demand``: (T,) or (B, T) integer concurrency per slot.  ``predicted``:
+    optional trace(s) of the same shape the prediction window reads (the
+    dispatcher always sees the true current slot).  ``noise``: optional
+    :class:`PredictionNoise` that synthesizes ``predicted`` from ``demand``;
+    mutually exclusive with an explicit ``predicted``.
+    """
+
+    demand: jax.Array
+    predicted: jax.Array | None = None
+    noise: PredictionNoise | None = None
+
+    def resolve_predicted(self, demand_i32: jax.Array) -> jax.Array | None:
+        if self.predicted is not None and self.noise is not None:
+            raise ValueError("pass either predicted= or noise=, not both")
+        if self.noise is not None:
+            return self.noise.apply(demand_i32)
+        if self.predicted is not None:
+            return jnp.asarray(self.predicted, jnp.int32)
+        return None
+
+
+jax.tree_util.register_dataclass(
+    Workload, data_fields=["demand", "predicted", "noise"], meta_fields=[]
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PolicySpec:
+    """Which algorithm runs, with how much future, under which key.
+
+    ``name``: one of ``repro.core.jax_provision.POLICIES``.  ``window``: the
+    number of future slots the peek sees (α = (window+1)/Δ per level).
+    ``windows``: optional (W,) sweep axis — evaluates every window in one
+    program and puts a leading W axis on the result; overrides ``window``.
+    ``key``: explicit PRNG key, required for the randomized A2/A3 (split per
+    trace for batched demand).
+    """
+
+    name: str = "A1"
+    window: int = 0
+    windows: jax.Array | None = None
+    key: jax.Array | None = None
+
+    def validate(self) -> "PolicySpec":
+        """Raise ValueError for unknown policy names or a missing key on the
+        randomized policies; returns self (chainable)."""
+        _engine._check_policy(self.name)
+        if self.name in _engine.RANDOMIZED:
+            _engine._require_key(self.name, self.key)
+        return self
+
+
+jax.tree_util.register_dataclass(
+    PolicySpec, data_fields=["windows", "key"], meta_fields=["name", "window"]
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProvisionSpec:
+    """The complete declarative input of one provisioning computation.
+
+    ``n_levels``: fleet size; defaults to the cost model's per-level length,
+    else ``max(demand) + 1``.  ``mesh``/``mesh_axis``: shard the level axis
+    over a mesh axis (single trace, single window, online policies) through
+    the fused Pallas scan; ``use_pallas=False`` keeps the lax.scan body.
+    """
+
+    costs: CostModel
+    workload: Workload
+    policy: PolicySpec
+    n_levels: int | None = None
+    mesh: Mesh | None = None
+    mesh_axis: str = "data"
+    use_pallas: bool = True
+
+
+jax.tree_util.register_dataclass(
+    ProvisionSpec,
+    data_fields=["costs", "workload", "policy"],
+    meta_fields=["n_levels", "mesh", "mesh_axis", "use_pallas"],
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProvisionResult:
+    """What one :func:`provision` call produced (all device arrays).
+
+    ``x``: powered-on servers per slot, (..., T) int32.  ``cost`` =
+    ``energy`` + ``toggle_cost`` (paper eq. 5, forced x(T)=a(T) boundary).
+    ``level_cost``: (..., N) per-level totals — the heterogeneous-fleet
+    breakdown (which server types the money went to).
+    """
+
+    x: jax.Array
+    cost: jax.Array
+    energy: jax.Array
+    toggle_cost: jax.Array
+    level_cost: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    ProvisionResult,
+    data_fields=["x", "cost", "energy", "toggle_cost", "level_cost"],
+    meta_fields=[],
+)
+
+
+def provision(spec: ProvisionSpec) -> ProvisionResult:
+    """Run a :class:`ProvisionSpec` end-to-end as one jitted device program.
+
+    Subsumes the deprecated ``provision_schedule`` / ``provision_sweep`` /
+    ``provision_sweep_costs`` / ``provision_cost`` /
+    ``provision_schedule_sharded`` surface: batching is the demand's leading
+    axis, the α-sweep is ``PolicySpec.windows``, sharding is ``mesh=``.  The
+    cost model's fields flow through jit as data, so re-pricing the fleet
+    does not recompile; only (policy, shapes, Δ's static scan bound) do.
+    """
+    pol = spec.policy.validate()
+    a = jnp.asarray(spec.workload.demand, jnp.int32)
+    if a.ndim not in (1, 2):
+        raise ValueError(f"demand must be (T,) or (B, T), got shape {a.shape}")
+    squeeze_b = a.ndim == 1
+    ab = a[None] if squeeze_b else a
+    pred = spec.workload.resolve_predicted(a)
+    if pred is None:
+        predb = ab
+    else:
+        if pred.shape != a.shape:
+            raise ValueError(
+                f"predicted shape {pred.shape} must match demand shape {a.shape}"
+            )
+        predb = pred[None] if squeeze_b else pred
+
+    n_levels = spec.n_levels
+    if n_levels is None:
+        n_levels = spec.costs.n_levels
+    if n_levels is None:
+        n_levels = int(ab.max()) + 1        # needs concrete demand
+    P_lv, bon_lv, boff_lv = spec.costs.per_level(n_levels)
+    delta_lv = jnp.broadcast_to(
+        jnp.asarray(spec.costs.delta, jnp.float32), (n_levels,)
+    )
+    max_h = spec.costs.delta_slots()
+
+    squeeze_w = pol.windows is None
+    windows = (
+        jnp.asarray([pol.window], jnp.int32)
+        if squeeze_w
+        else jnp.asarray(pol.windows, jnp.int32)
+    )
+
+    keys = None
+    if pol.name in _engine.RANDOMIZED:
+        keys = (
+            pol.key[None] if squeeze_b else jax.random.split(pol.key, ab.shape[0])
+        )
+
+    if spec.mesh is not None:
+        if not squeeze_b or not squeeze_w:
+            raise ValueError(
+                "mesh-sharded provisioning takes one trace and one window "
+                f"(got demand {a.shape}, windows {None if squeeze_w else windows.shape})"
+            )
+        out = _engine._sharded_run(
+            spec.mesh, spec.mesh_axis, a, pred, delta_lv, P_lv, bon_lv, boff_lv,
+            n_levels=n_levels, max_h=max_h, window=int(pol.window),
+            policy=pol.name, key=pol.key, use_pallas=spec.use_pallas,
+        )
+    else:
+        out = _engine._run(
+            ab, predb, windows, delta_lv, P_lv, bon_lv, boff_lv, keys,
+            n_levels=n_levels, max_h=max_h, policy=pol.name,
+        )
+        if squeeze_b:
+            out = jax.tree.map(lambda o: o[:, 0], out)
+        if squeeze_w:
+            out = jax.tree.map(lambda o: o[0], out)
+
+    level_cost = out["energy"] + out["on_cost"] + out["off_cost"]
+    return ProvisionResult(
+        x=out["x"],
+        cost=level_cost.sum(axis=-1),
+        energy=out["energy"].sum(axis=-1),
+        toggle_cost=(out["on_cost"] + out["off_cost"]).sum(axis=-1),
+        level_cost=level_cost,
+    )

@@ -9,17 +9,21 @@ this kernel fuses the whole scan into one program per level block:
   on/off bit, sampled wait threshold — in registers/VMEM across all T slots
   and streams the on-matrix out row by row.
 
-The demand trace (and its peek pad) is scalar-prefetched into SMEM, so the
-per-slot ``a(t) > level`` compare and the ``horizon``-slot peek are SMEM
-scalar reads against a resident level-id vector — no HBM traffic beyond
-the threshold table and the output.
+Two traces are scalar-prefetched into SMEM: the true demand (drives the
+dispatcher's ``a(t) > level`` compare) and the *predicted* trace (drives
+the ``horizon``-slot peek) — so erroneous-prediction experiments (paper
+Sec. V-C) run through the fleet path too, and exact-prediction callers just
+pass the same array twice.  Both compares are SMEM scalar reads against a
+resident level-id vector — no HBM traffic beyond the threshold table and
+the output.
 
 Thresholds are (N,) constants for the deterministic policies (A1's
-``max(0, Δ-w-1)``, DELAYEDOFF's ``Δ``) or a (T, N) table of sampled waits
-for A2/A3 (entry [t, l] is consumed iff level l becomes newly idle in slot
-t, matching the engine's PRNG contract).  The peek reads the true trace
-(exact predictions — the fleet path); erroneous-prediction experiments use
-the lax.scan engine.
+``max(0, Δ_l−w−1)``, DELAYEDOFF's ``Δ_l``) or a (T, N) table of sampled
+waits for A2/A3 (entry [t, l] is consumed iff level l becomes newly idle in
+slot t, matching the engine's PRNG contract).  Heterogeneous fleets give
+each level its own Δ, hence its own threshold *and* its own peek reach:
+``level_horizon`` is a per-level float row masking the statically unrolled
+``horizon`` peek to ``min(w+1, Δ_l)`` slots.
 
 Off-TPU the kernel runs in interpret mode (auto-detected), so the sharded
 fleet path is testable on CPU.
@@ -39,13 +43,15 @@ DEFAULT_BN = 128     # level-block width (lane dimension)
 
 
 def _scan_kernel(
-    base_ref, a_ref,            # scalar prefetch (SMEM): (1,), (T + max_h,)
+    base_ref, a_ref, p_ref,     # scalar prefetch (SMEM): (1,), (T+max_h,), (T+max_h,)
     m_ref,                      # (1 | T, BN) f32 wait thresholds
+    h_ref,                      # (1, BN) f32 per-level peek horizon (slots)
     o_ref,                      # (T, BN) int32 on-matrix block
     *, T: int, bn: int, horizon: int, time_varying: bool,
 ):
     blk = pl.program_id(0)
     levels = base_ref[0] + blk * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    h_row = h_ref[pl.ds(0, 1), :]
 
     def body(t, carry):
         r, on, wait = carry                         # (1, BN) f32, bool, f32
@@ -57,8 +63,8 @@ def _scan_kernel(
             wait = jnp.where(idle & (r == 0.0), m_ref[pl.ds(t, 1), :], wait)
         r = jnp.where(idle, r + 1.0, r)
         seen = jnp.zeros_like(busy)
-        for h in range(horizon):                    # static unroll, <= Delta
-            seen = seen | (a_ref[t + 1 + h] > levels)
+        for h in range(horizon):                    # static unroll, <= max Delta
+            seen = seen | ((p_ref[t + 1 + h] > levels) & (float(h) < h_row))
         off_now = idle & (r - 1.0 >= wait) & ~seen
         on = on & ~off_now
         r = jnp.where(off_now, 0.0, r)
@@ -77,9 +83,11 @@ def provision_scan(
     a: jax.Array,               # (T,) int32 demand per slot
     thresholds: jax.Array,      # (N,) constant waits or (T, N) sampled waits
     *,
-    delta: int,
-    horizon: int,               # peek slots: min(w+1, delta), 0 = no peek
+    delta: int,                 # static pad/peek bound: ceil(max per-level Delta)
+    horizon: int,               # peek slots unrolled: min(w+1, delta), 0 = no peek
     base_level: jax.Array | int = 0,
+    predicted: jax.Array | None = None,   # (T,) trace the peek reads; default a
+    level_horizon: jax.Array | None = None,  # (N,) per-level peek reach (slots)
     block_levels: int = DEFAULT_BN,
     interpret: bool | None = None,
 ) -> jax.Array:
@@ -95,9 +103,16 @@ def provision_scan(
     n_padded = -(-n // bn) * bn
     pad_n = n_padded - n
     m2d = thresholds if time_varying else thresholds[None, :]
+    if level_horizon is None:
+        h2d = jnp.full((1, n), float(horizon), jnp.float32)
+    else:
+        h2d = jnp.asarray(level_horizon, jnp.float32)[None, :]
     if pad_n:
         m2d = jnp.pad(m2d, ((0, 0), (0, pad_n)))
+        h2d = jnp.pad(h2d, ((0, 0), (0, pad_n)))
+    pred = a if predicted is None else jnp.asarray(predicted, jnp.int32)
     a_pad = jnp.concatenate([a, jnp.zeros((max_h,), jnp.int32)])
+    p_pad = jnp.concatenate([pred, jnp.zeros((max_h,), jnp.int32)])
     base = jnp.asarray(base_level, jnp.int32).reshape((1,))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -106,12 +121,13 @@ def provision_scan(
         _scan_kernel, T=T, bn=bn, horizon=horizon, time_varying=time_varying
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(n_padded // bn,),
         in_specs=[
-            pl.BlockSpec((m2d.shape[0], bn), lambda i, base, ap: (0, i)),
+            pl.BlockSpec((m2d.shape[0], bn), lambda i, base, ap, pp: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, base, ap, pp: (0, i)),
         ],
-        out_specs=pl.BlockSpec((T, bn), lambda i, base, ap: (0, i)),
+        out_specs=pl.BlockSpec((T, bn), lambda i, base, ap, pp: (0, i)),
     )
     out = pl.pallas_call(
         kernel,
@@ -119,5 +135,5 @@ def provision_scan(
         out_shape=jax.ShapeDtypeStruct((T, n_padded), jnp.int32),
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(base, a_pad, m2d)
+    )(base, a_pad, p_pad, m2d, h2d)
     return out[:, :n].astype(bool)

@@ -47,6 +47,14 @@ POLICIES = {
 }
 
 
+def _policy_class(policy: str):
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown policy {policy!r}: valid policies are {tuple(POLICIES)}"
+        )
+    return POLICIES[policy]
+
+
 @dataclasses.dataclass
 class ReplicaState:
     replica_id: int
@@ -85,7 +93,7 @@ class ReplicaAutoscaler:
         initial_busy: int = 0,
     ):
         self.costs = costs
-        self.policy = POLICIES[policy](alpha=alpha)
+        self.policy = _policy_class(policy)(alpha=alpha)
         self.alpha = alpha
         self.predictor = predictor            # (t0, t1) -> max predicted load
         self.rng = rng or np.random.default_rng(0)
@@ -194,84 +202,98 @@ class ReplicaAutoscaler:
 
 
 class FleetProvisioner:
-    """Slot-based capacity planner on the batched jitted provisioning engine.
+    """Slot-based capacity planner on the declarative provisioning engine.
 
     Where :class:`ReplicaAutoscaler` reacts to one fleet's live events, this
     planner takes per-slot (predicted) session concurrency for B fleets at
-    once — shape ``(T,)`` or ``(B, T)`` — and returns the per-slot replica
-    counts x(t) a policy would run, entirely on-device.  ``plan_sweep`` /
-    ``sweep_costs`` evaluate every prediction window in one program, which
-    is how an operator picks α for a fleet (paper Fig. 4b as a planning
-    tool).  Randomized policies need an explicit PRNG ``key``.
+    once — shape ``(T,)`` or ``(B, T)`` — and runs a
+    :class:`repro.core.ProvisionSpec` over it, entirely on-device.  The
+    ``policy`` argument is a :class:`repro.core.PolicySpec` (or a policy
+    name, sugar for ``PolicySpec(name, window=window, key=key)``);
+    heterogeneous per-replica cost models are plain ``(max_replicas,)``
+    arrays on ``costs``.  ``plan_sweep``/``sweep_costs`` evaluate every
+    prediction window in one program, which is how an operator picks α for
+    a fleet (paper Fig. 4b as a planning tool).  ``mesh=`` shards the
+    replica axis through the fused Pallas scan — that path takes one trace
+    and one window, so it applies to single-trace ``plan()`` only (sweeps
+    and batched demand raise).  Randomized policies need an explicit PRNG
+    ``key``.
     """
 
     def __init__(
         self,
         costs: CostModel,
-        policy: str = "A1",
+        policy="A1",
         window: int = 0,
         max_replicas: int = 1024,
         key=None,
+        mesh=None,
+        mesh_axis: str = "data",
     ):
-        from repro.core.jax_provision import RANDOMIZED
+        from repro.core import PolicySpec
 
         self.costs = costs
-        self.policy = policy
-        self.window = int(window)
+        if isinstance(policy, PolicySpec):
+            if window != 0 or key is not None:
+                raise ValueError(
+                    "pass window/key inside the PolicySpec, not alongside it"
+                )
+            self.policy = policy
+        else:
+            self.policy = PolicySpec(name=policy, window=int(window), key=key)
+        self.policy.validate()
         self.max_replicas = int(max_replicas)
-        if policy in RANDOMIZED and key is None:
-            raise ValueError(f"policy {policy!r} is randomized: pass an explicit key")
-        self.key = key
-        self._delta = int(round(costs.delta))
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
 
-    def plan(self, demand, predicted=None) -> np.ndarray:
-        """x(t) replica counts: (T,) -> (T,) or (B, T) -> (B, T) int32."""
-        from repro.core.jax_provision import provision_schedule
+    def _spec(self, demand, predicted=None, windows=None):
+        import dataclasses as _dc
 
-        a = self._as_i32(demand)
-        x = provision_schedule(
-            a,
+        from repro.core import ProvisionSpec, Workload
+
+        policy = self.policy
+        if windows is not None:
+            if self.mesh is not None:
+                raise ValueError(
+                    "mesh-sharded planning takes one trace and one window: "
+                    "use plan(), not a windows sweep"
+                )
+            policy = _dc.replace(policy, windows=np.asarray(windows, np.int32))
+        return ProvisionSpec(
+            costs=self.costs,
+            workload=Workload(
+                demand=self._as_i32(demand),
+                predicted=None if predicted is None else self._as_i32(predicted),
+            ),
+            policy=policy,
             n_levels=self.max_replicas,
-            delta=self._delta,
-            window=self.window,
-            policy=self.policy,
-            predicted=None if predicted is None else self._as_i32(predicted),
-            key=self.key,
+            mesh=self.mesh,
+            mesh_axis=self.mesh_axis,
         )
-        return np.asarray(x)
+
+    def plan(self, demand, predicted=None):
+        """Full ProvisionResult; ``.x`` is (T,) -> (T,) or (B, T) -> (B, T)."""
+        from repro.core import provision
+
+        if self.policy.windows is not None:
+            raise ValueError(
+                "the planner's PolicySpec carries a windows= sweep; "
+                "plan() returns per-window-free shapes — use plan_sweep()/"
+                "sweep_costs(), or drop windows from the PolicySpec"
+            )
+        return provision(self._spec(demand, predicted))
 
     def plan_sweep(self, demand, windows) -> np.ndarray:
         """x over an α-sweep: (W, T) or (W, B, T) for windows (W,)."""
-        from repro.core.jax_provision import provision_sweep
+        from repro.core import provision
 
-        return np.asarray(
-            provision_sweep(
-                self._as_i32(demand),
-                n_levels=self.max_replicas,
-                delta=self._delta,
-                windows=np.asarray(windows, np.int32),
-                policy=self.policy,
-                key=self.key,
-            )
-        )
+        return np.asarray(provision(self._spec(demand, windows=windows)).x)
 
     def sweep_costs(self, demand, windows) -> np.ndarray:
         """Schedule costs over an α-sweep: (W,) or (W, B)."""
-        from repro.core.jax_provision import provision_sweep_costs
+        from repro.core import provision
 
-        return np.asarray(
-            provision_sweep_costs(
-                self._as_i32(demand),
-                n_levels=self.max_replicas,
-                delta=self._delta,
-                windows=np.asarray(windows, np.int32),
-                policy=self.policy,
-                key=self.key,
-                P=self.costs.P,
-                beta_on=self.costs.beta_on,
-                beta_off=self.costs.beta_off,
-            )
-        )
+        return np.asarray(provision(self._spec(demand, windows=windows)).cost)
 
     def _as_i32(self, demand):
         import jax.numpy as jnp

@@ -1,4 +1,6 @@
-"""Jitted JAX provisioning engine == numpy reference engines."""
+"""Declarative JAX provisioning engine == numpy reference engines."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,26 +11,42 @@ from repro.core import (
     A3Randomized,
     A1Deterministic,
     CostModel,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
     brick_trace_from_fluid,
     fluid_cost,
     fluid_scan,
     msr_like_trace,
+    on_matrix_cost,
+    provision,
     simulate,
 )
 from repro.core.jax_provision import (
     _level_schedule,
     _uniforms,
     _waits_from_uniforms,
-    provision_cost,
-    provision_schedule,
-    provision_schedule_sharded,
-    provision_sweep,
-    provision_sweep_costs,
 )
+from repro.core.traces import with_prediction_error
 from repro.kernels.provision_scan import provision_scan
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
 B = int(COSTS.delta)
+
+
+def run(a, *, policy="A1", window=0, windows=None, predicted=None, key=None,
+        costs=COSTS, n_levels=None, mesh=None, use_pallas=True):
+    return provision(ProvisionSpec(
+        costs=costs,
+        workload=Workload(
+            demand=jnp.asarray(a, jnp.int32),
+            predicted=None if predicted is None else jnp.asarray(predicted, jnp.int32),
+        ),
+        policy=PolicySpec(policy, window=window, windows=windows, key=key),
+        n_levels=n_levels if n_levels is not None else int(np.asarray(a).max()) + 1,
+        mesh=mesh,
+        use_pallas=use_pallas,
+    ))
 
 
 @pytest.mark.parametrize("window", [0, 1, 3, 5, 8])
@@ -37,33 +55,28 @@ def test_a1_jax_matches_numpy_scan(window, seed):
     rng = np.random.default_rng(seed)
     a = rng.integers(0, 8, size=60)
     want = fluid_scan(a, "A1", COSTS, window=window)
-    got_x = provision_schedule(
-        jnp.asarray(a, jnp.int32), n_levels=int(a.max()) + 1, delta=B,
-        window=window, policy="A1",
-    )
-    np.testing.assert_array_equal(np.asarray(got_x), want.x)
+    got = run(a, window=window, policy="A1")
+    np.testing.assert_array_equal(np.asarray(got.x), want.x)
 
 
 @pytest.mark.parametrize("seed", range(4))
 def test_offline_jax_matches_optimal_cost(seed):
     rng = np.random.default_rng(seed + 100)
     a = rng.integers(0, 6, size=50)
-    n = int(a.max()) + 1
-    ons = _level_schedule(jnp.asarray(a, jnp.int32), n, B, 0, "offline")
-    cost = provision_cost(jnp.asarray(a), ons, COSTS.P, COSTS.beta_on,
-                          COSTS.beta_off)
+    res = run(a, policy="offline")
     want = fluid_cost(a, "offline", COSTS).cost
-    assert float(cost) == pytest.approx(want, rel=1e-9)
+    assert float(res.cost) == pytest.approx(want, rel=1e-6)
 
 
 def test_a1_jax_cost_matches_numpy_cost():
     a = msr_like_trace(np.random.default_rng(1), n_slots=300, mean_jobs=15.0)
     for w in (0, 2, 5):
-        ons = _level_schedule(jnp.asarray(a, jnp.int32), int(a.max()) + 1, B, w, "A1")
-        cost = float(provision_cost(jnp.asarray(a), ons, COSTS.P,
-                                    COSTS.beta_on, COSTS.beta_off))
+        res = run(a, window=w, policy="A1")
         want = fluid_scan(a, "A1", COSTS, window=w).cost
-        assert cost == pytest.approx(want, rel=1e-9)
+        assert float(res.cost) == pytest.approx(want, rel=1e-6)
+        # result invariants: cost decomposes over levels and into components
+        assert float(res.level_cost.sum()) == pytest.approx(float(res.cost))
+        assert float(res.energy + res.toggle_cost) == pytest.approx(float(res.cost))
 
 
 # ---------------------------------------------------------------------------
@@ -76,14 +89,10 @@ def test_randomized_jax_matches_fluid_scan_in_expectation(policy, window):
     """Jitted A2/A3 mean cost over keys == numpy slot-scan mean over seeds."""
     rng = np.random.default_rng(0)
     a = rng.integers(0, 6, size=60)
-    n = int(a.max()) + 1
     runs = 300
-    ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
-    costs = provision_sweep_costs(
-        ab, n_levels=n, delta=B, windows=jnp.array([window]), policy=policy,
-        key=jax.random.key(7),
-        P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
-    )
+    ab = np.tile(a, (runs, 1))
+    costs = run(ab, policy=policy, windows=jnp.array([window]),
+                key=jax.random.key(7), n_levels=int(a.max()) + 1).cost
     jit_mean = float(jnp.mean(costs[0]))
     ref_mean = np.mean([
         fluid_scan(a, policy, COSTS, window=window,
@@ -104,7 +113,6 @@ def test_randomized_jax_matches_event_simulator_in_expectation(policy, cls, wind
     """
     rng = np.random.default_rng(1)
     a = rng.integers(0, 6, size=80)
-    n = int(a.max()) + 1
     alpha = min(1.0, (window + 1) / COSTS.delta)
     tr = brick_trace_from_fluid(a)
 
@@ -113,12 +121,9 @@ def test_randomized_jax_matches_event_simulator_in_expectation(policy, cls, wind
         / simulate(tr, A1Deterministic(alpha=alpha), COSTS).cost
     )
     runs = 300
-    ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
-    costs = provision_sweep_costs(
-        ab, n_levels=n, delta=B, windows=jnp.array([window]), policy=policy,
-        key=jax.random.key(3),
-        P=COSTS.P, beta_on=COSTS.beta_on, beta_off=COSTS.beta_off,
-    )
+    ab = np.tile(a, (runs, 1))
+    costs = run(ab, policy=policy, windows=jnp.array([window]),
+                key=jax.random.key(3), n_levels=int(a.max()) + 1).cost
     jit_mean = float(jnp.mean(costs[0]))
     brick_mean = np.mean([
         simulate(tr, cls(alpha=alpha), COSTS, rng=np.random.default_rng(r)).cost
@@ -132,59 +137,57 @@ def test_batched_matches_unbatched(policy):
     """(B, T) demand == stacking per-trace (T,) schedules (split keys)."""
     rng = np.random.default_rng(2)
     n_traces = 5
-    ab = jnp.asarray(rng.integers(0, 7, size=(n_traces, 60)), jnp.int32)
+    ab = rng.integers(0, 7, size=(n_traces, 60))
     key = jax.random.key(11)
-    kw = dict(n_levels=7, delta=B, window=2, policy=policy)
-    if policy in ("A2", "A3"):
-        kw["key"] = key
-    xb = provision_schedule(ab, **kw)
+    kw = dict(n_levels=7, window=2, policy=policy)
+    xb = run(ab, **kw, key=key if policy in ("A2", "A3") else None).x
     keys = jax.random.split(key, n_traces)
     for i in range(n_traces):
-        if policy in ("A2", "A3"):
-            kw["key"] = keys[i]
-        xi = provision_schedule(ab[i], **kw)
+        ki = keys[i] if policy in ("A2", "A3") else None
+        xi = run(ab[i], **kw, key=ki).x
         np.testing.assert_array_equal(np.asarray(xb[i]), np.asarray(xi))
 
 
 def test_sweep_matches_individual_windows():
-    """provision_sweep over W windows == W separate A1 schedules."""
-    a = jnp.asarray(msr_like_trace(np.random.default_rng(5), n_slots=200,
-                                   mean_jobs=10.0), jnp.int32)
-    n = int(a.max()) + 1
-    xs = provision_sweep(a, n_levels=n, delta=B, windows=jnp.arange(B),
-                         policy="A1")
+    """One windows= sweep == W separate single-window A1 programs."""
+    a = msr_like_trace(np.random.default_rng(5), n_slots=200, mean_jobs=10.0)
+    xs = run(a, windows=jnp.arange(B), policy="A1").x
     for w in range(B):
-        want = provision_schedule(a, n_levels=n, delta=B, window=w, policy="A1")
+        want = run(a, window=w, policy="A1").x
         np.testing.assert_array_equal(np.asarray(xs[w]), np.asarray(want))
 
 
 def test_sweep_matches_single_schedule_randomized():
     """For a (T,) trace, sweep and single-window calls share the key stream."""
     rng = np.random.default_rng(14)
-    a = jnp.asarray(rng.integers(0, 6, size=60), jnp.int32)
+    a = rng.integers(0, 6, size=60)
     key = jax.random.key(21)
-    xs = provision_sweep(a, n_levels=6, delta=B, windows=jnp.arange(3),
-                         policy="A3", key=key)
+    xs = run(a, windows=jnp.arange(3), policy="A3", key=key, n_levels=6).x
     for w in range(3):
-        want = provision_schedule(a, n_levels=6, delta=B, window=w,
-                                  policy="A3", key=key)
+        want = run(a, window=w, policy="A3", key=key, n_levels=6).x
         np.testing.assert_array_equal(np.asarray(xs[w]), np.asarray(want))
 
 
 def test_randomized_requires_key():
-    a = jnp.zeros((10,), jnp.int32)
+    a = np.zeros((10,), np.int64)
     with pytest.raises(ValueError, match="randomized"):
-        provision_schedule(a, n_levels=4, delta=B, policy="A2")
+        run(a, policy="A2", n_levels=4)
+
+
+def test_unknown_policy_names_valid_set():
+    a = np.zeros((10,), np.int64)
+    with pytest.raises(ValueError, match="A1.*A2.*A3.*offline.*delayedoff"):
+        run(a, policy="A9", n_levels=4)
+    with pytest.raises(ValueError, match="valid policies"):
+        _level_schedule(jnp.zeros((10,), jnp.int32), 4, B, 0, "a1")
 
 
 def test_delayedoff_jax_matches_numpy_scan():
     rng = np.random.default_rng(6)
     a = rng.integers(0, 8, size=80)
     want = fluid_scan(a, "delayedoff", COSTS)
-    got = provision_schedule(jnp.asarray(a, jnp.int32),
-                             n_levels=int(a.max()) + 1, delta=B,
-                             policy="delayedoff")
-    np.testing.assert_array_equal(np.asarray(got), want.x)
+    got = run(a, policy="delayedoff")
+    np.testing.assert_array_equal(np.asarray(got.x), want.x)
 
 
 @pytest.mark.parametrize("window", [0, 2, 5])
@@ -210,20 +213,73 @@ def test_pallas_scan_matches_scan_engine(window):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_pallas_scan_distinct_prediction_trace():
+    """The kernel's peek reads the scalar-prefetched predicted trace, not a."""
+    rng = np.random.default_rng(15)
+    a = rng.integers(0, 8, size=100)
+    pred = with_prediction_error(a, rng, 0.4)
+    assert not np.array_equal(pred, a)
+    n = int(max(a.max(), pred.max())) + 1
+    w = 2
+    aj = jnp.asarray(a, jnp.int32)
+    pj = jnp.asarray(pred, jnp.int32)
+    want = _level_schedule(aj, n, B, w, "A1", predicted=pj)
+    got = provision_scan(aj, jnp.full((n,), float(B - w - 1), jnp.float32),
+                         delta=B, horizon=w + 1, predicted=pj)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and erroneous predictions must actually change the schedule somewhere
+    exact = provision_scan(aj, jnp.full((n,), float(B - w - 1), jnp.float32),
+                           delta=B, horizon=w + 1)
+    assert not np.array_equal(np.asarray(got), np.asarray(exact))
+
+
+def test_pallas_scan_heterogeneous_per_level_horizon():
+    """Per-level Δ: thresholds AND peek reach vary per level, masked in-kernel."""
+    rng = np.random.default_rng(16)
+    a = rng.integers(0, 9, size=90)
+    n = int(a.max()) + 1
+    w = 2
+    delta_lv = np.where(np.arange(n) % 2 == 0, 6.0, 3.0)
+    aj = jnp.asarray(a, jnp.int32)
+    want = _level_schedule(aj, n, delta_lv, w, "A1")
+    thr = jnp.asarray(np.maximum(0.0, delta_lv - w - 1), jnp.float32)
+    lh = jnp.asarray(np.minimum(w + 1.0, delta_lv), jnp.float32)
+    got = provision_scan(aj, thr, delta=6, horizon=w + 1, level_horizon=lh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_sharded_randomized_matches_unsharded():
     """Sharded Pallas path (1 device => same key stream) == jitted engine."""
     rng = np.random.default_rng(10)
-    a = jnp.asarray(rng.integers(0, 6, size=70), jnp.int32)
-    n = 6
+    a = rng.integers(0, 6, size=70)
     key = jax.random.key(12)
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     if len(jax.devices()) > 1:
         pytest.skip("key-stream equality only holds unsharded")
-    got = provision_schedule_sharded(mesh, a, n_levels=n, delta=B, window=2,
-                                     policy="A3", key=key)
-    want = provision_schedule(a, n_levels=n, delta=B, window=2, policy="A3",
-                              key=key)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got = run(a, window=2, policy="A3", key=key, n_levels=6, mesh=mesh)
+    want = run(a, window=2, policy="A3", key=key, n_levels=6)
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_allclose(np.asarray(got.level_cost),
+                               np.asarray(want.level_cost), rtol=1e-6)
+
+
+def test_sharded_path_consumes_predicted_trace():
+    """The shard_map/Pallas fleet path peeks an erroneous prediction trace
+    and matches the lax.scan engine bit-exactly (the old sharded API
+    silently dropped ``predicted``)."""
+    rng = np.random.default_rng(11)
+    a = msr_like_trace(rng, n_slots=150, mean_jobs=12.0)
+    pred = with_prediction_error(a, rng, 0.3)
+    n = int(max(a.max(), pred.max())) + 1
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    for use_pallas in (True, False):
+        got = run(a, window=2, predicted=pred, n_levels=n, mesh=mesh,
+                  use_pallas=use_pallas)
+        want = run(a, window=2, predicted=pred, n_levels=n)
+        np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    # the noisy prediction must differ from the exact-prediction schedule
+    exact = run(a, window=2, n_levels=n)
+    assert not np.array_equal(np.asarray(got.x), np.asarray(exact.x))
 
 
 def test_batched_cost_matches_per_trace_cost():
@@ -233,23 +289,121 @@ def test_batched_cost_matches_per_trace_cost():
         np.asarray(_level_schedule(jnp.asarray(ai, jnp.int32), 6, B, 1, "A1"))
         for ai in ab
     ])
-    batched = provision_cost(jnp.asarray(ab), jnp.asarray(ons),
-                             COSTS.P, COSTS.beta_on, COSTS.beta_off)
+    batched = on_matrix_cost(jnp.asarray(ab), jnp.asarray(ons), COSTS)
     for i in range(4):
-        single = provision_cost(jnp.asarray(ab[i]), jnp.asarray(ons[i]),
-                                COSTS.P, COSTS.beta_on, COSTS.beta_off)
+        single = on_matrix_cost(jnp.asarray(ab[i]), jnp.asarray(ons[i]), COSTS)
         assert float(batched[i]) == pytest.approx(float(single))
 
 
 def test_sharded_fleet_matches_single_device():
     """shard_map level-sharded provisioning == single-device result."""
     a = msr_like_trace(np.random.default_rng(2), n_slots=200, mean_jobs=20.0)
-    n = int(a.max()) + 1
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    got = provision_schedule_sharded(
-        mesh, jnp.asarray(a, jnp.int32), n_levels=n, delta=B, window=2
+    got = run(a, window=2, mesh=mesh)
+    want = run(a, window=2, policy="A1")
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_allclose(np.asarray(got.level_cost),
+                               np.asarray(want.level_cost), rtol=1e-6)
+
+
+def test_sharded_multi_device_padding_masked():
+    """4 forced host devices, n_levels not divisible: the padded phantom
+    levels must not inflate x(t) when demand exceeds the fleet cap."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+)
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PAPER_COSTS, PolicySpec, ProvisionSpec, Workload, provision
+assert len(jax.devices()) == 4, jax.devices()
+rng = np.random.default_rng(0)
+a = rng.integers(0, 11, size=80)          # peak demand above the fleet cap
+n = 6                                      # n_padded = 8 -> 2 phantom levels
+mesh = jax.make_mesh((4,), ("data",))
+def spec(mesh=None):
+    return ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=jnp.asarray(a, jnp.int32)),
+        policy=PolicySpec("A1", window=2), n_levels=n, mesh=mesh)
+got = provision(spec(mesh))
+want = provision(spec())
+np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+np.testing.assert_allclose(np.asarray(got.level_cost),
+                           np.asarray(want.level_cost), rtol=1e-6)
+# randomized: uniforms drawn at n_levels, so the (trace, key) -> schedule
+# contract must hold across mesh sizes too
+def spec3(mesh=None):
+    return ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=jnp.asarray(a, jnp.int32)),
+        policy=PolicySpec("A3", window=2, key=jax.random.key(12)),
+        n_levels=n, mesh=mesh)
+np.testing.assert_array_equal(np.asarray(provision(spec3(mesh)).x),
+                              np.asarray(provision(spec3()).x))
+print("OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=dict(os.environ), timeout=300)
+    assert r.returncode == 0 and "OK" in r.stdout, (r.stdout, r.stderr[-2000:])
+
+
+def test_mesh_rejects_batched_and_sweep_and_offline():
+    a = np.ones((2, 30), np.int64)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    with pytest.raises(ValueError, match="one trace"):
+        run(a, mesh=mesh, n_levels=4)
+    with pytest.raises(ValueError, match="one trace and one window"):
+        run(a[0], windows=jnp.arange(2), mesh=mesh, n_levels=4)
+    with pytest.raises(ValueError, match="online policies"):
+        run(a[0], policy="offline", mesh=mesh, n_levels=4)
+
+
+def test_prediction_noise_workload():
+    """Workload.noise synthesizes the predicted trace (Sec. V-C) on device."""
+    from repro.core import PredictionNoise
+
+    rng = np.random.default_rng(17)
+    a = msr_like_trace(rng, n_slots=120, mean_jobs=10.0)
+    noise = PredictionNoise(std_frac=0.5, key=jax.random.key(2))
+    spec = ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=jnp.asarray(a, jnp.int32), noise=noise),
+        policy=PolicySpec("A1", window=3),
+        n_levels=int(a.max()) + 1,
     )
-    want = provision_schedule(
-        jnp.asarray(a, jnp.int32), n_levels=n, delta=B, window=2, policy="A1"
-    )
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    res = provision(spec)
+    # identical to passing the synthesized trace explicitly
+    pred = noise.apply(jnp.asarray(a, jnp.int32))
+    want = run(a, window=3, predicted=pred)
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(want.x))
+    # and different from the exact-prediction schedule
+    exact = run(a, window=3)
+    assert not np.array_equal(np.asarray(res.x), np.asarray(exact.x))
+    with pytest.raises(ValueError, match="not both"):
+        provision(dataclasses.replace(
+            spec, workload=Workload(jnp.asarray(a, jnp.int32), predicted=pred,
+                                    noise=noise)))
+    # batched noise reduces to its unbatched rows (key split per trace,
+    # same convention as PolicySpec.key)
+    ab = np.stack([a, a[::-1].copy()])
+    bres = provision(dataclasses.replace(
+        spec, workload=Workload(jnp.asarray(ab, jnp.int32), noise=noise)))
+    keys = jax.random.split(noise.key, 2)
+    for i in range(2):
+        ri = provision(dataclasses.replace(
+            spec, workload=Workload(jnp.asarray(ab[i], jnp.int32),
+                                    noise=PredictionNoise(0.5, keys[i]))))
+        np.testing.assert_array_equal(np.asarray(bres.x[i]), np.asarray(ri.x))
+
+
+def test_predicted_shape_must_match_demand():
+    ab = np.random.default_rng(18).integers(0, 5, size=(4, 25))
+    with pytest.raises(ValueError, match="must match demand shape"):
+        run(ab, predicted=ab.T, n_levels=5)       # same size, wrong shape
+    with pytest.raises(ValueError, match="must match demand shape"):
+        run(ab[0], predicted=ab[0][:-1], n_levels=5)

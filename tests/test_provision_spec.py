@@ -1,0 +1,302 @@
+"""Property tests for the declarative ProvisionSpec API.
+
+Covers the heterogeneous-cost reduction laws (per-level arrays that all
+share ``PAPER_COSTS`` must reproduce the homogeneous ``fluid_cost`` /
+``fluid_scan`` / ``schedule_cost`` numbers), the per-level-group
+decomposition of genuinely heterogeneous fleets, and the deprecated
+loose-kwargs wrappers (must warn AND return bit-identical results).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # property tests skip; the rest of the file still runs
+    given = None
+
+from repro.core import (
+    CostModel,
+    PAPER_COSTS,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
+    fluid_cost,
+    fluid_scan,
+    on_matrix_cost,
+    provision,
+    schedule_cost,
+)
+from repro.core.stepfn import StepFn
+
+
+def spec_for(a, costs, policy="A1", window=0, windows=None, key=None,
+             n_levels=None, predicted=None):
+    return ProvisionSpec(
+        costs=costs,
+        workload=Workload(
+            demand=jnp.asarray(a, jnp.int32),
+            predicted=None if predicted is None else jnp.asarray(predicted, jnp.int32),
+        ),
+        policy=PolicySpec(policy, window=window, windows=windows, key=key),
+        n_levels=n_levels if n_levels is not None else int(np.asarray(a).max()) + 1,
+    )
+
+
+def hetero_paper_costs(n_levels):
+    """A per-level CostModel where every level is PAPER_COSTS."""
+    return CostModel(
+        P=np.full(n_levels, 1.0),
+        beta_on=np.full(n_levels, 3.0),
+        beta_off=np.full(n_levels, 3.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous arrays that are secretly homogeneous == the scalar numbers
+# (hypothesis property tests; the reduction law itself, one fixed example
+# each, also runs without hypothesis below)
+# ---------------------------------------------------------------------------
+
+def check_reduces_to_fluid_scan_a1(a, window):
+    n = int(a.max()) + 1
+    res = provision(spec_for(a, hetero_paper_costs(n), "A1", window=window))
+    want = fluid_scan(a, "A1", PAPER_COSTS, window=window)
+    np.testing.assert_array_equal(np.asarray(res.x), want.x)
+    assert float(res.cost) == pytest.approx(want.cost, rel=1e-6)
+    # and the schedule x(t), priced as a step function (paper eq. 5 boundary),
+    # carries the same homogeneous schedule_cost
+    x = np.asarray(res.x, np.float64)
+    fn = StepFn(times=[float(t) for t in range(len(x))], values=list(x),
+                horizon=float(len(x)))
+    assert schedule_cost(fn, PAPER_COSTS, final_level=float(a[-1])) == \
+        pytest.approx(float(res.cost), rel=1e-6)
+
+
+def check_reduces_to_fluid_cost_offline(a):
+    n = int(a.max()) + 1
+    res = provision(spec_for(a, hetero_paper_costs(n), "offline"))
+    want = fluid_cost(a, "offline", PAPER_COSTS).cost
+    assert float(res.cost) == pytest.approx(want, rel=1e-6)
+
+
+def check_matches_scalar_model_randomized(a, window, seed):
+    """Same key => A2/A3 under the per-level array model are bit-identical to
+    the scalar model (not just in expectation)."""
+    n = int(a.max()) + 1
+    key = jax.random.key(seed)
+    het = provision(spec_for(a, hetero_paper_costs(n), "A3", window=window, key=key))
+    homog = provision(spec_for(a, PAPER_COSTS, "A3", window=window, key=key))
+    np.testing.assert_array_equal(np.asarray(het.x), np.asarray(homog.x))
+    np.testing.assert_array_equal(np.asarray(het.level_cost),
+                                  np.asarray(homog.level_cost))
+
+
+if given is not None:
+    traces = st.lists(st.integers(min_value=0, max_value=6), min_size=8,
+                      max_size=40).map(lambda xs: np.asarray(xs, np.int64))
+
+    @settings(max_examples=25, deadline=None)
+    @given(a=traces, window=st.integers(min_value=0, max_value=6))
+    def test_hetero_paper_costs_reduce_to_fluid_scan_a1(a, window):
+        check_reduces_to_fluid_scan_a1(a, window)
+
+    @settings(max_examples=25, deadline=None)
+    @given(a=traces)
+    def test_hetero_paper_costs_reduce_to_fluid_cost_offline(a):
+        check_reduces_to_fluid_cost_offline(a)
+
+    @settings(max_examples=15, deadline=None)
+    @given(a=traces, window=st.integers(min_value=0, max_value=4),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_hetero_paper_costs_match_scalar_model_randomized(a, window, seed):
+        check_matches_scalar_model_randomized(a, window, seed)
+
+
+def test_hetero_reduction_fixed_examples():
+    """The reduction laws on fixed traces (runs even without hypothesis)."""
+    rng = np.random.default_rng(30)
+    for window in (0, 3, 6):
+        check_reduces_to_fluid_scan_a1(rng.integers(0, 7, size=40), window)
+    check_reduces_to_fluid_cost_offline(rng.integers(0, 7, size=40))
+    check_matches_scalar_model_randomized(rng.integers(0, 7, size=40), 2, 77)
+
+
+# ---------------------------------------------------------------------------
+# Genuinely heterogeneous fleets decompose per level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["A1", "A2", "offline", "delayedoff"])
+def test_hetero_level_groups_match_their_homogeneous_engine(policy):
+    """Levels are independent ski-rental instances: a two-class fleet's
+    per-level costs must equal the matching columns of single-class runs."""
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 8, size=120)
+    n = int(a.max()) + 1
+    beta = np.where(np.arange(n) % 2 == 0, 3.0, 1.5)       # Delta 6 / 3
+    key = jax.random.key(5) if policy == "A2" else None
+    het = provision(spec_for(a, CostModel(P=1.0, beta_on=beta, beta_off=beta),
+                             policy, window=2, key=key))
+    for half in (3.0, 1.5):
+        homog = provision(spec_for(
+            a, CostModel(P=1.0, beta_on=np.full(n, half), beta_off=np.full(n, half)),
+            policy, window=2, key=key))
+        cols = np.flatnonzero(beta == half)
+        np.testing.assert_allclose(
+            np.asarray(het.level_cost)[cols], np.asarray(homog.level_cost)[cols],
+            rtol=1e-6,
+        )
+
+
+def test_all_policies_run_heterogeneous_end_to_end():
+    """Acceptance: one (n_levels,) CostModel through every policy, as one
+    jitted program each — schedule covers demand, costs decompose."""
+    rng = np.random.default_rng(4)
+    a = rng.integers(0, 10, size=100)
+    n = int(a.max()) + 1
+    costs = CostModel(
+        P=np.linspace(0.8, 1.2, n),
+        beta_on=np.linspace(1.0, 4.0, n),
+        beta_off=np.linspace(1.0, 4.0, n)[::-1].copy(),
+    )
+    for policy in ("A1", "A2", "A3", "offline", "delayedoff"):
+        key = jax.random.key(9) if policy in ("A2", "A3") else None
+        res = provision(spec_for(a, costs, policy, window=2, key=key))
+        assert (np.asarray(res.x) >= a).all(), policy
+        assert float(res.cost) == pytest.approx(float(res.level_cost.sum()), rel=1e-6)
+        assert np.isfinite(np.asarray(res.level_cost)).all(), policy
+
+
+def test_cost_model_validation():
+    assert PAPER_COSTS.delta == 6.0 and not PAPER_COSTS.is_heterogeneous
+    het = CostModel(P=np.array([1.0, 2.0]), beta_on=np.array([3.0, 4.0]),
+                    beta_off=np.array([3.0, 4.0]))
+    np.testing.assert_allclose(np.asarray(het.delta), [6.0, 4.0])
+    assert het.is_heterogeneous and het.n_levels == 2 and het.delta_slots() == 6
+    with pytest.raises(ValueError, match="pinned to 2 levels"):
+        het.per_level(3)
+    with pytest.raises(ValueError, match="inconsistent"):
+        CostModel(P=np.ones(2), beta_on=np.ones(3)).n_levels
+    # n_levels defaults to the cost model's own length
+    res = provision(ProvisionSpec(
+        costs=het,
+        workload=Workload(demand=jnp.asarray([1, 2, 1, 0, 0, 1], jnp.int32)),
+        policy=PolicySpec("A1"),
+    ))
+    assert res.level_cost.shape == (2,)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated wrappers: warn, and forward bit-identically
+# ---------------------------------------------------------------------------
+
+def _no_warn_provision(spec):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        return provision(spec)
+
+
+def test_provision_schedule_wrapper_warns_and_matches():
+    from repro.core import provision_schedule
+
+    rng = np.random.default_rng(20)
+    a = rng.integers(0, 7, size=80)
+    n = int(a.max()) + 1
+    key = jax.random.key(1)
+    for policy in ("A1", "A3", "offline", "delayedoff"):
+        k = key if policy == "A3" else None
+        with pytest.warns(DeprecationWarning, match="^deprecated"):
+            old = provision_schedule(jnp.asarray(a, jnp.int32), n_levels=n,
+                                     delta=6, window=2, policy=policy, key=k)
+        new = _no_warn_provision(spec_for(a, PAPER_COSTS, policy, window=2,
+                                          key=k, n_levels=n))
+        np.testing.assert_array_equal(np.asarray(old), np.asarray(new.x))
+
+
+def test_provision_sweep_wrappers_warn_and_match():
+    from repro.core import provision_sweep, provision_sweep_costs
+
+    rng = np.random.default_rng(21)
+    ab = rng.integers(0, 6, size=(3, 60))
+    windows = jnp.arange(4)
+    key = jax.random.key(2)
+    with pytest.warns(DeprecationWarning, match="^deprecated"):
+        old_x = provision_sweep(jnp.asarray(ab, jnp.int32), n_levels=6, delta=6,
+                                windows=windows, policy="A3", key=key)
+    with pytest.warns(DeprecationWarning, match="^deprecated"):
+        old_c = provision_sweep_costs(jnp.asarray(ab, jnp.int32), n_levels=6,
+                                      delta=6, windows=windows, policy="A3",
+                                      key=key, P=1.0, beta_on=3.0, beta_off=3.0)
+    new = _no_warn_provision(spec_for(ab, PAPER_COSTS, "A3", windows=windows,
+                                      key=key, n_levels=6))
+    np.testing.assert_array_equal(np.asarray(old_x), np.asarray(new.x))
+    np.testing.assert_array_equal(np.asarray(old_c), np.asarray(new.cost))
+
+
+def test_provision_sweep_costs_rejects_inconsistent_delta():
+    from repro.core import provision_sweep_costs
+
+    with pytest.warns(DeprecationWarning, match="^deprecated"):
+        with pytest.raises(ValueError, match="disagrees"):
+            provision_sweep_costs(jnp.ones((10,), jnp.int32), n_levels=2,
+                                  delta=7, windows=jnp.arange(2),
+                                  P=1.0, beta_on=3.0, beta_off=3.0)
+
+
+def test_provision_cost_wrapper_warns_and_matches():
+    from repro.core import provision_cost
+    from repro.core.jax_provision import _level_schedule
+
+    rng = np.random.default_rng(22)
+    a = rng.integers(0, 6, size=50)
+    ons = _level_schedule(jnp.asarray(a, jnp.int32), 6, 6, 1, "A1")
+    with pytest.warns(DeprecationWarning, match="^deprecated"):
+        old = provision_cost(jnp.asarray(a), ons, 1.0, 3.0, 3.0)
+    new = on_matrix_cost(jnp.asarray(a), ons, PAPER_COSTS)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+
+def test_provision_schedule_sharded_wrapper_warns_and_matches():
+    from repro.core import provision_schedule_sharded
+
+    rng = np.random.default_rng(23)
+    a = rng.integers(0, 6, size=60)
+    n = int(a.max()) + 1
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    with pytest.warns(DeprecationWarning, match="^deprecated"):
+        old = provision_schedule_sharded(mesh, jnp.asarray(a, jnp.int32),
+                                         n_levels=n, delta=6, window=2)
+    new = _no_warn_provision(dataclasses.replace(
+        spec_for(a, PAPER_COSTS, "A1", window=2, n_levels=n), mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new.x))
+
+
+# ---------------------------------------------------------------------------
+# Serving front-end
+# ---------------------------------------------------------------------------
+
+def test_fleet_provisioner_takes_policy_spec():
+    from repro.serving import FleetProvisioner
+
+    a = np.random.default_rng(24).integers(0, 5, size=80)
+    planner = FleetProvisioner(
+        PAPER_COSTS, policy=PolicySpec("A1", window=2), max_replicas=8,
+    )
+    res = planner.plan(a)
+    want = provision(spec_for(a, PAPER_COSTS, "A1", window=2, n_levels=8))
+    np.testing.assert_array_equal(np.asarray(res.x), np.asarray(want.x))
+    assert float(res.cost) == pytest.approx(float(want.cost))
+
+
+def test_unknown_policy_value_errors_name_valid_set():
+    from repro.serving import FleetProvisioner
+    from repro.serving.autoscaler import ReplicaAutoscaler
+
+    with pytest.raises(ValueError, match="valid policies"):
+        FleetProvisioner(PAPER_COSTS, policy="A7")
+    with pytest.raises(ValueError, match="valid policies"):
+        ReplicaAutoscaler(4, PAPER_COSTS, policy="nope")

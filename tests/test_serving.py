@@ -83,9 +83,10 @@ def test_fleet_provisioner_matches_fluid_scan():
     a = msr_like_trace(np.random.default_rng(5), n_slots=150, mean_jobs=8.0)
     planner = FleetProvisioner(COSTS, policy="A1", window=2,
                               max_replicas=int(a.max()) + 1)
-    x = planner.plan(a)
-    want = fluid_scan(a, "A1", COSTS, window=2).x
-    np.testing.assert_array_equal(x, want)
+    res = planner.plan(a)
+    want = fluid_scan(a, "A1", COSTS, window=2)
+    np.testing.assert_array_equal(np.asarray(res.x), want.x)
+    assert float(res.cost) == pytest.approx(want.cost, rel=1e-6)
 
 
 def test_fleet_provisioner_batched_sweep_shapes():
