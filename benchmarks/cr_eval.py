@@ -1,0 +1,96 @@
+"""Competitive-ratio evaluation CLI: the paper's claims as a JSON artifact.
+
+Runs ``repro.eval.evaluate`` over the scenario library and writes the
+:class:`~repro.eval.report.EvalReport` to ``BENCH_provision.json`` — the
+repo's provisioning-quality trajectory (CI uploads it per commit).
+
+    PYTHONPATH=src python benchmarks/cr_eval.py --smoke   # CI leg, ~30 s
+    PYTHONPATH=src python benchmarks/cr_eval.py           # full grid
+
+Both legs hard-fail if any (policy, scenario, noise, α) cell's empirical CR
+violates its paper bound beyond the grid tolerance, or if re-running the
+grid recompiles anything (the whole grid must execute as warmed batched
+device programs — one program per (policy, scenario), shapes shared across
+scenarios).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.eval import EvalGrid, EvalReport, evaluate
+
+SMOKE_GRID = EvalGrid(
+    noise_stds=(0.0, 0.2),
+    windows=(0, 2, 4),
+    n_traces=4,
+    n_slots=288,
+)
+
+FULL_GRID = EvalGrid(
+    noise_stds=(0.0, 0.1, 0.25, 0.5),
+    windows=(0, 1, 2, 3, 4, 5),
+    n_traces=16,
+)
+
+
+def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True) -> EvalReport:
+    report = evaluate(grid)
+    try:
+        if check_warm:
+            # the grid again, same shapes: every cell must hit the jit cache
+            second = evaluate(grid)
+            if second.jit_entries_added > 0:
+                raise AssertionError(
+                    f"warmed re-run recompiled {second.jit_entries_added} "
+                    "program(s): a spec field leaked into the compile keys"
+                )
+        if report.jit_entries_added > report.expected_compiles:
+            raise AssertionError(
+                f"{report.jit_entries_added} compiles for "
+                f"{len(report.grid['policies'])} policies — expected at most "
+                f"{report.expected_compiles} (one per policy + offline); "
+                "per-cell recompiles defeat the batched harness"
+            )
+        if not report.bounds_ok:
+            lines = "\n".join(
+                f"  {c.policy} on {c.scenario} (std={c.noise_std:g}, w={c.window}): "
+                f"mean CR {c.mean_cr:.4f} > bound {c.bound:.4f}"
+                for c in report.violations()
+            )
+            raise AssertionError(f"paper-bound violations:\n{lines}")
+    finally:
+        # always leave the report on disk — a gate failure is exactly when
+        # the per-cell diagnostics are needed (CI uploads it unconditionally)
+        report.save(out)
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI (short traces, fewer cells)")
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=pathlib.Path(__file__).parent.parent / "BENCH_provision.json",
+                    help="report path (default: repo-root BENCH_provision.json)")
+    args = ap.parse_args()
+
+    report = run(SMOKE_GRID if args.smoke else FULL_GRID, args.out)
+    for line in report.summary_lines():
+        print(line)
+    worst = report.worst(1)[0]
+    print(
+        f"# {len(report.cells)} cells ({'smoke' if args.smoke else 'full'}), "
+        f"backend={report.backend}, {report.elapsed_s:.1f}s, "
+        f"compiles={report.jit_entries_added}/{report.expected_compiles}, "
+        f"tightest cell: {worst.policy} on {worst.scenario} "
+        f"(mean CR {worst.mean_cr:.4f} vs bound {worst.bound:.4f})",
+        file=sys.stderr,
+    )
+    print(f"# wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

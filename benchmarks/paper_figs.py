@@ -3,8 +3,11 @@
 Fig. 3 and Fig. 4b run on the declarative jitted engine: each policy's
 whole (runs x alpha) grid is ONE device program (`provision` with a
 `PolicySpec(windows=...)` sweep) instead of a Python loop per (trace,
-policy, alpha) triple.  LCP keeps the closed-form numpy path (it is not
-one of the paper's ski-rental policies).
+policy, alpha) triple; Fig. 4c's error study rides the `PredictionNoise`
+(S,) sweep axis the same way.  LCP keeps the closed-form numpy path (it is
+not one of the paper's ski-rental policies).  Traces come from the scenario
+registry (`repro.scenarios`); `benchmarks/cr_eval.py` runs the full
+scenario x policy x noise grid and serializes the CR report.
 """
 from __future__ import annotations
 
@@ -18,21 +21,23 @@ from repro.core import (
     RANDOMIZED_POLICIES,
     CostModel,
     PolicySpec,
+    PredictionNoise,
     ProvisionSpec,
     Workload,
     fluid_cost,
-    msr_like_trace,
     provision,
-    scale_to_pmr,
     theoretical_ratio,
-    with_prediction_error,
 )
+from repro.core.traces import WEEK_SLOTS
+from repro.scenarios import Scenario, generate
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)   # Delta = 6, paper Sec. V-A
 
 
-def _trace():
-    return msr_like_trace(np.random.default_rng(0))
+def _trace(target_pmr: float = 4.63) -> np.ndarray:
+    """The paper's MSR-like week, drawn from the scenario registry."""
+    sc = Scenario("msr_diurnal", target_pmr=target_pmr, mean_jobs=40.0)
+    return generate(sc, 1, WEEK_SLOTS)[0]
 
 
 def _timed(fn, *args, **kw):
@@ -114,44 +119,46 @@ def fig4b_cost_reduction_vs_window(rows: list[str]) -> None:
 def fig4c_prediction_error(rows: list[str]) -> None:
     """Fig. 4c: robustness to zero-mean Gaussian prediction error.
 
-    The engine consumes a distinct ``predicted`` trace per replica, so the
-    whole (replicas x error-std) study is batched device programs; parity
-    of the predicted-trace path against the numpy ``fluid_scan`` reference
-    is covered by tests/test_jax_provision.py.
+    The whole (error-std x window x replica) study is ONE device program:
+    ``PredictionNoise.std_frac`` is the (S,) sweep axis — common random
+    numbers across stds — and the windows ride ``PolicySpec.windows``.
     """
     a = _trace()
     static = fluid_cost(a, "static", COSTS).cost
-    rng = np.random.default_rng(7)
     runs = 10
-    ab = jnp.asarray(np.tile(a, (runs, 1)), jnp.int32)
-    for w in (2, 4):
-        for std in (0.0, 0.1, 0.25, 0.5):
-            preds = jnp.asarray(
-                np.stack([with_prediction_error(a, rng, std) for _ in range(runs)]),
-                jnp.int32,
-            )
-            spec = ProvisionSpec(
-                costs=COSTS,
-                workload=Workload(demand=ab, predicted=preds),
-                policy=PolicySpec("A1", window=w),
-                n_levels=int(a.max()) + 1,
-            )
-            jax.block_until_ready(provision(spec).cost)       # warm the jit cache
-            t0 = time.perf_counter()
-            costs = jax.block_until_ready(provision(spec).cost)
-            us = (time.perf_counter() - t0) * 1e6 / runs
-            red = 1 - float(jnp.mean(costs)) / static
+    stds = (0.0, 0.1, 0.25, 0.5)
+    windows = (2, 4)
+    spec = ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(
+            demand=jnp.asarray(np.tile(a, (runs, 1)), jnp.int32),
+            noise=PredictionNoise(
+                std_frac=jnp.asarray(stds, jnp.float32), key=jax.random.key(7)
+            ),
+        ),
+        policy=PolicySpec("A1", windows=jnp.asarray(windows, jnp.int32)),
+        n_levels=int(a.max()) + 1,
+    )
+    jax.block_until_ready(provision(spec).cost)       # warm the jit cache
+    t0 = time.perf_counter()
+    costs = jax.block_until_ready(provision(spec).cost)     # (S, W, B)
+    us = (time.perf_counter() - t0) * 1e6 / (runs * len(stds) * len(windows))
+    for s, std in enumerate(stds):
+        for w, window in enumerate(windows):
+            red = 1 - float(jnp.mean(costs[s, w])) / static
             rows.append(
-                f"fig4c_A1_w{w}_std{int(std * 100)},{us:.1f},reduction={red:.4f}"
+                f"fig4c_A1_w{window}_std{int(std * 100)},{us:.1f},reduction={red:.4f}"
             )
 
 
 def fig4d_pmr_sweep(rows: list[str]) -> None:
-    """Fig. 4d: savings grow with the peak-to-mean ratio."""
-    base = _trace().astype(float)
+    """Fig. 4d: savings grow with the peak-to-mean ratio.
+
+    The PMR knob is the scenario's ``target_pmr`` field (same seed => same
+    base shape, only the Section V-D rescale differs).
+    """
     for pmr in (2, 3, 4, 6, 8, 10):
-        a = scale_to_pmr(base, float(pmr))
-        a = np.maximum(np.rint(a / a.mean() * 40.0), 0).astype(np.int64)
+        a = _trace(target_pmr=float(pmr))
         static = fluid_cost(a, "static", COSTS).cost
         (c, us) = _timed(lambda: fluid_cost(a, "A1", COSTS, window=1).cost)
         rows.append(f"fig4d_pmr{pmr},{us:.1f},reduction={1 - c / static:.4f}")

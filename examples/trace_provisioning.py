@@ -1,10 +1,14 @@
 """Paper experiments, interactive: competitive ratios, PMR sweep, and the
 fleet-scale declarative provisioner (one `provision(spec)` program per
-policy — batching, α-sweep, heterogeneous per-level costs, and shard_map
-level sharding through the Pallas scan are all spec fields).
+policy — batching, α-sweep, prediction-noise sweep, heterogeneous per-level
+costs, and shard_map level sharding through the Pallas scan are all spec
+fields).  Traces come from the scenario registry (`repro.scenarios`); run
+`benchmarks/cr_eval.py` for the full competitive-ratio grid.
 
     PYTHONPATH=src python examples/trace_provisioning.py
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,18 +20,19 @@ from repro.core import (
     ProvisionSpec,
     Workload,
     fluid_cost,
-    msr_like_trace,
     provision,
-    scale_to_pmr,
     theoretical_ratio,
 )
+from repro.core.traces import WEEK_SLOTS
+from repro.scenarios import Scenario, generate, make_workload
 
 COSTS = PAPER_COSTS                       # P = 1, beta 3/3 => Delta = 6
 DELTA = int(COSTS.delta)
+MSR = Scenario("msr_diurnal", target_pmr=4.63, mean_jobs=40.0)
 
 
 def main() -> None:
-    trace = msr_like_trace(np.random.default_rng(0))
+    trace = generate(MSR, 1, WEEK_SLOTS)[0]
     n_levels = int(trace.max()) + 1
     windows = jnp.arange(DELTA, dtype=jnp.int32)
 
@@ -55,15 +60,40 @@ def main() -> None:
         print(f"{alpha:>6.2f} {theoretical_ratio('A1', alpha):>9.3f} {a1[i]:>8.3f} "
               f"{theoretical_ratio('A3', alpha):>9.3f} {a3[i]:>8.3f}")
 
-    # --- Fig. 4d: PMR sweep
+    # --- Fig. 4d: PMR sweep — the scenario's target_pmr knob (same seed =>
+    # same base shape, only the Section V-D rescale differs)
     print("\nFig.4d — savings vs peak-to-mean ratio (offline optimum):")
-    base = trace.astype(float)
     for target in (2, 4, 6, 8, 10):
-        a = scale_to_pmr(base, float(target))
-        a = np.maximum(np.rint(a / a.mean() * 40.0), 0).astype(np.int64)
+        a = generate(dataclasses.replace(MSR, target_pmr=float(target)), 1, WEEK_SLOTS)[0]
         st = fluid_cost(a, "static", COSTS).cost
         op = fluid_cost(a, "offline", COSTS).cost
         print(f"  PMR={target:>2}: reduction {1 - op / st:6.1%}")
+
+    # --- scenario bank + noise sweep: one Workload from the registry, the
+    # prediction-error study as a (S,) sweep axis (common random numbers)
+    print("\nFlash crowd under prediction error (PredictionNoise sweep axis):")
+    stds = (0.0, 0.25, 0.5)
+    wl = make_workload(
+        Scenario("flash_crowd", target_pmr=4.63, mean_jobs=40.0),
+        n_traces=8, n_slots=WEEK_SLOTS, noise_std=jnp.asarray(stds),
+    )
+    res = provision(ProvisionSpec(
+        costs=COSTS,
+        workload=wl,
+        policy=PolicySpec("A1", window=2),
+        n_levels=int(wl.demand.max()) + 1,
+    ))
+    opt = provision(ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=wl.demand),
+        policy=PolicySpec("offline"),
+        n_levels=int(wl.demand.max()) + 1,
+    ))
+    cr = np.asarray(res.cost) / np.asarray(opt.cost)[None, :]
+    alpha = (2 + 1) / COSTS.delta
+    for s, std in enumerate(stds):
+        print(f"  std={std:4}: mean CR {cr[s].mean():.3f} "
+              f"(A1 bound {theoretical_ratio('A1', alpha):.2f})")
 
     # --- heterogeneous fleet: the bottom of the LIFO stack is cheap-to-idle
     # baseload (big Delta), the top is bursty spot capacity (small Delta) —
@@ -97,7 +127,6 @@ def main() -> None:
     print(f"  A1 x(t): max={int(res.x.max())}, mean={float(res.x.mean()):.1f} "
           f"(demand mean {trace.mean():.1f})")
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    import dataclasses
     res_sh = provision(dataclasses.replace(spec, mesh=mesh))
     assert (np.asarray(res.x) == np.asarray(res_sh.x)).all()
     print(f"  sharded over {len(jax.devices())} device(s): identical schedule ✓")

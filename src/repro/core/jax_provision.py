@@ -303,6 +303,25 @@ def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
     return jax.vmap(per_window)(windows)                 # each leaf (W, B, ...)
 
 
+@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy"))
+def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
+                     keys, *, n_levels, max_h, policy):
+    """:func:`_run` vmapped over a leading (S,) predicted-trace axis — the
+    ``PredictionNoise.std_frac`` sweep.  Demand, windows and keys are held
+    fixed across the sweep (common random numbers).  A separate jitted
+    entrypoint (rather than an inline ``vmap`` in ``provision``) so the
+    sweep path's compiles land in a countable cache — the eval harness's
+    no-recompile guard watches ``_cache_size`` here and on :func:`_run`."""
+
+    def one(predb_s):
+        return _run(
+            ab, predb_s, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys,
+            n_levels=n_levels, max_h=max_h, policy=policy,
+        )
+
+    return jax.vmap(one)(predb)
+
+
 # ---------------------------------------------------------------------------
 # Fleet-scale engine body: shard the level axis over the mesh (Pallas scan)
 # ---------------------------------------------------------------------------

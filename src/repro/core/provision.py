@@ -18,8 +18,10 @@ Passing ``mesh=`` shards the level axis over the mesh through the fused
 Pallas scan (:mod:`repro.kernels.provision_scan`).
 
 Shape convention: the result keeps a leading windows axis iff the spec used
-``windows=`` and a batch axis iff demand was ``(B, T)`` — mirroring the
-inputs, so ``result.x`` is ``(T,)``, ``(B, T)``, ``(W, T)`` or ``(W, B, T)``.
+``windows=``, a batch axis iff demand was ``(B, T)``, and an outermost
+noise axis iff ``PredictionNoise.std_frac`` was a ``(S,)`` sweep — mirroring
+the inputs, so ``result.x`` is ``(T,)``, ``(B, T)``, ``(W, T)``,
+``(W, B, T)`` … up to ``(S, W, B, T)``.
 """
 from __future__ import annotations
 
@@ -40,24 +42,38 @@ class PredictionNoise:
     The JAX-native form of :func:`repro.core.traces.with_prediction_error`
     (paper Sec. V-C): the peek step reads ``max(round(a + ε), 0)`` with
     ``ε ~ N(0, (std_frac · a)²)`` drawn from ``key``.
+
+    ``std_frac`` is a float, or a ``(S,)`` array to sweep error levels as a
+    leading axis of the result (like ``PolicySpec.windows``): the normal
+    draw is shared across the sweep (common random numbers), only its scale
+    varies, so ratio curves over S are variance-reduced and the ``S=1``
+    sweep reduces to the scalar row exactly.
     """
 
-    std_frac: float
+    std_frac: float | jax.Array
     key: jax.Array
 
     def apply(self, demand: jax.Array) -> jax.Array:
         """(T,) draws from ``key`` directly; (B, T) splits it per trace —
         the same convention as ``PolicySpec.key``, so batched noise studies
-        reduce to their unbatched rows exactly."""
+        reduce to their unbatched rows exactly.  A ``(S,)`` ``std_frac``
+        prepends an S axis to the result."""
         a = jnp.asarray(demand, jnp.float32)
 
-        def one(key, ai):
-            err = jax.random.normal(key, ai.shape) * self.std_frac * ai
-            return jnp.maximum(jnp.rint(ai + err), 0.0).astype(jnp.int32)
-
         if a.ndim == 2:
-            return jax.vmap(one)(jax.random.split(self.key, a.shape[0]), a)
-        return one(self.key, a)
+            z = jax.vmap(lambda k, ai: jax.random.normal(k, ai.shape))(
+                jax.random.split(self.key, a.shape[0]), a
+            )
+        else:
+            z = jax.random.normal(self.key, a.shape)
+        std = jnp.asarray(self.std_frac, jnp.float32)
+        if std.ndim == 1:
+            std = std.reshape((std.shape[0],) + (1,) * a.ndim)
+        elif std.ndim > 1:
+            raise ValueError(
+                f"std_frac must be a scalar or a (S,) sweep, got shape {std.shape}"
+            )
+        return jnp.maximum(jnp.rint(a + std * z * a), 0.0).astype(jnp.int32)
 
 
 jax.tree_util.register_dataclass(
@@ -72,8 +88,9 @@ class Workload:
     ``demand``: (T,) or (B, T) integer concurrency per slot.  ``predicted``:
     optional trace(s) of the same shape the prediction window reads (the
     dispatcher always sees the true current slot).  ``noise``: optional
-    :class:`PredictionNoise` that synthesizes ``predicted`` from ``demand``;
-    mutually exclusive with an explicit ``predicted``.
+    :class:`PredictionNoise` that synthesizes ``predicted`` from ``demand``
+    (its ``std_frac`` may be a ``(S,)`` sweep axis); mutually exclusive with
+    an explicit ``predicted``.
     """
 
     demand: jax.Array
@@ -192,15 +209,25 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
         raise ValueError(f"demand must be (T,) or (B, T), got shape {a.shape}")
     squeeze_b = a.ndim == 1
     ab = a[None] if squeeze_b else a
+    noise = spec.workload.noise
+    squeeze_s = noise is None or jnp.ndim(noise.std_frac) == 0
     pred = spec.workload.resolve_predicted(a)
     if pred is None:
         predb = ab
     else:
-        if pred.shape != a.shape:
+        want = (
+            a.shape
+            if squeeze_s
+            else (jnp.shape(noise.std_frac)[0],) + a.shape
+        )
+        if pred.shape != want:
             raise ValueError(
-                f"predicted shape {pred.shape} must match demand shape {a.shape}"
+                f"predicted shape {pred.shape} must match demand shape "
+                f"{a.shape}"
+                + ("" if squeeze_s else
+                   f" with a leading noise-sweep axis (expected {want})")
             )
-        predb = pred[None] if squeeze_b else pred
+        predb = jnp.expand_dims(pred, -2) if squeeze_b else pred
 
     n_levels = spec.n_levels
     if n_levels is None:
@@ -227,10 +254,12 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
         )
 
     if spec.mesh is not None:
-        if not squeeze_b or not squeeze_w:
+        if not squeeze_b or not squeeze_w or not squeeze_s:
             raise ValueError(
-                "mesh-sharded provisioning takes one trace and one window "
-                f"(got demand {a.shape}, windows {None if squeeze_w else windows.shape})"
+                "mesh-sharded provisioning takes one trace and one window, "
+                f"with a scalar noise std (got demand {a.shape}, windows "
+                f"{None if squeeze_w else windows.shape}, noise sweep "
+                f"{not squeeze_s})"
             )
         out = _engine._sharded_run(
             spec.mesh, spec.mesh_axis, a, pred, delta_lv, P_lv, bon_lv, boff_lv,
@@ -238,14 +267,20 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
             policy=pol.name, key=pol.key, use_pallas=spec.use_pallas,
         )
     else:
-        out = _engine._run(
+        # noise sweep: the engine vmapped over the (S,) predicted axis with
+        # the demand, windows and keys held fixed — common random numbers
+        # across error levels, one compiled program for the whole (S, W, B)
+        # grid
+        body = _engine._run if squeeze_s else _engine._run_noise_sweep
+        out = body(
             ab, predb, windows, delta_lv, P_lv, bon_lv, boff_lv, keys,
             n_levels=n_levels, max_h=max_h, policy=pol.name,
         )
+        lead = 0 if squeeze_s else 1
         if squeeze_b:
-            out = jax.tree.map(lambda o: o[:, 0], out)
+            out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead + 1), out)
         if squeeze_w:
-            out = jax.tree.map(lambda o: o[0], out)
+            out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead), out)
 
     level_cost = out["energy"] + out["on_cost"] + out["off_cost"]
     return ProvisionResult(

@@ -32,7 +32,10 @@ def _zipf_tokens(rng: np.random.Generator, vocab: int, shape: tuple) -> np.ndarr
         p = 1.0 / np.power(np.arange(vocab, dtype=np.float64) + 2.0, _ZIPF_EXPONENT)
         cdf = np.cumsum(p / p.sum())
         _zipf_cdf_cache[vocab] = cdf
-    return np.searchsorted(cdf, rng.uniform(size=shape)).astype(np.int64)
+    # the float64 CDF endpoint can land just below 1.0, in which case a draw
+    # above it would index one past the vocabulary — clamp to the last id
+    ids = np.searchsorted(cdf, rng.uniform(size=shape))
+    return np.minimum(ids, vocab - 1).astype(np.int64)
 
 
 def make_token_batch(cfg: ModelConfig, rng: np.random.Generator, batch: int,

@@ -1,0 +1,11 @@
+"""Competitive-ratio evaluation harness over the scenario library.
+
+``evaluate(EvalGrid(...)) -> EvalReport``: empirical CR of every policy ×
+scenario × noise-std × window cell against the offline optimum, checked
+against the paper's bounds, as warmed batched device programs.  The report
+serializes to ``BENCH_provision.json`` (``benchmarks/cr_eval.py``).
+"""
+from .harness import EvalGrid, evaluate
+from .report import SCHEMA, CellResult, EvalReport
+
+__all__ = ["SCHEMA", "CellResult", "EvalGrid", "EvalReport", "evaluate"]

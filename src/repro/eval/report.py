@@ -1,0 +1,136 @@
+"""The evaluation report schema: one JSON artifact per competitive-ratio run.
+
+``EvalReport`` is the serialized deliverable of :func:`repro.eval.evaluate`
+— the repo's benchmark trajectory (``BENCH_provision.json``).  It is plain
+dataclasses + ``json`` so the artifact diffs cleanly across PRs and loads
+without JAX: every (policy, scenario, noise_std, window) grid cell carries
+its empirical competitive-ratio statistics against the offline optimum and
+the paper-bound verdict.  ``schema`` is versioned; bump it when a field
+changes meaning, not when fields are appended.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+SCHEMA = "repro.eval/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class CellResult:
+    """One grid cell: a (policy, scenario, noise_std, window) combination.
+
+    ``mean_cr``/``p95_cr``/``max_cr`` are statistics of the per-trace ratio
+    ``cost / offline_cost`` over the scenario's trace batch.  ``bound`` is
+    the paper's worst-case ratio at this cell's α (``None`` when the policy
+    has no stated bound), and ``bound_ok`` is the verdict
+    ``mean_cr <= bound + tol + noise_slack * noise_std`` (the grid's slack
+    for sampling error and prediction noise) — an *expectation* check: the randomized
+    A2/A3 guarantee their ratio in expectation only, so the mean (not the
+    max) is what the paper promises.
+    """
+
+    policy: str
+    scenario: str
+    noise_std: float
+    window: int
+    alpha: float
+    bound: float | None
+    mean_cr: float
+    p95_cr: float
+    max_cr: float
+    mean_cost: float
+    mean_opt_cost: float
+    bound_ok: bool
+
+
+@dataclasses.dataclass
+class EvalReport:
+    """The full grid's results plus enough metadata to reproduce them."""
+
+    grid: dict
+    cells: list[CellResult]
+    backend: str
+    jit_entries_added: int
+    expected_compiles: int
+    elapsed_s: float
+    schema: str = SCHEMA
+
+    @property
+    def bounds_ok(self) -> bool:
+        """True iff every cell's empirical CR respects its paper bound."""
+        return all(c.bound_ok for c in self.cells)
+
+    def violations(self) -> list[CellResult]:
+        return [c for c in self.cells if not c.bound_ok]
+
+    def threshold(self, c: CellResult) -> float | None:
+        """The value ``bound_ok`` compared ``mean_cr`` against: the paper
+        bound plus the grid's sampling tolerance and per-std noise slack."""
+        if c.bound is None:
+            return None
+        return (
+            c.bound
+            + float(self.grid.get("tol", 0.0))
+            + float(self.grid.get("noise_slack", 0.0)) * c.noise_std
+        )
+
+    def worst(self, n: int = 5) -> list[CellResult]:
+        """The ``n`` cells with the least slack to their *effective*
+        threshold (the same one ``bound_ok`` used), tightest first;
+        boundless cells sort by raw mean CR."""
+        def slack(c: CellResult) -> float:
+            t = self.threshold(c)
+            return (t - c.mean_cr) if t is not None else -c.mean_cr
+
+        return sorted(self.cells, key=slack)[:n]
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": self.schema,
+            "grid": self.grid,
+            "backend": self.backend,
+            "jit_entries_added": self.jit_entries_added,
+            "expected_compiles": self.expected_compiles,
+            "elapsed_s": self.elapsed_s,
+            "bounds_ok": self.bounds_ok,
+            "cells": [dataclasses.asdict(c) for c in self.cells],
+        }
+
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.write_text(json.dumps(self.to_dict(), indent=2) + "\n")
+        return path
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EvalReport":
+        if d.get("schema") != SCHEMA:
+            raise ValueError(
+                f"report schema {d.get('schema')!r} != expected {SCHEMA!r}"
+            )
+        return cls(
+            grid=d["grid"],
+            cells=[CellResult(**c) for c in d["cells"]],
+            backend=d["backend"],
+            jit_entries_added=d["jit_entries_added"],
+            expected_compiles=d["expected_compiles"],
+            elapsed_s=d["elapsed_s"],
+            schema=d["schema"],
+        )
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "EvalReport":
+        return cls.from_dict(json.loads(pathlib.Path(path).read_text()))
+
+    def summary_lines(self) -> list[str]:
+        """Human-readable per-cell table (policy-major, CSV-ish)."""
+        lines = ["policy,scenario,noise,window,alpha,mean_cr,p95_cr,bound,ok"]
+        for c in self.cells:
+            b = "-" if c.bound is None else f"{c.bound:.4f}"
+            lines.append(
+                f"{c.policy},{c.scenario},{c.noise_std:g},{c.window},"
+                f"{c.alpha:.2f},{c.mean_cr:.4f},{c.p95_cr:.4f},{b},"
+                f"{'ok' if c.bound_ok else 'VIOLATED'}"
+            )
+        return lines

@@ -1,0 +1,147 @@
+"""The scenario registry: parametric workload generators behind one dataclass.
+
+A :class:`Scenario` is a *name* into the registry plus the knobs that make a
+concrete workload population from it: generator ``params``, the ``seed`` of
+the trace stream, and the two scale knobs every scenario shares —
+``target_pmr`` (enforced per trace via :func:`repro.core.traces.scale_to_pmr`,
+the paper's Section V-D transform) and ``mean_jobs``.  :func:`generate` turns
+one into a ``(n_traces, n_slots)`` integer demand batch; :func:`make_workload`
+goes one step further and returns a ready
+:class:`~repro.core.provision.Workload` with an optional
+:class:`~repro.core.provision.PredictionNoise` attached (``noise_std`` may be
+a ``(S,)`` sweep, the spec axis the eval harness consumes).
+
+Trace ``i`` of a batch is drawn from ``default_rng((seed, i))`` — the same
+convention as ``TokenPipeline.batch_at`` — so batches are deterministic,
+extendable (the first ``B`` traces of a bigger batch are unchanged), and
+shared across eval cells (common random numbers).
+
+Register new generators with :func:`register_scenario`; see
+:mod:`repro.scenarios.generators` for the built-in bank and
+``docs/scenarios.md`` for the how-to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.traces import scale_to_pmr
+
+GeneratorFn = Callable[..., np.ndarray]
+
+_REGISTRY: dict[str, GeneratorFn] = {}
+
+
+def register_scenario(name: str) -> Callable[[GeneratorFn], GeneratorFn]:
+    """Decorator: register ``fn(rng, n_slots, **params) -> (n_slots,) float``
+    under ``name``.  Re-registering a taken name raises (rename or remove
+    the old generator explicitly)."""
+
+    def deco(fn: GeneratorFn) -> GeneratorFn:
+        if name in _REGISTRY:
+            raise ValueError(f"scenario {name!r} is already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def scenario_names() -> tuple[str, ...]:
+    """All registered generator names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_generator(name: str) -> GeneratorFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}: registered scenarios are {scenario_names()}"
+        ) from None
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One workload population: a registered generator plus its knobs.
+
+    ``params`` go to the generator verbatim; ``target_pmr``/``mean_jobs``
+    are applied afterwards by :func:`generate` (PMR first — the rescale is
+    mean-preserving — then the mean), so every scenario hits the same scale
+    regardless of its raw shape.  ``target_pmr=None`` keeps the generator's
+    natural peakiness.
+    """
+
+    name: str
+    params: dict = dataclasses.field(default_factory=dict)
+    seed: int = 0
+    target_pmr: float | None = None
+    mean_jobs: float = 32.0
+
+    def describe(self) -> str:
+        kv = ", ".join(f"{k}={v}" for k, v in sorted(self.params.items()))
+        pmr = "natural" if self.target_pmr is None else f"{self.target_pmr:g}"
+        return (
+            f"{self.name}(seed={self.seed}, pmr={pmr}, "
+            f"mean={self.mean_jobs:g}{', ' + kv if kv else ''})"
+        )
+
+
+def generate(scenario: Scenario, n_traces: int, n_slots: int) -> np.ndarray:
+    """``(n_traces, n_slots)`` int64 demand batch for one scenario.
+
+    Each trace gets its own ``default_rng((seed, i))`` stream, then the
+    shared rescale: ``scale_to_pmr`` to ``target_pmr`` (if set), mean to
+    ``mean_jobs``, round to integer jobs, clip at 0.
+    """
+    fn = get_generator(scenario.name)
+    out = np.empty((n_traces, n_slots), np.int64)
+    for i in range(n_traces):
+        rng = np.random.default_rng((scenario.seed, i))
+        a = np.asarray(fn(rng, n_slots, **scenario.params), np.float64)
+        if a.shape != (n_slots,):
+            raise ValueError(
+                f"scenario {scenario.name!r} generator returned shape "
+                f"{a.shape}, expected ({n_slots},)"
+            )
+        if scenario.target_pmr is not None:
+            a = scale_to_pmr(a, float(scenario.target_pmr))
+        mean = a.mean()
+        if mean > 0:
+            a = a / mean * scenario.mean_jobs
+        out[i] = np.maximum(np.rint(a), 0).astype(np.int64)
+    return out
+
+
+def make_workload(
+    scenario: Scenario,
+    n_traces: int,
+    n_slots: int,
+    *,
+    noise_std=None,
+    noise_key=None,
+):
+    """A ready :class:`~repro.core.provision.Workload` for one scenario.
+
+    ``noise_std``: optional ``std_frac`` for a
+    :class:`~repro.core.provision.PredictionNoise` — a scalar, or a ``(S,)``
+    array to sweep prediction-error levels as a leading result axis (common
+    random numbers: one normal draw per trace, scaled per level).
+    ``noise_key``: PRNG key for the noise draws; defaults to
+    ``jax.random.key(scenario.seed)``.  A single trace (``n_traces=1``)
+    still yields a ``(1, n_slots)`` batch — index ``demand[0]`` if you want
+    the unbatched convention.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.provision import PredictionNoise, Workload
+
+    demand = jnp.asarray(generate(scenario, n_traces, n_slots), jnp.int32)
+    noise = None
+    if noise_std is not None:
+        if noise_key is None:
+            noise_key = jax.random.key(scenario.seed)
+        noise = PredictionNoise(std_frac=noise_std, key=noise_key)
+    return Workload(demand=demand, noise=noise)

@@ -1,0 +1,42 @@
+"""Token-substrate regressions: the Zipf sampler's ids must stay in-vocab."""
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokens import TokenPipeline, _zipf_tokens
+
+
+class _NearOneRng:
+    """An rng whose uniforms all land above the float64 CDF endpoint."""
+
+    def uniform(self, size=None):
+        return np.full(size, 1.0 - 1e-15)
+
+
+def test_zipf_ids_stay_in_vocab_when_u_is_near_one():
+    # the Zipf CDF's float64 endpoint is < 1.0, so a draw above it used to
+    # searchsorted to index `vocab` — one past the embedding table
+    vocab = 257
+    ids = _zipf_tokens(_NearOneRng(), vocab, (4, 8))
+    assert ids.shape == (4, 8)
+    assert ids.max() == vocab - 1
+    assert ids.min() >= 0
+
+
+def test_zipf_ids_in_range_and_deterministic_at_scale():
+    rng = np.random.default_rng(0)
+    ids = _zipf_tokens(rng, 1000, (64, 64))
+    assert 0 <= ids.min() and ids.max() < 1000
+    redraw = _zipf_tokens(np.random.default_rng(0), 1000, (64, 64))
+    np.testing.assert_array_equal(ids, redraw)
+
+
+def test_pipeline_batches_stay_in_vocab():
+    cfg = ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=8, n_heads=2,
+        n_kv_heads=2, d_ff=16, vocab_size=64,
+    )
+    pipe = TokenPipeline(cfg, batch=2, seq=16, seed=0)
+    batch = pipe.batch_at(0)
+    toks = np.asarray(batch["tokens"])
+    assert toks.max() < cfg.vocab_size
+    np.testing.assert_array_equal(toks, np.asarray(pipe.batch_at(0)["tokens"]))

@@ -1,0 +1,178 @@
+"""Eval harness: grid validation, report integrity + JSON round-trip, paper
+bounds on the smoke grid, warmed-program reuse, and the PredictionNoise
+(S,) sweep axis it consumes (scalar-row reduction, common random numbers)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    PAPER_COSTS,
+    CostModel,
+    PolicySpec,
+    PredictionNoise,
+    ProvisionSpec,
+    Workload,
+    provision,
+)
+from repro.eval import SCHEMA, EvalGrid, EvalReport, evaluate
+from repro.scenarios import Scenario
+
+SMALL = EvalGrid(
+    policies=("A1", "A3"),
+    scenarios=(
+        Scenario("sinusoidal", target_pmr=4.0, mean_jobs=16.0),
+        Scenario("step_outage", target_pmr=4.0, mean_jobs=16.0),
+    ),
+    noise_stds=(0.0, 0.2),
+    windows=(0, 3),
+    n_traces=3,
+    n_slots=144,
+)
+
+
+@pytest.fixture(scope="module")
+def report():
+    return evaluate(SMALL)
+
+
+def test_grid_validation():
+    with pytest.raises(ValueError, match="homogeneous"):
+        evaluate(dataclasses.replace(
+            SMALL, costs=CostModel(P=1.0, beta_on=np.ones(4), beta_off=np.ones(4))
+        ))
+    with pytest.raises(ValueError, match="windows"):
+        evaluate(dataclasses.replace(SMALL, windows=(-1,)))
+    with pytest.raises(ValueError, match="noise_stds"):
+        evaluate(dataclasses.replace(SMALL, noise_stds=()))
+
+
+def test_report_covers_the_full_grid(report):
+    assert len(report.cells) == 2 * 2 * 2 * 2      # policy x scenario x S x W
+    keys = {(c.policy, c.scenario, c.noise_std, c.window) for c in report.cells}
+    assert len(keys) == len(report.cells)
+    for c in report.cells:
+        assert c.mean_cr >= 1.0 - 1e-9             # never beats hindsight
+        assert c.max_cr >= c.p95_cr >= c.mean_cr - 1e-9 or c.p95_cr >= 1.0
+        assert c.bound is not None
+
+
+def test_smoke_grid_respects_paper_bounds(report):
+    assert report.bounds_ok, report.violations()
+    for c in report.cells:
+        slack = SMALL.tol + SMALL.noise_slack * c.noise_std
+        assert c.mean_cr <= c.bound + slack
+
+
+def test_noise_hurts_in_aggregate(report):
+    """More prediction error never helps on average across the grid."""
+    clean = np.mean([c.mean_cr for c in report.cells if c.noise_std == 0.0])
+    noisy = np.mean([c.mean_cr for c in report.cells if c.noise_std > 0.0])
+    assert noisy >= clean - 1e-6
+
+
+def test_report_json_round_trip(tmp_path, report):
+    p = report.save(tmp_path / "BENCH_provision.json")
+    loaded = EvalReport.load(p)
+    assert loaded.grid == report.grid
+    assert loaded.cells == report.cells
+    assert loaded.bounds_ok == report.bounds_ok
+    d = json.loads(p.read_text())
+    assert d["schema"] == SCHEMA
+    bad = dict(d, schema="repro.eval/v0")
+    with pytest.raises(ValueError, match="schema"):
+        EvalReport.from_dict(bad)
+
+
+def test_second_run_is_warm_and_identical(report):
+    again = evaluate(SMALL)
+    assert again.jit_entries_added <= 0 or again.jit_entries_added == -1
+    assert again.cells == report.cells             # fully deterministic
+
+
+def test_worst_orders_by_effective_slack(report):
+    """worst() ranks by distance to the same threshold bound_ok used
+    (bound + tol + noise_slack*std), not the raw bound."""
+    worst = report.worst(len(report.cells))
+    slacks = [report.threshold(c) - c.mean_cr for c in worst]
+    assert slacks == sorted(slacks)
+    for c in report.cells:
+        assert report.threshold(c) == pytest.approx(
+            c.bound + SMALL.tol + SMALL.noise_slack * c.noise_std
+        )
+
+
+# ---------------------------------------------------------------------------
+# The PredictionNoise (S,) sweep axis (the spec axis the harness consumes)
+# ---------------------------------------------------------------------------
+
+def _demand(b=2, t=120):
+    rng = np.random.default_rng(0)
+    base = 20 + 15 * np.sin(np.arange(t) / 8)[None, :] + 3 * rng.standard_normal((b, t))
+    return jnp.asarray(np.maximum(np.rint(base), 0), jnp.int32)
+
+
+def test_noise_sweep_reduces_to_scalar_rows():
+    a = _demand()
+    key = jax.random.key(11)
+    stds = (0.0, 0.15, 0.4)
+    spec = ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=a, noise=PredictionNoise(jnp.asarray(stds), key)),
+        policy=PolicySpec("A1", window=2),
+        n_levels=int(a.max()) + 1,
+    )
+    res = provision(spec)
+    assert res.x.shape == (3,) + a.shape
+    for i, std in enumerate(stds):
+        one = provision(dataclasses.replace(
+            spec,
+            workload=Workload(demand=a, noise=PredictionNoise(float(std), key)),
+        ))
+        np.testing.assert_array_equal(np.asarray(res.x[i]), np.asarray(one.x))
+        np.testing.assert_allclose(
+            np.asarray(res.cost[i]), np.asarray(one.cost), rtol=1e-6
+        )
+
+
+def test_noise_sweep_composes_with_windows_and_randomized_policies():
+    a = _demand()
+    spec = ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(
+            demand=a, noise=PredictionNoise(jnp.asarray([0.0, 0.3]), jax.random.key(0))
+        ),
+        policy=PolicySpec("A3", windows=jnp.arange(4), key=jax.random.key(1)),
+        n_levels=int(a.max()) + 1,
+    )
+    res = provision(spec)
+    assert res.x.shape == (2, 4) + a.shape        # (S, W, B, T)
+    assert res.cost.shape == (2, 4, a.shape[0])
+    assert res.level_cost.shape == (2, 4, a.shape[0], int(a.max()) + 1)
+    # common random numbers: the std-0 row with a perfect predictor equals
+    # the no-noise run (same wait draws regardless of the noise sweep)
+    plain = provision(dataclasses.replace(
+        spec, workload=Workload(demand=a)
+    ))
+    np.testing.assert_array_equal(np.asarray(res.x[0]), np.asarray(plain.x))
+
+
+def test_noise_sweep_rejects_mesh_and_bad_shapes():
+    a = _demand()
+    noise = PredictionNoise(jnp.asarray([0.0, 0.2]), jax.random.key(0))
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=a[0], noise=noise),
+        policy=PolicySpec("A1", window=1),
+        n_levels=int(a.max()) + 1,
+        mesh=mesh,
+    )
+    with pytest.raises(ValueError, match="noise sweep"):
+        provision(spec)
+    with pytest.raises(ValueError, match="scalar or a"):
+        PredictionNoise(jnp.zeros((2, 2)), jax.random.key(0)).apply(a)

@@ -1,0 +1,165 @@
+"""Scenario library: generator structure, determinism, PMR targeting, replay
+round-trips, the Workload bridge, and an empirical competitive-ratio property
+(A2's mean CR stays under its paper bound on every registered scenario)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    PAPER_COSTS,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
+    provision,
+    theoretical_ratio,
+)
+from repro.core.traces import pmr
+from repro.scenarios import (
+    DEFAULT_SCENARIOS,
+    SAMPLE_TRACE_PATH,
+    Scenario,
+    generate,
+    make_workload,
+    register_scenario,
+    scenario_names,
+)
+
+N_SLOTS = 288
+BUILTIN = ("flash_crowd", "heavy_tail_bursts", "msr_diurnal", "replay",
+           "sinusoidal", "step_outage")
+
+
+def test_registry_has_the_builtin_bank():
+    assert scenario_names() == BUILTIN
+    assert {sc.name for sc in DEFAULT_SCENARIOS} == set(BUILTIN)
+
+
+def test_unknown_scenario_names_the_registry():
+    with pytest.raises(ValueError, match="msr_diurnal"):
+        generate(Scenario("msr_durnal"), 1, N_SLOTS)
+
+
+def test_reregistering_a_name_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario("sinusoidal")(lambda rng, n: np.ones(n))
+
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_deterministic_under_fixed_seed(name):
+    sc = Scenario(name, seed=3, target_pmr=4.0)
+    a = generate(sc, 3, N_SLOTS)
+    b = generate(sc, 3, N_SLOTS)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (3, N_SLOTS)
+    assert a.dtype == np.int64
+    assert (a >= 0).all()
+
+
+def test_seed_changes_the_traces_but_batch_prefix_is_stable():
+    sc = Scenario("flash_crowd", seed=0)
+    other = Scenario("flash_crowd", seed=1)
+    assert not np.array_equal(generate(sc, 2, N_SLOTS), generate(other, 2, N_SLOTS))
+    # trace i is drawn from (seed, i): growing the batch keeps the prefix
+    np.testing.assert_array_equal(
+        generate(sc, 4, N_SLOTS)[:2], generate(sc, 2, N_SLOTS)
+    )
+
+
+@pytest.mark.parametrize("name", [n for n in BUILTIN if n != "replay"])
+@pytest.mark.parametrize("target", [2.5, 4.63])
+def test_scale_to_pmr_hits_the_target(name, target):
+    sc = Scenario(name, seed=1, target_pmr=target, mean_jobs=40.0)
+    a = generate(sc, 2, N_SLOTS)
+    for row in a:
+        # integer rounding perturbs the continuous-trace PMR slightly
+        assert pmr(row) == pytest.approx(target, rel=0.06)
+        assert row.mean() == pytest.approx(40.0, rel=0.06)
+
+
+def test_flash_crowd_has_spikes_on_a_quiet_baseline():
+    sc = Scenario("flash_crowd", seed=2, params={"n_events": 2, "spike_mag": 10.0})
+    (a,) = generate(sc, 1, N_SLOTS).astype(float)
+    med, peak = np.median(a), a.max()
+    assert peak > 4 * med          # spikes tower over the baseline
+    # and decay: the slot after the global peak stays elevated (no one-slot blip)
+    t = int(a.argmax())
+    if t + 1 < len(a):
+        assert a[t + 1] > med
+
+
+def test_step_outage_has_levels_and_a_dropout():
+    sc = Scenario("step_outage", seed=5, params={"outage_slots": 12, "noise": 0.0})
+    (a,) = generate(sc, 1, N_SLOTS)
+    # the dropout survives rescaling: a run of >= 12 consecutive zero slots
+    is_zero = np.concatenate([[0], (a == 0).astype(int), [0]])
+    edges = np.flatnonzero(np.diff(is_zero))
+    runs = edges[1::2] - edges[0::2]
+    assert runs.max() >= 12
+    # piecewise-constant: few distinct levels relative to the horizon
+    assert len(np.unique(a)) < 16
+
+
+def test_heavy_tail_bursts_is_heavy_tailed():
+    sc = Scenario("heavy_tail_bursts", seed=0, target_pmr=None)
+    (a,) = generate(sc, 1, 2000).astype(float)
+    # Zipf burst sizes: the top slot dwarfs the typical slot
+    assert a.max() > 8 * np.median(a)
+
+
+def test_replay_round_trips_the_checked_in_sample(tmp_path):
+    raw = np.loadtxt(SAMPLE_TRACE_PATH, comments="#", delimiter=",")
+    sc = Scenario("replay")     # natural PMR, mean rescale only
+    (a,) = generate(sc, 1, len(raw)).astype(float)
+    # the sample round-trips up to the mean rescale + integer rounding
+    want = raw / raw.mean() * sc.mean_jobs
+    assert np.abs(a - want).max() <= 0.5 + 1e-9
+    # npz replay: exact round-trip when the mean is kept
+    p = tmp_path / "t.npz"
+    np.savez(p, demand=raw)
+    sc2 = Scenario("replay", params={"path": str(p)}, mean_jobs=float(raw.mean()))
+    (b,) = generate(sc2, 1, len(raw))
+    np.testing.assert_array_equal(b, raw.astype(np.int64))
+    # tiling: a longer horizon repeats the recording
+    (c,) = generate(sc2, 1, 2 * len(raw))
+    np.testing.assert_array_equal(c[: len(raw)], c[len(raw):])
+
+
+def test_make_workload_attaches_a_noise_sweep():
+    wl = make_workload(
+        Scenario("sinusoidal", seed=4), 3, N_SLOTS,
+        noise_std=jnp.asarray([0.0, 0.3]),
+    )
+    assert wl.demand.shape == (3, N_SLOTS)
+    assert wl.demand.dtype == jnp.int32
+    pred = wl.resolve_predicted(wl.demand)
+    assert pred.shape == (2, 3, N_SLOTS)
+    # std 0 row predicts perfectly; std 0.3 row does not
+    np.testing.assert_array_equal(np.asarray(pred[0]), np.asarray(wl.demand))
+    assert not np.array_equal(np.asarray(pred[1]), np.asarray(wl.demand))
+
+
+@pytest.mark.parametrize("name", BUILTIN)
+def test_a2_empirical_cr_respects_the_paper_bound(name):
+    """A2's expectation guarantee (Thm 3) holds empirically on every
+    registered scenario: mean CR over PRNG replicas <= (e-alpha)/(e-1) + tol."""
+    sc = next(s for s in DEFAULT_SCENARIOS if s.name == name)
+    demand = jnp.asarray(generate(sc, 8, N_SLOTS), jnp.int32)
+    n_levels = int(demand.max()) + 1
+    opt = provision(ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=demand),
+        policy=PolicySpec("offline"),
+        n_levels=n_levels,
+    )).cost
+    for window in (0, 3):
+        cost = provision(ProvisionSpec(
+            costs=PAPER_COSTS,
+            workload=Workload(demand=demand),
+            policy=PolicySpec("A2", window=window, key=jax.random.key(7)),
+            n_levels=n_levels,
+        )).cost
+        alpha = min(1.0, (window + 1) / float(PAPER_COSTS.delta))
+        mean_cr = float(jnp.mean(cost / opt))
+        assert mean_cr <= theoretical_ratio("A2", alpha) + 0.05, (name, window)
