@@ -16,10 +16,12 @@ scenarios).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import pathlib
 import sys
 
 from repro.eval import EvalGrid, EvalReport, evaluate
+from repro.scenarios import Scenario
 
 SMOKE_GRID = EvalGrid(
     noise_stds=(0.0, 0.2),
@@ -33,6 +35,47 @@ FULL_GRID = EvalGrid(
     windows=(0, 1, 2, 3, 4, 5),
     n_traces=16,
 )
+
+
+def mesh_smoke() -> None:
+    """One mesh-path grid cell through ``evaluate``: the sharded Pallas
+    fleet engine must reproduce the lax.scan cells bit-exactly AND compile
+    exactly one ``_sharded_grid`` program for the whole (policy, scenario)
+    block — the fleet-path analogue of the existing no-recompile gates."""
+    import jax
+
+    from repro.core.jax_provision import _sharded_grid
+
+    grid = EvalGrid(
+        policies=("A1",),
+        scenarios=(Scenario("sinusoidal", target_pmr=4.0, mean_jobs=16.0),),
+        noise_stds=(0.0, 0.2),
+        windows=(0, 2),
+        n_traces=2,
+        n_slots=144,
+    )
+    plain = evaluate(grid)
+    counted = hasattr(_sharded_grid, "_cache_size")
+    before = _sharded_grid._cache_size() if counted else -1
+    meshed = evaluate(dataclasses.replace(
+        grid, mesh=jax.make_mesh((len(jax.devices()),), ("data",))
+    ))
+    if meshed.cells != plain.cells:
+        raise AssertionError(
+            "mesh-path eval cells diverge from the lax.scan path: the "
+            "Pallas fleet engine is supposed to be bit-exact"
+        )
+    if counted:
+        grew = _sharded_grid._cache_size() - before
+        if grew != 1:
+            raise AssertionError(
+                f"mesh-path eval compiled {grew} _sharded_grid program(s) "
+                "for one (policy, scenario) block — expected exactly 1"
+            )
+    print(
+        f"# mesh smoke: {len(meshed.cells)} cells bit-exact through the "
+        "fleet path, 1 sharded compile", file=sys.stderr,
+    )
 
 
 def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True) -> EvalReport:
@@ -76,6 +119,8 @@ def main() -> int:
                     help="report path (default: repo-root BENCH_provision.json)")
     args = ap.parse_args()
 
+    if args.smoke:
+        mesh_smoke()
     report = run(SMOKE_GRID if args.smoke else FULL_GRID, args.out)
     for line in report.summary_lines():
         print(line)

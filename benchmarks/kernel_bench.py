@@ -51,6 +51,63 @@ def decode_roofline(rows: list[str]) -> None:
         )
 
 
+def provision_grid_vs_lax_scan(rows: list[str]) -> None:
+    """Batched (S, W, B) provisioning grid: the fused Pallas grid kernel
+    (one program per (cell, level block), interpret mode off-TPU) against
+    the vmapped lax.scan engine on identical cells — same A1 thresholds,
+    same per-window peek horizons, bit-identical output (asserted)."""
+    from repro.core.jax_provision import _on_matrix_scan
+    from repro.kernels.provision_scan import provision_scan_grid
+
+    S, W, B, T, N = 2, 3, 2, 256, 128
+    delta, max_w = 6, 2
+    rng = np.random.default_rng(0)
+    ab = jnp.asarray(rng.integers(0, N, size=(B, T)), jnp.int32)
+    pred = jnp.asarray(
+        np.stack([rng.integers(0, N, size=(B, T)) for _ in range(S)]), jnp.int32
+    ).reshape(S * B, T)
+    windows = jnp.arange(W, dtype=jnp.float32)
+    thr = jnp.broadcast_to(                                      # (W, 1, N)
+        jnp.maximum(0.0, float(delta) - windows - 1.0)[:, None, None], (W, 1, N)
+    )
+    hor = jnp.broadcast_to(                                      # (W, N)
+        jnp.minimum(windows + 1.0, float(delta))[:, None], (W, N)
+    )
+    s_ix, w_ix, b_ix = jnp.meshgrid(
+        jnp.arange(S), jnp.arange(W), jnp.arange(B), indexing="ij"
+    )
+    cells = (
+        b_ix.reshape(-1), (s_ix * B + b_ix).reshape(-1),
+        w_ix.reshape(-1), w_ix.reshape(-1),
+    )
+
+    kernel_fn = jax.jit(lambda: provision_scan_grid(
+        ab, pred, thr, *cells, delta=delta, horizon=max_w + 1,
+        level_horizon=hor,
+    ))
+
+    levels = jnp.arange(N)
+
+    def per_cell(bi, pi, wi):
+        return _on_matrix_scan(
+            ab[bi], pred[pi], levels, delta=float(delta), max_h=delta,
+            window=windows[wi], policy="A1",
+        )
+
+    scan_fn = jax.jit(lambda: jax.vmap(per_cell)(cells[0], cells[1], cells[2]))
+
+    got, want = kernel_fn(), scan_fn()
+    assert (np.asarray(got) == np.asarray(want)).all(), "grid kernel != lax.scan"
+    cells_n = S * W * B * T * N
+    mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    for tag, fn in ((f"pallas_{mode}", kernel_fn), ("lax_scan", scan_fn)):
+        us = _bench(fn)
+        rows.append(
+            f"provision_grid_{tag}_s{S}w{W}b{B}n{N},{us:.1f},"
+            f"decisions_per_s={cells_n / (us / 1e6):.3e}"
+        )
+
+
 def interpret_correctness(rows: list[str]) -> None:
     """Tiny interpret-mode run vs oracle (wall time = CPU emulation only)."""
     from repro.kernels.flash_attention import flash_attention
@@ -78,3 +135,4 @@ def run(rows: list[str]) -> None:
     flash_roofline(rows)
     decode_roofline(rows)
     interpret_correctness(rows)
+    provision_grid_vs_lax_scan(rows)

@@ -9,7 +9,9 @@ Run standalone for the CI smoke leg:
 
 The smoke run uses small shapes and additionally asserts that re-pricing a
 fleet (new CostModel values, same shapes/policy) does NOT grow the engine's
-jit cache — the spec's cost fields are pytree data, not compile keys.
+jit cache — the spec's cost fields are pytree data, not compile keys — and
+that one mesh-path (S, W, B) grid cell compiles exactly one `_sharded_grid`
+program (none on a warmed re-run).
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ from repro.core import (
     RANDOMIZED_POLICIES,
     CostModel,
     PolicySpec,
+    PredictionNoise,
     ProvisionSpec,
     Workload,
     generate_brick_trace,
@@ -133,6 +136,69 @@ def pallas_scan_throughput(rows: list[str], sizes=(512, 4096)) -> None:
         )
 
 
+def _mesh_grid_spec(n_levels, n_traces, n_windows, n_stds, n_slots, mesh,
+                    use_pallas=True):
+    ab = np.stack([_trace(n_levels, seed=s, n_slots=n_slots)
+                   for s in range(n_traces)])
+    noise = PredictionNoise(
+        std_frac=jnp.linspace(0.0, 0.4, n_stds), key=jax.random.key(5)
+    )
+    return ProvisionSpec(
+        costs=COSTS,
+        workload=Workload(demand=jnp.asarray(ab, jnp.int32), noise=noise),
+        policy=PolicySpec("A3", windows=jnp.arange(n_windows, dtype=jnp.int32),
+                          key=jax.random.key(0)),
+        n_levels=n_levels,
+        mesh=mesh,
+        use_pallas=use_pallas,
+    )
+
+
+def mesh_grid_throughput(rows: list[str], n_levels=256, n_traces=8,
+                         n_windows=4, n_stds=2, n_slots=N_SLOTS) -> None:
+    """The sharded fleet path on the full (S, W, B) grid: fused Pallas grid
+    kernel vs the sharded lax.scan body on identical cells (A3, so the wait
+    tables ride along too).  Off-TPU the kernel row is interpret-mode (CPU
+    emulation) — the derived decisions/s is the comparable number."""
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    for tag, use_pallas in ((f"pallas_{mode}", True), ("lax_scan", False)):
+        spec = _mesh_grid_spec(n_levels, n_traces, n_windows, n_stds, n_slots,
+                               mesh, use_pallas=use_pallas)
+        fn = lambda: provision(spec).cost
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        cells = n_stds * n_windows * n_traces * n_levels * n_slots
+        rows.append(
+            f"mesh_grid_{tag}_s{n_stds}_w{n_windows}_b{n_traces}_n{n_levels},"
+            f"{us:.1f},decisions_per_s={cells / (us / 1e6):.3e}"
+        )
+
+
+def mesh_grid_compile_gate(rows: list[str], n_levels=48, n_slots=168) -> None:
+    """One mesh-path grid cell as a smoke gate: the sharded engine body
+    (`_sharded_grid`) must compile exactly once for the (S, W, B) program
+    and a warmed re-run must add nothing — mirroring the `_run` guard."""
+    from repro.core.jax_provision import _sharded_grid
+
+    if not hasattr(_sharded_grid, "_cache_size"):  # private JAX API; skip if gone
+        rows.append("mesh_grid_compiles,0.0,skipped=no_cache_size_api")
+        return
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    spec = _mesh_grid_spec(n_levels, 2, 2, 2, n_slots, mesh)
+    before = _sharded_grid._cache_size()
+    jax.block_until_ready(provision(spec).cost)
+    cold = _sharded_grid._cache_size() - before
+    jax.block_until_ready(provision(spec).cost)      # warmed re-run
+    warm = _sharded_grid._cache_size() - before - cold
+    assert cold == 1, f"mesh grid program compiled {cold} times, expected 1"
+    assert warm == 0, f"warmed mesh re-run recompiled {warm} program(s)"
+    rows.append(f"mesh_grid_compiles,0.0,cold={cold};warm_added={warm}")
+
+
 def brick_simulator_throughput(rows: list[str]) -> None:
     rng = np.random.default_rng(1)
     tr = generate_brick_trace(rng, horizon=2000.0, rate=3.0, mean_duration=4.0)
@@ -173,17 +239,23 @@ def run(rows: list[str]) -> None:
     batched_sweep_throughput(rows)
     heterogeneous_throughput(rows)
     pallas_scan_throughput(rows)
+    mesh_grid_throughput(rows)
     brick_simulator_throughput(rows)
     jit_cache_reuse(rows)
+    mesh_grid_compile_gate(rows)
 
 
 def run_smoke(rows: list[str]) -> None:
-    """CI leg: small shapes, every code path, plus the jit-cache assertion."""
+    """CI leg: small shapes, every code path, plus the jit-cache assertions
+    (re-pricing must not recompile; the mesh grid compiles exactly once)."""
     jax_provisioner_throughput(rows, sizes=(64,))
     batched_sweep_throughput(rows, n_levels=32, n_traces=4)
     heterogeneous_throughput(rows, n_levels=32)
     pallas_scan_throughput(rows, sizes=(128,))
+    mesh_grid_throughput(rows, n_levels=32, n_traces=2, n_windows=2, n_stds=2,
+                         n_slots=160)
     jit_cache_reuse(rows)
+    mesh_grid_compile_gate(rows)
 
 
 def main() -> None:

@@ -137,6 +137,24 @@ def main() -> None:
     print(f"  A3 (randomized, sharded Pallas scan): max={int(res3.x.max())}, "
           f"mean={float(res3.x.mean()):.1f}")
 
+    # --- the whole (noise-std x window) sweep rides the same fleet path:
+    # one launch of the 2-D Pallas grid, one program per (s, w) cell and
+    # level block — bit-exact against the unsharded engine
+    from repro.core import PredictionNoise
+
+    swept_spec = dataclasses.replace(
+        spec, mesh=mesh,
+        workload=Workload(demand=a, noise=PredictionNoise(
+            std_frac=jnp.asarray([0.0, 0.25]), key=jax.random.key(2))),
+        policy=PolicySpec("A1", windows=jnp.arange(3, dtype=jnp.int32)),
+    )
+    swept = provision(swept_spec)
+    plain = provision(dataclasses.replace(swept_spec, mesh=None))
+    assert (np.asarray(swept.x) == np.asarray(plain.x)).all()
+    print("  (S=2 stds x W=3 windows) through the Pallas grid kernel, "
+          "cost table (rows=std, cols=window):")
+    print("  " + str(np.asarray(swept.cost).round(0)).replace("\n", "\n  "))
+
 
 if __name__ == "__main__":
     main()

@@ -17,9 +17,12 @@ independent per-level computation, so the whole fleet is one vectorized
   * a vectorized sweep axis over prediction windows (``α = (w+1)/Δ``) via
     ``vmap`` with common random numbers across the sweep, so a whole
     (traces × α × policies) competitive-ratio table is one device program;
-  * a fused Pallas per-level scan (:mod:`repro.kernels.provision_scan`,
-    interpret-mode fallback off-TPU) used by the ``shard_map`` fleet path,
-    with a separate scalar-prefetched prediction trace.
+  * a fused Pallas grid scan (:mod:`repro.kernels.provision_scan`,
+    interpret-mode fallback off-TPU) used by the ``shard_map`` fleet path:
+    the full (noise-std x window x trace) sweep runs as one kernel program
+    per grid cell and level block, with separate scalar-prefetched demand
+    and prediction traces indexed per cell — bit-exact against the
+    ``lax.scan`` programs above (common random numbers on every axis).
 
 The public entrypoint is :func:`repro.core.provision.provision`, driven by a
 declarative :class:`~repro.core.provision.ProvisionSpec`.  The loose-kwargs
@@ -326,28 +329,76 @@ def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
 # Fleet-scale engine body: shard the level axis over the mesh (Pallas scan)
 # ---------------------------------------------------------------------------
 
-def _sharded_run(mesh, axis, a, pred, delta, P_lv, beta_on_lv, beta_off_lv, *,
-                 n_levels, max_h, window, policy, key=None, use_pallas=True):
-    """Level-sharded engine body: one trace, one window, levels over ``axis``.
+def _sharded_run(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
+                 beta_off_lv, *, n_levels, max_h, policy, keys=None,
+                 use_pallas=True):
+    """Level-sharded engine over the full (S, W, B) sweep grid.
 
-    The demand and prediction traces are replicated (tiny); the per-level
-    arrays (thresholds, peek horizons, Δ, cost fields) are sharded.  Each
-    shard runs its level block through the fused Pallas scan (interpret mode
-    off-TPU); x(t) is a psum and the per-level cost terms an all_gather, so
-    the caller sees the same dict as :func:`_run`.  Scales to fleets far
-    past one host's memory (1000+ node deployments decide locally, paper
-    Sec. IV).
+    ``ab``: (B, T) demand; ``predb``: (S, B, T) predicted traces (S = 1
+    without a noise sweep); ``windows``: (W,) concrete window values;
+    ``keys``: (B,) per-trace keys for the randomized policies.  Returns the
+    same dict as :func:`_run_noise_sweep` — leaves shaped (S, W, B, ...) —
+    computed through the fused Pallas grid scan
+    (:func:`repro.kernels.provision_scan.provision_scan_grid`): one program
+    per ((s, w, b) cell, level block), levels sharded over ``axis``.
+
+    Bit-exact against the lax.scan programs: the wait tables are the same
+    per-trace uniform draws transformed per window (common random numbers
+    across both sweep axes — noise cells share draws outright).  The thin
+    python wrapper only concretizes the static unroll bound; the body is
+    :func:`_sharded_grid`, a separate jitted entrypoint so the fleet path's
+    compiles land in a countable cache (watched by the eval harness and the
+    benchmark smoke gates alongside ``_run``/``_run_noise_sweep``).
     """
-    from repro.kernels.provision_scan import provision_scan
-
     _check_policy(policy)
     if policy == "offline":
         raise ValueError(
             "sharded path supports online policies (offline has no slot scan); "
             f"valid policies are {tuple(p for p in POLICIES if p != 'offline')}"
         )
-    a = jnp.asarray(a)
-    T = a.shape[0]
+    if policy in RANDOMIZED and keys is None:
+        _require_key(policy, None)
+    windows = jnp.asarray(windows, jnp.int32)
+    if policy == "delayedoff":
+        h_unroll = 0
+    else:
+        try:
+            w_max = int(windows.max())                       # static peek bound
+        except jax.errors.ConcretizationTypeError:
+            # provision(mesh=...) traced under an outer jit/vmap: the sweep
+            # values aren't concrete, so unroll to the Δ bound — the
+            # per-cell horizon rows mask the peek to min(w+1, Δ_l) anyway,
+            # a wider unroll only costs a few masked compares
+            w_max = max_h
+        h_unroll = int(min(w_max + 1, max_h))
+    return _sharded_grid(
+        jnp.asarray(ab), jnp.asarray(predb), windows, delta, P_lv,
+        beta_on_lv, beta_off_lv, keys,
+        mesh=mesh, axis=axis, n_levels=n_levels, max_h=max_h,
+        h_unroll=h_unroll, policy=policy, use_pallas=use_pallas,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mesh", "axis", "n_levels", "max_h", "h_unroll", "policy", "use_pallas"))
+def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
+                  keys, *, mesh, axis, n_levels, max_h, h_unroll, policy,
+                  use_pallas):
+    """One device program for the sharded (S, W, B) grid.
+
+    The demand/predicted traces and the per-cell wait tables are replicated
+    only along the sweep axes; the *level* axis — thresholds, peek
+    horizons, Δ, cost fields — is sharded over the mesh.  Each shard runs
+    every grid cell over its level block through the Pallas grid scan
+    (interpret mode off-TPU); x(t) is a psum and the per-level cost terms a
+    tiled all_gather, so the caller sees (S, W, B, ...) leaves identical to
+    the unsharded engine.  Scales to fleets far past one host's memory
+    (1000+ node deployments decide locally, paper Sec. IV).
+    """
+    from repro.kernels.provision_scan import provision_scan_grid
+
+    S, B, T = predb.shape
+    W = windows.shape[0]
     size = mesh.shape[axis]
     n_padded = -(-n_levels // size) * size
     per_shard = n_padded // size
@@ -357,68 +408,92 @@ def _sharded_run(mesh, axis, a, pred, delta, P_lv, beta_on_lv, beta_off_lv, *,
         return jnp.pad(v, (0, n_padded - n_levels), constant_values=fill)
 
     b = pad_lv(delta, 1.0)          # padded levels are masked out; Δ irrelevant
-    w = float(window)
+    wf = windows.astype(jnp.float32)
     if policy in RANDOMIZED:
-        _require_key(policy, key)
         # draw at n_levels (NOT n_padded) so the (trace, key) -> schedule
-        # contract holds regardless of mesh size, then pad the table
-        u0, u = _uniforms(key, T, n_levels)
-        thresholds = _waits_from_uniforms(policy, u0, u, window, b[:n_levels])
-        thresholds = jnp.pad(thresholds, ((0, 0), (0, n_padded - n_levels)))
-        thr_spec = P(None, axis)
-    else:
-        m = b if policy == "delayedoff" else jnp.maximum(0.0, b - w - 1.0)
-        thresholds = m.astype(jnp.float32)
-        thr_spec = P(axis)
+        # contract holds regardless of mesh size, then pad the table; the
+        # same per-trace draws serve every window (common random numbers)
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)  # (B, T, N)
+        thresholds = jax.vmap(lambda w: jax.vmap(
+            lambda u0i, ui: _waits_from_uniforms(policy, u0i, ui, w, b[:n_levels])
+        )(u0, u))(wf)                                        # (W, B, T, N)
+        thresholds = jnp.pad(
+            thresholds, ((0, 0), (0, 0), (0, 0), (0, n_padded - n_levels))
+        ).reshape(W * B, T, n_padded)
+    elif policy == "delayedoff":
+        thresholds = jnp.broadcast_to(b, (W, n_padded))[:, None, :]  # timer Δ
+    else:                                                    # A1 per window
+        thresholds = jnp.maximum(0.0, b[None, :] - wf[:, None] - 1.0)[:, None, :]
     if policy == "delayedoff":
-        horizon_lv = jnp.zeros((n_padded,), jnp.float32)
-        h_unroll = 0
+        horizon_wl = jnp.zeros((W, n_padded), jnp.float32)   # no peek
     else:
-        horizon_lv = jnp.minimum(w + 1.0, b)
-        h_unroll = int(min(window + 1, max_h))
+        horizon_wl = jnp.minimum(wf[:, None] + 1.0, b[None, :])
     P_pad = pad_lv(P_lv, 0.0)
     bon_pad = pad_lv(beta_on_lv, 0.0)
     boff_pad = pad_lv(beta_off_lv, 0.0)
 
-    def local(a_l, p_l, thr_l, hor_l, b_l, Pp, bon, boff):
+    # cell maps: cell g = (s, w, b) in row-major order, matching the
+    # (S, W, B) axis convention of _run_noise_sweep
+    s_ix, w_ix, b_ix = jnp.meshgrid(
+        jnp.arange(S), jnp.arange(W), jnp.arange(B), indexing="ij"
+    )
+    cell_trace = b_ix.reshape(-1).astype(jnp.int32)
+    cell_pred = (s_ix * B + b_ix).reshape(-1).astype(jnp.int32)
+    if policy in RANDOMIZED:
+        cell_thr = (w_ix * B + b_ix).reshape(-1).astype(jnp.int32)
+    else:
+        cell_thr = w_ix.reshape(-1).astype(jnp.int32)
+    cell_hor = w_ix.reshape(-1).astype(jnp.int32)
+    cell_w = windows[w_ix.reshape(-1)]
+    pred_rows = predb.reshape(S * B, T)
+
+    def local(a_rows, p_rows, ct, cp, cthr, chor, cw, thr_l, hor_l, b_l,
+              Pp, bon, boff):
         i = jax.lax.axis_index(axis)
         base = i * per_shard
         levels = base + jnp.arange(per_shard)
         if use_pallas:
-            ons = provision_scan(
-                a_l, thr_l, delta=max_h, horizon=h_unroll, base_level=base,
-                predicted=p_l, level_horizon=hor_l,
-            )
+            ons = provision_scan_grid(
+                a_rows, p_rows, thr_l, ct, cp, cthr, chor,
+                delta=max_h, horizon=h_unroll, base_level=base,
+                level_horizon=hor_l,
+            )                                          # (G, T, per_shard)
         else:
-            waits = thr_l if thr_l.ndim == 2 else None
-            ons = _on_matrix_scan(
-                a_l, p_l, levels,
-                delta=b_l, max_h=max_h, window=window, policy=policy,
-                waits=waits,
-            )
+            def per_cell(bi, pi, ti, w):
+                waits = thr_l[ti] if policy in RANDOMIZED else None
+                return _on_matrix_scan(
+                    a_rows[bi], p_rows[pi], levels, delta=b_l, max_h=max_h,
+                    window=w, policy=policy, waits=waits,
+                )
+            ons = jax.vmap(per_cell)(ct, cp, cthr, cw)
         # phantom padded levels (ids >= n_levels) turn on whenever demand
         # exceeds the fleet cap; mask them so x(t) matches the unsharded
         # engine regardless of mesh size
-        ons = ons & (levels < n_levels)[None, :]
-        x = jax.lax.psum(ons.sum(axis=1).astype(jnp.int32), axis)
-        terms = _cost_terms(a_l, ons, Pp, bon, boff, levels=levels)
+        ons = ons & (levels < n_levels)[None, None, :]
+        x = jax.lax.psum(ons.sum(axis=-1).astype(jnp.int32), axis)
+        ons = ons.reshape(S, W, B, T, per_shard)
+        a_swb = jnp.broadcast_to(a_rows[None, None], (S, W, B, T))
+        terms = _cost_terms(a_swb, ons, Pp, bon, boff, levels=levels)
         terms = {
-            k: jax.lax.all_gather(v, axis).reshape(-1) for k, v in terms.items()
+            k: jax.lax.all_gather(v, axis, axis=3, tiled=True)
+            for k, v in terms.items()
         }
-        terms["x"] = x
+        terms["x"] = x.reshape(S, W, B, T)
         return terms
 
+    cell_spec = (P(),) * 5
     fn = shard_map(
         local,
         mesh=mesh,
-        in_specs=(P(), P(), thr_spec, P(axis), P(axis), P(axis), P(axis), P(axis)),
+        in_specs=(P(), P()) + cell_spec
+        + (P(None, None, axis), P(None, axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs={"x": P(), "energy": P(), "on_cost": P(), "off_cost": P()},
         check_rep=False,    # no replication rule for pallas_call yet
     )
-    pred = a if pred is None else jnp.asarray(pred)
-    out = fn(a, pred, thresholds, horizon_lv, b, P_pad, bon_pad, boff_pad)
+    out = fn(ab, pred_rows, cell_trace, cell_pred, cell_thr, cell_hor, cell_w,
+             thresholds, horizon_wl, b, P_pad, bon_pad, boff_pad)
     return {
-        k: (v if k == "x" else v[:n_levels]) for k, v in out.items()
+        k: (v if k == "x" else v[..., :n_levels]) for k, v in out.items()
     }
 
 

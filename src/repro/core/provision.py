@@ -11,11 +11,13 @@ The spec is three pytree-registered frozen dataclasses plus options:
   * :class:`PolicySpec` — policy name, a single ``window`` or a ``windows``
     sweep axis (α = (w+1)/Δ), and the PRNG ``key`` for A2/A3.
 
-:func:`provision` runs the whole (windows × traces × levels) grid as one
-jitted device program and returns a :class:`ProvisionResult` carrying the
-schedule, total/energy/toggle costs, and the per-level cost breakdown.
-Passing ``mesh=`` shards the level axis over the mesh through the fused
-Pallas scan (:mod:`repro.kernels.provision_scan`).
+:func:`provision` runs the whole (noise-stds × windows × traces × levels)
+grid as one jitted device program and returns a :class:`ProvisionResult`
+carrying the schedule, total/energy/toggle costs, and the per-level cost
+breakdown.  Passing ``mesh=`` shards the level axis over the mesh through
+the fused Pallas grid scan (:mod:`repro.kernels.provision_scan`) — the
+same sweep axes, one kernel program per (noise-std, window, trace) cell,
+bit-exact against the unsharded path.
 
 Shape convention: the result keeps a leading windows axis iff the spec used
 ``windows=``, a batch axis iff demand was ``(B, T)``, and an outermost
@@ -148,9 +150,13 @@ class ProvisionSpec:
     """The complete declarative input of one provisioning computation.
 
     ``n_levels``: fleet size; defaults to the cost model's per-level length,
-    else ``max(demand) + 1``.  ``mesh``/``mesh_axis``: shard the level axis
-    over a mesh axis (single trace, single window, online policies) through
-    the fused Pallas scan; ``use_pallas=False`` keeps the lax.scan body.
+    else ``max(demand) + 1`` (concrete demand only — under jit/vmap pass it
+    explicitly).  ``mesh``/``mesh_axis``: shard the level axis over a mesh
+    axis through the fused Pallas grid scan — the full (noise-std × window
+    × trace) sweep runs as one program per grid cell and level block, with
+    results bit-exact against the unsharded path (online policies only;
+    ``offline`` has no slot scan).  ``use_pallas=False`` keeps the lax.scan
+    body per cell.
     """
 
     costs: CostModel
@@ -233,6 +239,16 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
     if n_levels is None:
         n_levels = spec.costs.n_levels
     if n_levels is None:
+        if isinstance(jnp.asarray(ab), jax.core.Tracer):
+            # int(ab.max()) below would die with an opaque
+            # ConcretizationTypeError when the caller traces provision()
+            # under jit/vmap — name the actual fix instead
+            raise ValueError(
+                "n_levels cannot be derived from demand inside jit/vmap "
+                "(the demand is a tracer, so max(demand) is not concrete): "
+                "pass ProvisionSpec(n_levels=...) explicitly or use a "
+                "CostModel with (n_levels,) per-level fields"
+            )
         n_levels = int(ab.max()) + 1        # needs concrete demand
     P_lv, bon_lv, boff_lv = spec.costs.per_level(n_levels)
     delta_lv = jnp.broadcast_to(
@@ -254,18 +270,26 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
         )
 
     if spec.mesh is not None:
-        if not squeeze_b or not squeeze_w or not squeeze_s:
-            raise ValueError(
-                "mesh-sharded provisioning takes one trace and one window, "
-                f"with a scalar noise std (got demand {a.shape}, windows "
-                f"{None if squeeze_w else windows.shape}, noise sweep "
-                f"{not squeeze_s})"
-            )
+        # the fleet path takes the same (S, W, B) grid as the lax.scan
+        # programs: normalize predb to (S, B, T) and squeeze the result
+        # back to the spec's axis convention below
+        predb3 = predb[None] if predb.ndim == 2 else predb
         out = _engine._sharded_run(
-            spec.mesh, spec.mesh_axis, a, pred, delta_lv, P_lv, bon_lv, boff_lv,
-            n_levels=n_levels, max_h=max_h, window=int(pol.window),
-            policy=pol.name, key=pol.key, use_pallas=spec.use_pallas,
+            spec.mesh, spec.mesh_axis, ab, predb3, windows, delta_lv, P_lv,
+            bon_lv, boff_lv, n_levels=n_levels, max_h=max_h,
+            policy=pol.name, keys=keys, use_pallas=spec.use_pallas,
         )
+
+        def _squeeze(o):
+            if squeeze_b:
+                o = jnp.squeeze(o, axis=2)
+            if squeeze_w:
+                o = jnp.squeeze(o, axis=1)
+            if squeeze_s:
+                o = jnp.squeeze(o, axis=0)
+            return o
+
+        out = jax.tree.map(_squeeze, out)
     else:
         # noise sweep: the engine vmapped over the (S,) predicted axis with
         # the demand, windows and keys held fixed — common random numbers

@@ -37,7 +37,12 @@ from repro.core import (
     provision,
     theoretical_ratio,
 )
-from repro.core.jax_provision import RANDOMIZED, _run, _run_noise_sweep
+from repro.core.jax_provision import (
+    RANDOMIZED,
+    _run,
+    _run_noise_sweep,
+    _sharded_grid,
+)
 from repro.core.traces import WEEK_SLOTS
 from repro.scenarios import DEFAULT_SCENARIOS, Scenario
 
@@ -53,6 +58,13 @@ class EvalGrid:
     ``tol`` is the statistical slack on the *expectation* bound checks —
     randomized policies are evaluated over ``n_traces`` PRNG replicas, so
     the empirical mean sits within O(1/√n_traces) of its expectation.
+
+    ``mesh``: run every online-policy cell through the sharded Pallas fleet
+    path (the level axis over ``mesh_axis``; the offline baseline stays on
+    the closed form, which has no slot scan).  The kernel is bit-exact
+    against the lax.scan programs, so the report's cells are identical
+    either way — this knob exists to run the eval grid *as* a fleet-path
+    regression gate.  ``use_pallas=False`` keeps the sharded lax.scan body.
     """
 
     policies: tuple[str, ...] = ("A1", "A2", "A3")
@@ -69,6 +81,9 @@ class EvalGrid:
     #: and measured degradation is ≲ 0.4·std, so a noisy cell must satisfy
     #: ``mean_cr <= bound + tol + noise_slack * noise_std``.
     noise_slack: float = 0.5
+    mesh: "jax.sharding.Mesh | None" = None
+    mesh_axis: str = "data"
+    use_pallas: bool = True
 
     def validate(self) -> "EvalGrid":
         if self.costs.is_heterogeneous:
@@ -84,31 +99,43 @@ class EvalGrid:
             raise ValueError(
                 f"noise_stds must be non-negative, got {self.noise_stds}"
             )
+        if self.mesh is not None and "offline" in self.policies:
+            raise ValueError(
+                "mesh= runs cells through the sharded fleet path, which has "
+                "no offline slot scan; drop 'offline' from policies (the "
+                "offline baseline is computed regardless)"
+            )
         return self
 
 
 def _engine_cache_size() -> int:
-    """Total compiled-program count across both engine entrypoints — the
-    offline/scalar path (``_run``) and the noise-sweep path
-    (``_run_noise_sweep``), which is a distinct jitted function precisely so
-    its compiles are observable here.  Returns -1 if the private JAX cache
-    API is gone."""
-    sizes = [getattr(f, "_cache_size", None) for f in (_run, _run_noise_sweep)]
+    """Total compiled-program count across the engine entrypoints — the
+    offline/scalar path (``_run``), the noise-sweep path
+    (``_run_noise_sweep``) and the sharded fleet path (``_sharded_grid``),
+    each a distinct jitted function precisely so its compiles are
+    observable here.  Returns -1 if the private JAX cache API is gone."""
+    sizes = [getattr(f, "_cache_size", None)
+             for f in (_run, _run_noise_sweep, _sharded_grid)]
     if any(s is None for s in sizes):
         return -1
     return sum(s() for s in sizes)
 
 
 def _bound(policy: str, alpha: float) -> float | None:
-    """Paper worst-case ratio for a policy at prediction fraction α."""
-    try:
+    """Paper worst-case ratio for a policy at prediction fraction α.
+
+    Dispatches on the policy *name* — ``theoretical_ratio`` covers the
+    paper's A1/A2/A3 theorems only, and leaning on its raise type for the
+    fallback is brittle (a ``ValueError`` there would silently strip the
+    offline/delayedoff cells of their bounds, or crash the harness).
+    """
+    if policy == "offline":
+        return 1.0              # hindsight optimum IS the denominator
+    if policy == "delayedoff":
+        return 2.0              # break-even timer Δ, classic ski-rental bound
+    if policy in ("A1", "A2", "A3"):
         return theoretical_ratio(policy, alpha)
-    except KeyError:
-        if policy == "offline":
-            return 1.0
-        if policy == "delayedoff":
-            return 2.0          # break-even timer Δ, classic ski-rental bound
-        return None
+    return None
 
 
 def _scenario_labels(scenarios: tuple[Scenario, ...]) -> list[str]:
@@ -130,7 +157,10 @@ def evaluate(grid: EvalGrid) -> EvalReport:
     baseline.  Because every scenario shares the fleet size and trace
     shapes, the jit cache holds at most ``len(set(policies)) + 1`` entries
     for the whole run (reported as ``expected_compiles`` and asserted by
-    ``benchmarks/cr_eval.py --smoke``).
+    ``benchmarks/cr_eval.py --smoke``).  With ``grid.mesh`` set the policy
+    programs run through the sharded Pallas fleet path instead
+    (``_sharded_grid``, counted by the same cache watcher); the cells are
+    bit-exact either way.
     """
     from repro.scenarios import generate
 
@@ -173,6 +203,9 @@ def evaluate(grid: EvalGrid) -> EvalReport:
                     ),
                 ),
                 n_levels=n_levels,
+                mesh=grid.mesh,
+                mesh_axis=grid.mesh_axis,
+                use_pallas=grid.use_pallas,
             )).cost                                         # (S, W, B)
             cost = np.asarray(jax.block_until_ready(cost), np.float64)
             cr = cost / opt[None, None, :]
@@ -216,6 +249,8 @@ def evaluate(grid: EvalGrid) -> EvalReport:
             "seed": grid.seed,
             "tol": grid.tol,
             "noise_slack": grid.noise_slack,
+            "mesh": None if grid.mesh is None else dict(grid.mesh.shape),
+            "use_pallas": grid.use_pallas,
         },
         cells=cells,
         backend=jax.default_backend(),

@@ -5,6 +5,11 @@ are the TPU execution path and are validated against ref.py in interpret
 mode on CPU (tests/test_kernels.py).
 """
 from .ops import decode_attention, flash_attention
-from .provision_scan import provision_scan
+from .provision_scan import provision_scan, provision_scan_grid
 
-__all__ = ["decode_attention", "flash_attention", "provision_scan"]
+__all__ = [
+    "decode_attention",
+    "flash_attention",
+    "provision_scan",
+    "provision_scan_grid",
+]

@@ -3,27 +3,33 @@
 The provisioning engine's inner loop (repro.core.jax_provision) is a
 sequential scan over slots with an embarrassingly parallel level axis.  For
 large fleets the lax.scan path materializes (T, N) intermediates per step;
-this kernel fuses the whole scan into one program per level block:
+this kernel fuses the whole scan into one program per (cell, level block):
 
-  grid = (N/BN,); each program keeps its block's state — idle run length,
-  on/off bit, sampled wait threshold — in registers/VMEM across all T slots
-  and streams the on-matrix out row by row.
+  grid = (G, N/BN); each program runs ONE sweep cell — a (noise-std,
+  window, trace) combination — over its level block, keeping the block's
+  state (idle run length, on/off bit, sampled wait threshold) in
+  registers/VMEM across all T slots and streaming the on-matrix out row by
+  row.  ``G = S*W*B`` covers the full prediction-noise x window x trace
+  grid of a :class:`~repro.core.provision.ProvisionSpec` in one launch.
 
-Two traces are scalar-prefetched into SMEM: the true demand (drives the
-dispatcher's ``a(t) > level`` compare) and the *predicted* trace (drives
-the ``horizon``-slot peek) — so erroneous-prediction experiments (paper
-Sec. V-C) run through the fleet path too, and exact-prediction callers just
-pass the same array twice.  Both compares are SMEM scalar reads against a
-resident level-id vector — no HBM traffic beyond the threshold table and
-the output.
+The demand batch ``(B, T)`` and the predicted-trace rows ``(R, T)`` are
+scalar-prefetched into SMEM once and *indexed per cell*: four small
+``(G,)`` cell maps (also scalar-prefetched) tell each program which demand
+row drives its dispatcher compare, which predicted row its peek reads, and
+which threshold/horizon table rows it consumes.  The threshold and horizon
+tables are blocked into VMEM via scalar-prefetch-driven index maps, so a
+program only ever sees its own cell's rows — no HBM traffic beyond those
+blocks and the output.
 
-Thresholds are (N,) constants for the deterministic policies (A1's
-``max(0, Δ_l−w−1)``, DELAYEDOFF's ``Δ_l``) or a (T, N) table of sampled
-waits for A2/A3 (entry [t, l] is consumed iff level l becomes newly idle in
-slot t, matching the engine's PRNG contract).  Heterogeneous fleets give
-each level its own Δ, hence its own threshold *and* its own peek reach:
-``level_horizon`` is a per-level float row masking the statically unrolled
-``horizon`` peek to ``min(w+1, Δ_l)`` slots.
+Thresholds are constant rows for the deterministic policies (A1's
+``max(0, Δ_l−w−1)`` per window, DELAYEDOFF's ``Δ_l``) or ``(T, N)`` tables
+of sampled waits for A2/A3 (entry [t, l] is consumed iff level l becomes
+newly idle in slot t, matching the engine's PRNG contract; the table for
+cell (s, w, b) depends on (w, b) only — noise sweeps share wait draws).
+Heterogeneous fleets give each level its own Δ, hence its own threshold
+*and* its own peek reach: ``level_horizon`` rows are per-level floats
+masking the statically unrolled ``horizon`` peek to ``min(w+1, Δ_l)``
+slots (fractional Δ_l included: slot ``h`` is peeked iff ``h < Δ_l``).
 
 Off-TPU the kernel runs in interpret mode (auto-detected), so the sharded
 fleet path is testable on CPU.
@@ -42,41 +48,127 @@ from ._compat import CompilerParams
 DEFAULT_BN = 128     # level-block width (lane dimension)
 
 
-def _scan_kernel(
-    base_ref, a_ref, p_ref,     # scalar prefetch (SMEM): (1,), (T+max_h,), (T+max_h,)
-    m_ref,                      # (1 | T, BN) f32 wait thresholds
-    h_ref,                      # (1, BN) f32 per-level peek horizon (slots)
-    o_ref,                      # (T, BN) int32 on-matrix block
+def _grid_scan_kernel(
+    cb_ref, cp_ref, ct_ref, ch_ref,   # scalar prefetch (SMEM): (G,) cell maps
+    base_ref,                         # scalar prefetch (SMEM): (1,) level offset
+    a_ref,                            # scalar prefetch (SMEM): (B, T+max_h) demand
+    p_ref,                            # scalar prefetch (SMEM): (R, T+max_h) predicted
+    m_ref,                            # (1, 1 | T, BN) f32 wait thresholds (cell block)
+    h_ref,                            # (1, BN) f32 per-level peek horizon (cell block)
+    o_ref,                            # (1, T, BN) int32 on-matrix block
     *, T: int, bn: int, horizon: int, time_varying: bool,
 ):
-    blk = pl.program_id(0)
+    g = pl.program_id(0)
+    blk = pl.program_id(1)
     levels = base_ref[0] + blk * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    b = cb_ref[g]                     # demand row for this cell
+    p = cp_ref[g]                     # predicted row for this cell
     h_row = h_ref[pl.ds(0, 1), :]
 
     def body(t, carry):
         r, on, wait = carry                         # (1, BN) f32, bool, f32
-        busy = a_ref[t] > levels
+        busy = a_ref[b, t] > levels
         on = on | busy                              # dispatcher turn-on
         r = jnp.where(busy, 0.0, r)
         idle = on & ~busy
         if time_varying:
-            wait = jnp.where(idle & (r == 0.0), m_ref[pl.ds(t, 1), :], wait)
+            wait = jnp.where(idle & (r == 0.0), m_ref[0, pl.ds(t, 1), :], wait)
         r = jnp.where(idle, r + 1.0, r)
         seen = jnp.zeros_like(busy)
         for h in range(horizon):                    # static unroll, <= max Delta
-            seen = seen | ((p_ref[t + 1 + h] > levels) & (float(h) < h_row))
+            seen = seen | ((p_ref[p, t + 1 + h] > levels) & (float(h) < h_row))
         off_now = idle & (r - 1.0 >= wait) & ~seen
         on = on & ~off_now
         r = jnp.where(off_now, 0.0, r)
-        o_ref[pl.ds(t, 1), :] = on.astype(jnp.int32)
+        o_ref[0, pl.ds(t, 1), :] = on.astype(jnp.int32)
         return (r, on, wait)
 
     init = (
         jnp.zeros((1, bn), jnp.float32),
         jnp.zeros((1, bn), jnp.bool_),              # x(0) = a(0): busy turns it on
-        jnp.zeros((1, bn), jnp.float32) if time_varying else m_ref[pl.ds(0, 1), :],
+        jnp.zeros((1, bn), jnp.float32) if time_varying else m_ref[0, pl.ds(0, 1), :],
     )
     jax.lax.fori_loop(0, T, body, init)
+
+
+def provision_scan_grid(
+    traces: jax.Array,          # (B, T) int32 demand rows
+    predicted: jax.Array,       # (R, T) int32 predicted rows the peek reads
+    thresholds: jax.Array,      # (K, 1, N) constant or (K, T, N) sampled waits
+    cell_trace: jax.Array,      # (G,) int32 demand row per cell
+    cell_pred: jax.Array,       # (G,) int32 predicted row per cell
+    cell_thr: jax.Array,        # (G,) int32 threshold-table row per cell
+    cell_hor: jax.Array,        # (G,) int32 horizon-table row per cell
+    *,
+    delta: int,                 # static pad/peek bound: ceil(max per-level Delta)
+    horizon: int,               # peek slots unrolled: min(max_w+1, delta), 0 = none
+    base_level: jax.Array | int = 0,
+    level_horizon: jax.Array | None = None,  # (H, N) per-level peek reach rows
+    block_levels: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(G, T, N) bool on-matrix: one (noise, window, trace) cell per row.
+
+    Cell ``g`` runs the slot scan for levels ``[base_level, base_level+N)``
+    with demand ``traces[cell_trace[g]]``, peek trace
+    ``predicted[cell_pred[g]]``, wait thresholds ``thresholds[cell_thr[g]]``
+    and per-level peek reach ``level_horizon[cell_hor[g]]``.
+    """
+    traces = jnp.asarray(traces, jnp.int32)
+    predicted = jnp.asarray(predicted, jnp.int32)
+    assert traces.ndim == 2 and predicted.ndim == 2, (traces.shape, predicted.shape)
+    T = traces.shape[1]
+    max_h = int(delta)
+    assert 0 <= horizon <= max_h, (horizon, delta)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    assert thresholds.ndim == 3, thresholds.shape
+    time_varying = thresholds.shape[1] != 1
+    n = thresholds.shape[-1]
+    G = cell_trace.shape[0]
+    bn = block_levels
+    n_padded = -(-n // bn) * bn
+    pad_n = n_padded - n
+    m3d = thresholds
+    if level_horizon is None:
+        h2d = jnp.full((1, n), float(horizon), jnp.float32)
+    else:
+        h2d = jnp.asarray(level_horizon, jnp.float32)
+    if pad_n:
+        m3d = jnp.pad(m3d, ((0, 0), (0, 0), (0, pad_n)))
+        h2d = jnp.pad(h2d, ((0, 0), (0, pad_n)))
+    a_pad = jnp.pad(traces, ((0, 0), (0, max_h)))
+    p_pad = jnp.pad(predicted, ((0, 0), (0, max_h)))
+    base = jnp.asarray(base_level, jnp.int32).reshape((1,))
+    cells = tuple(jnp.asarray(c, jnp.int32) for c in
+                  (cell_trace, cell_pred, cell_thr, cell_hor))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _grid_scan_kernel, T=T, bn=bn, horizon=horizon, time_varying=time_varying
+    )
+    # index maps receive the scalar-prefetch refs: p[2]/p[3] are the
+    # cell -> (threshold row, horizon row) maps, so each program's VMEM
+    # blocks are exactly its own cell's tables
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(G, n_padded // bn),
+        in_specs=[
+            pl.BlockSpec((1, m3d.shape[1], bn), lambda g, j, *p: (p[2][g], 0, j)),
+            pl.BlockSpec((1, bn), lambda g, j, *p: (p[3][g], j)),
+        ],
+        out_specs=pl.BlockSpec((1, T, bn), lambda g, j, *p: (g, 0, j)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, T, n_padded), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(*cells, base, a_pad, p_pad, m3d, h2d)
+    return out[:, :, :n].astype(bool)
 
 
 def provision_scan(
@@ -91,49 +183,23 @@ def provision_scan(
     block_levels: int = DEFAULT_BN,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """(T, N) bool on-matrix for levels [base_level, base_level + N)."""
-    a = jnp.asarray(a, jnp.int32)
-    T = a.shape[0]
-    max_h = int(delta)
-    assert 0 <= horizon <= max_h, (horizon, delta)
-    thresholds = jnp.asarray(thresholds, jnp.float32)
-    time_varying = thresholds.ndim == 2
-    n = thresholds.shape[-1]
-    bn = block_levels
-    n_padded = -(-n // bn) * bn
-    pad_n = n_padded - n
-    m2d = thresholds if time_varying else thresholds[None, :]
-    if level_horizon is None:
-        h2d = jnp.full((1, n), float(horizon), jnp.float32)
-    else:
-        h2d = jnp.asarray(level_horizon, jnp.float32)[None, :]
-    if pad_n:
-        m2d = jnp.pad(m2d, ((0, 0), (0, pad_n)))
-        h2d = jnp.pad(h2d, ((0, 0), (0, pad_n)))
-    pred = a if predicted is None else jnp.asarray(predicted, jnp.int32)
-    a_pad = jnp.concatenate([a, jnp.zeros((max_h,), jnp.int32)])
-    p_pad = jnp.concatenate([pred, jnp.zeros((max_h,), jnp.int32)])
-    base = jnp.asarray(base_level, jnp.int32).reshape((1,))
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    """(T, N) bool on-matrix for levels [base_level, base_level + N).
 
-    kernel = functools.partial(
-        _scan_kernel, T=T, bn=bn, horizon=horizon, time_varying=time_varying
+    The single-cell convenience wrapper over :func:`provision_scan_grid`
+    (one trace, one window, one noise level — ``G = 1``).
+    """
+    a = jnp.asarray(a, jnp.int32)
+    thresholds = jnp.asarray(thresholds, jnp.float32)
+    if thresholds.ndim == 2:
+        m3d = thresholds[None]                      # (1, T, N)
+    else:
+        m3d = thresholds[None, None]                # (1, 1, N)
+    pred = a if predicted is None else jnp.asarray(predicted, jnp.int32)
+    lh = None if level_horizon is None else jnp.asarray(level_horizon)[None]
+    zero = jnp.zeros((1,), jnp.int32)
+    out = provision_scan_grid(
+        a[None], pred[None], m3d, zero, zero, zero, zero,
+        delta=delta, horizon=horizon, base_level=base_level,
+        level_horizon=lh, block_levels=block_levels, interpret=interpret,
     )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(n_padded // bn,),
-        in_specs=[
-            pl.BlockSpec((m2d.shape[0], bn), lambda i, base, ap, pp: (0, i)),
-            pl.BlockSpec((1, bn), lambda i, base, ap, pp: (0, i)),
-        ],
-        out_specs=pl.BlockSpec((T, bn), lambda i, base, ap, pp: (0, i)),
-    )
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, n_padded), jnp.int32),
-        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
-        interpret=interpret,
-    )(base, a_pad, p_pad, m2d, h2d)
-    return out[:, :n].astype(bool)
+    return out[0]

@@ -23,6 +23,7 @@ Register new generators with :func:`register_scenario`; see
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -32,6 +33,19 @@ from repro.core.traces import scale_to_pmr
 GeneratorFn = Callable[..., np.ndarray]
 
 _REGISTRY: dict[str, GeneratorFn] = {}
+
+#: Relative tolerance on the *realized* peak-to-mean ratio of a generated
+#: integer trace vs ``Scenario.target_pmr``.  ``scale_to_pmr`` hits the
+#: target on the continuous trace, but the subsequent mean rescale +
+#: ``rint`` + clip drifts the realized PMR (worst for bursty shapes at low
+#: means, e.g. ``heavy_tail_bursts``); :func:`generate` re-fits the
+#: pre-rounding target until the rounded trace lands within this tolerance,
+#: and warns when it cannot (a trace whose raw shape caps the reachable
+#: PMR below the target, e.g. a near-binary ``step_outage``).
+PMR_TOL = 0.05
+
+#: Secant-correction attempts before :func:`generate` gives up and warns.
+PMR_REFITS = 4
 
 
 def register_scenario(name: str) -> Callable[[GeneratorFn], GeneratorFn]:
@@ -88,11 +102,54 @@ class Scenario:
         )
 
 
+def _quantize(a: np.ndarray, mean_jobs: float) -> np.ndarray:
+    """Shared tail of the rescale: mean to ``mean_jobs``, rint, clip at 0."""
+    mean = a.mean()
+    if mean > 0:
+        a = a / mean * mean_jobs
+    return np.maximum(np.rint(a), 0).astype(np.int64)
+
+
+def _fit_pmr(a: np.ndarray, target: float, mean_jobs: float,
+             label: str) -> np.ndarray:
+    """Integer trace whose *realized* PMR is within ``PMR_TOL`` of target.
+
+    ``scale_to_pmr`` only controls the continuous trace; rounding drifts
+    the realized ratio.  Measure it post-rounding and secant-correct the
+    pre-rounding target (deterministically — no extra randomness) until the
+    rounded trace lands inside the tolerance; warn if the trace's shape
+    makes the target unreachable.
+    """
+    goal = target
+    best, best_err = None, np.inf
+    for _ in range(PMR_REFITS + 1):
+        q = _quantize(scale_to_pmr(a, goal), mean_jobs)
+        mean = q.mean()
+        realized = float(q.max() / mean) if mean > 0 else 0.0
+        err = abs(realized - target) / target
+        if err < best_err:
+            best, best_err = q, err
+        if err <= PMR_TOL or realized <= 0:
+            break
+        goal = max(1.0 + 1e-6, goal * target / realized)
+    if best_err > PMR_TOL:
+        warnings.warn(
+            f"scenario {label}: realized PMR after rounding is off target "
+            f"{target:g} by {best_err:.1%} (> {PMR_TOL:.0%}) even after "
+            f"{PMR_REFITS} re-fits — the trace shape or mean_jobs "
+            f"{mean_jobs:g} caps the reachable peak-to-mean ratio",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+    return best
+
+
 def generate(scenario: Scenario, n_traces: int, n_slots: int) -> np.ndarray:
     """``(n_traces, n_slots)`` int64 demand batch for one scenario.
 
     Each trace gets its own ``default_rng((seed, i))`` stream, then the
-    shared rescale: ``scale_to_pmr`` to ``target_pmr`` (if set), mean to
+    shared rescale: ``scale_to_pmr`` to ``target_pmr`` (if set, re-fit so
+    the rounded trace realizes it within ``PMR_TOL``), mean to
     ``mean_jobs``, round to integer jobs, clip at 0.
     """
     fn = get_generator(scenario.name)
@@ -106,11 +163,10 @@ def generate(scenario: Scenario, n_traces: int, n_slots: int) -> np.ndarray:
                 f"{a.shape}, expected ({n_slots},)"
             )
         if scenario.target_pmr is not None:
-            a = scale_to_pmr(a, float(scenario.target_pmr))
-        mean = a.mean()
-        if mean > 0:
-            a = a / mean * scenario.mean_jobs
-        out[i] = np.maximum(np.rint(a), 0).astype(np.int64)
+            out[i] = _fit_pmr(a, float(scenario.target_pmr),
+                              scenario.mean_jobs, f"{scenario.name!r}[{i}]")
+        else:
+            out[i] = _quantize(a, scenario.mean_jobs)
     return out
 
 

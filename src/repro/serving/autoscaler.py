@@ -214,10 +214,10 @@ class FleetProvisioner:
     arrays on ``costs``.  ``plan_sweep``/``sweep_costs`` evaluate every
     prediction window in one program, which is how an operator picks α for
     a fleet (paper Fig. 4b as a planning tool).  ``mesh=`` shards the
-    replica axis through the fused Pallas scan — that path takes one trace
-    and one window, so it applies to single-trace ``plan()`` only (sweeps
-    and batched demand raise).  Randomized policies need an explicit PRNG
-    ``key``.
+    replica axis through the fused Pallas grid scan — batched demand and
+    windows sweeps ride along (one kernel program per (window, trace) cell,
+    bit-exact against the unsharded engine).  Randomized policies need an
+    explicit PRNG ``key``.
     """
 
     def __init__(
@@ -253,11 +253,6 @@ class FleetProvisioner:
 
         policy = self.policy
         if windows is not None:
-            if self.mesh is not None:
-                raise ValueError(
-                    "mesh-sharded planning takes one trace and one window: "
-                    "use plan(), not a windows sweep"
-                )
             policy = _dc.replace(policy, windows=np.asarray(windows, np.int32))
         return ProvisionSpec(
             costs=self.costs,

@@ -161,7 +161,9 @@ def test_noise_sweep_composes_with_windows_and_randomized_policies():
     np.testing.assert_array_equal(np.asarray(res.x[0]), np.asarray(plain.x))
 
 
-def test_noise_sweep_rejects_mesh_and_bad_shapes():
+def test_noise_sweep_through_mesh_matches_unsharded():
+    """The mesh path now takes the (S,) noise sweep too (it used to raise)
+    and reproduces the lax.scan rows bit-exactly."""
     a = _demand()
     noise = PredictionNoise(jnp.asarray([0.0, 0.2]), jax.random.key(0))
     mesh = jax.make_mesh((1,), ("data",))
@@ -172,7 +174,60 @@ def test_noise_sweep_rejects_mesh_and_bad_shapes():
         n_levels=int(a.max()) + 1,
         mesh=mesh,
     )
-    with pytest.raises(ValueError, match="noise sweep"):
-        provision(spec)
+    got = provision(spec)
+    want = provision(dataclasses.replace(spec, mesh=None))
+    assert got.x.shape == (2, a.shape[1])
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
     with pytest.raises(ValueError, match="scalar or a"):
         PredictionNoise(jnp.zeros((2, 2)), jax.random.key(0)).apply(a)
+
+
+# ---------------------------------------------------------------------------
+# The mesh= fleet path through the harness, and explicit bound dispatch
+# ---------------------------------------------------------------------------
+
+def test_mesh_grid_reproduces_cells(report):
+    """evaluate(EvalGrid(..., mesh=...)) runs every policy cell through the
+    sharded Pallas fleet path and must reproduce the lax.scan report's
+    cells verbatim (bit-exact kernel parity end to end)."""
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    meshed = evaluate(dataclasses.replace(SMALL, mesh=mesh))
+    assert meshed.cells == report.cells
+    assert meshed.grid["mesh"] == {"data": len(jax.devices())}
+    # the sharded lax.scan body agrees too
+    unfused = evaluate(dataclasses.replace(SMALL, mesh=mesh, use_pallas=False))
+    assert unfused.cells == report.cells
+
+
+def test_mesh_grid_rejects_offline_policy():
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="offline"):
+        evaluate(dataclasses.replace(
+            SMALL, policies=("A1", "offline"), mesh=mesh))
+
+
+def test_offline_and_delayedoff_cells_carry_bounds():
+    """_bound dispatches on the policy name explicitly: offline cells pin
+    bound 1.0 and delayedoff 2.0 — they must not silently lose their
+    bounds because ``theoretical_ratio`` only knows A1/A2/A3 (regression:
+    the old except-KeyError fallback was one raise-type change away from
+    stripping them)."""
+    from repro.eval.harness import _bound
+
+    assert _bound("offline", 0.3) == 1.0
+    assert _bound("delayedoff", 0.3) == 2.0
+    assert _bound("A1", 0.5) == pytest.approx(1.5)
+    assert _bound("not_a_policy", 0.5) is None
+
+    grid = dataclasses.replace(SMALL, policies=("offline", "delayedoff"))
+    rep = evaluate(grid)
+    by_policy = {}
+    for c in rep.cells:
+        by_policy.setdefault(c.policy, set()).add(c.bound)
+    assert by_policy["offline"] == {1.0}
+    assert by_policy["delayedoff"] == {2.0}
+    # offline IS the baseline: its CR is exactly 1 and always within bound
+    for c in rep.cells:
+        if c.policy == "offline":
+            assert c.mean_cr == pytest.approx(1.0)
+        assert c.bound_ok

@@ -233,6 +233,50 @@ def test_pallas_scan_distinct_prediction_trace():
     assert not np.array_equal(np.asarray(got), np.asarray(exact))
 
 
+@pytest.mark.parametrize("window", [0, 1, 2, 3])
+def test_pallas_scan_fractional_delta_peek_boundary(window):
+    """Per-level Δ_l ∈ {2.5, 3.0}: the kernel's fractional peek mask
+    (``float(h) < Δ_l``) must agree with the engine at the boundary where
+    the unrolled slot index straddles a non-integer horizon (h = 2 is
+    peeked under Δ=2.5 iff the horizon row says 2.0 < 2.5, but h = 3 is
+    not), and the A1 thresholds clip at zero (Δ − w − 1 < 0)."""
+    rng = np.random.default_rng(21)
+    a = rng.integers(0, 9, size=80)
+    n = int(a.max()) + 1
+    delta_lv = np.where(np.arange(n) % 2 == 0, 2.5, 3.0)
+    max_h = 3                                    # ceil(max Δ)
+    aj = jnp.asarray(a, jnp.int32)
+    want = _level_schedule(aj, n, delta_lv, window, "A1")
+    thr = jnp.asarray(np.maximum(0.0, delta_lv - window - 1), jnp.float32)
+    lh = jnp.asarray(np.minimum(window + 1.0, delta_lv), jnp.float32)
+    got = provision_scan(aj, thr, delta=max_h, horizon=min(window + 1, max_h),
+                         level_horizon=lh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("policy", ["A2", "A3"])
+def test_pallas_scan_wait_consumed_at_first_idle_slot(policy):
+    """A trace that goes idle at the first scan step: the kernel's
+    first-newly-idle wait consumption (``idle & (r == 0.0)``) must pick up
+    the slot-1 table row exactly like the engine — including levels that
+    were never busy (they never consume a draw) and a level re-idling
+    after a later busy burst (fresh draw, not the stale one)."""
+    a = np.zeros(40, np.int64)
+    a[0] = 5                   # levels 0-4 on at t=0, all newly idle at t=1
+    a[20:23] = 3               # levels 0-2 busy again, re-idle at t=23
+    n = 6                      # level 5 never turns on at all
+    window = 1
+    key = jax.random.key(33)
+    aj = jnp.asarray(a, jnp.int32)
+    u0, u = _uniforms(key, len(a), n)
+    waits = _waits_from_uniforms(policy, u0, u, window, B)
+    want = _level_schedule(aj, n, B, window, policy, key=key)
+    got = provision_scan(aj, waits, delta=B, horizon=window + 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the schedule must actually exercise the idle path (turn-offs happen)
+    assert np.asarray(want)[:, :5].sum() < 5 * len(a)
+
+
 def test_pallas_scan_heterogeneous_per_level_horizon():
     """Per-level Δ: thresholds AND peek reach vary per level, masked in-kernel."""
     rng = np.random.default_rng(16)
@@ -345,6 +389,26 @@ def spec3(mesh=None):
         n_levels=n, mesh=mesh)
 np.testing.assert_array_equal(np.asarray(provision(spec3(mesh)).x),
                               np.asarray(provision(spec3()).x))
+# the full (S, W, B) grid across 4 real shards: the psum / tiled
+# all_gather / per-shard base offsets must reassemble the level axis in
+# order (a 1-device mesh makes every collective a no-op, so only this
+# forced-multi-device run exercises them)
+from repro.core import PredictionNoise
+ab = rng.integers(0, 11, size=(2, 60))
+def spec_grid(mesh=None, use_pallas=True):
+    return ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(
+            demand=jnp.asarray(ab, jnp.int32),
+            noise=PredictionNoise(jnp.asarray([0.0, 0.3]), jax.random.key(7))),
+        policy=PolicySpec("A3", windows=jnp.arange(3), key=jax.random.key(8)),
+        n_levels=n, mesh=mesh, use_pallas=use_pallas)
+want = provision(spec_grid())
+for use_pallas in (True, False):
+    got = provision(spec_grid(mesh, use_pallas))
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_allclose(np.asarray(got.level_cost),
+                               np.asarray(want.level_cost), rtol=1e-6)
 print("OK")
 """
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
@@ -352,15 +416,153 @@ print("OK")
     assert r.returncode == 0 and "OK" in r.stdout, (r.stdout, r.stderr[-2000:])
 
 
-def test_mesh_rejects_batched_and_sweep_and_offline():
-    a = np.ones((2, 30), np.int64)
+def test_mesh_rejects_offline():
+    a = np.ones((30,), np.int64)
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    with pytest.raises(ValueError, match="one trace"):
-        run(a, mesh=mesh, n_levels=4)
-    with pytest.raises(ValueError, match="one trace and one window"):
-        run(a[0], windows=jnp.arange(2), mesh=mesh, n_levels=4)
     with pytest.raises(ValueError, match="online policies"):
-        run(a[0], policy="offline", mesh=mesh, n_levels=4)
+        run(a, policy="offline", mesh=mesh, n_levels=4)
+
+
+def test_n_levels_inference_under_jit_raises_clearly():
+    """Default n_levels needs concrete demand; under an outer jit/vmap the
+    old ``int(ab.max())`` exploded with an opaque ConcretizationTypeError —
+    now a ValueError names the fix (regression)."""
+    from repro.core import PAPER_COSTS
+
+    a = jnp.asarray(np.ones(20), jnp.int32)
+
+    def cost(ai, n_levels=None):
+        return provision(ProvisionSpec(
+            costs=PAPER_COSTS,
+            workload=Workload(demand=ai),
+            policy=PolicySpec("A1", window=1),
+            n_levels=n_levels,
+        )).cost
+
+    with pytest.raises(ValueError, match="n_levels"):
+        jax.jit(cost)(a)
+    with pytest.raises(ValueError, match="jit/vmap"):
+        jax.vmap(lambda ai: cost(ai))(a[None])
+    # explicit n_levels works under jit; a level-pinned CostModel also works
+    assert float(jax.jit(lambda ai: cost(ai, n_levels=2))(a)) == \
+        pytest.approx(float(cost(a, n_levels=2)))
+
+
+# ---------------------------------------------------------------------------
+# Batched (S, W, B) axes through the mesh/Pallas fleet path
+# ---------------------------------------------------------------------------
+
+MESH_GRID_CASES = [
+    # policy, batched, windows, noise-swept
+    ("A1", True, True, False),
+    ("A1", True, False, True),
+    ("A2", True, True, True),
+    ("A3", True, True, True),
+    ("A3", False, True, False),
+    ("A3", False, False, True),
+    ("delayedoff", True, True, True),
+]
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+@pytest.mark.parametrize("policy,batched,sweep_w,sweep_s", MESH_GRID_CASES)
+def test_mesh_grid_matches_unsharded(policy, batched, sweep_w, sweep_s,
+                                     use_pallas):
+    """The sharded fleet path accepts the full (S, W, B) grid and is
+    bit-exact against the lax.scan programs on every axis combination —
+    kernel and sharded-lax.scan bodies alike (common random numbers)."""
+    from repro.core import PredictionNoise
+
+    rng = np.random.default_rng(42)
+    a = rng.integers(0, 7, size=(3, 50) if batched else (50,))
+    n = int(a.max()) + 1
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    kw = dict(
+        policy=policy,
+        n_levels=n,
+        key=jax.random.key(5) if policy in ("A2", "A3") else None,
+        windows=jnp.arange(3) if sweep_w else None,
+        window=2,
+    )
+    noise = (
+        PredictionNoise(jnp.asarray([0.0, 0.3]), jax.random.key(6))
+        if sweep_s else None
+    )
+
+    def go(**extra):
+        return provision(ProvisionSpec(
+            costs=COSTS,
+            workload=Workload(demand=jnp.asarray(a, jnp.int32), noise=noise),
+            policy=PolicySpec(kw["policy"], window=kw["window"],
+                              windows=kw["windows"], key=kw["key"]),
+            n_levels=n,
+            **extra,
+        ))
+
+    got = go(mesh=mesh, use_pallas=use_pallas)
+    want = go()
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_allclose(np.asarray(got.level_cost),
+                               np.asarray(want.level_cost), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.cost), np.asarray(want.cost),
+                               rtol=1e-6)
+
+
+def test_mesh_path_works_under_outer_jit():
+    """provision(mesh=...) traced by an outer jit must still run (the
+    static peek unroll falls back to the Δ bound when the windows values
+    are tracers) and agree with the eager meshed and unmeshed results.
+    ``windows`` enters as a jit *argument* so its values really are
+    tracers inside the trace — pinning the fallback branch, not just the
+    constant-folded path."""
+    rng = np.random.default_rng(44)
+    a = rng.integers(0, 6, size=50)
+    n = int(a.max()) + 1
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+
+    def cost(ai, ws, m=None):
+        return provision(ProvisionSpec(
+            costs=COSTS,
+            workload=Workload(demand=ai),
+            policy=PolicySpec("A1", windows=ws),
+            n_levels=n,
+            mesh=m,
+        )).cost
+
+    aj = jnp.asarray(a, jnp.int32)
+    ws = jnp.arange(3)
+    got = jax.jit(lambda ai, w: cost(ai, w, mesh))(aj, ws)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(cost(aj, ws, mesh)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(cost(aj, ws)),
+                               rtol=1e-6)
+
+
+def test_mesh_grid_heterogeneous_fractional_delta():
+    """(S, W, B) mesh grid with per-level Δ ∈ {2.5, 6.0} — fractional peek
+    reach and per-level thresholds through the batched kernel."""
+    from repro.core import PredictionNoise
+
+    rng = np.random.default_rng(43)
+    ab = rng.integers(0, 6, size=(2, 40))
+    n = int(ab.max()) + 1
+    half = np.where(np.arange(n) % 2 == 0, 3.0, 1.25)      # Δ 6.0 / 2.5
+    costs = CostModel(P=1.0, beta_on=half, beta_off=half)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    spec = ProvisionSpec(
+        costs=costs,
+        workload=Workload(
+            demand=jnp.asarray(ab, jnp.int32),
+            noise=PredictionNoise(jnp.asarray([0.0, 0.25]), jax.random.key(1)),
+        ),
+        policy=PolicySpec("A1", windows=jnp.arange(3)),
+        n_levels=n,
+    )
+    want = provision(spec)
+    got = provision(dataclasses.replace(spec, mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_allclose(np.asarray(got.level_cost),
+                               np.asarray(want.level_cost), rtol=1e-6)
 
 
 def test_prediction_noise_workload():

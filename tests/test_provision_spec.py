@@ -292,6 +292,25 @@ def test_fleet_provisioner_takes_policy_spec():
     assert float(res.cost) == pytest.approx(float(want.cost))
 
 
+def test_fleet_provisioner_mesh_sweeps_and_batches():
+    """The planner's mesh= path now takes batched demand and windows sweeps
+    (it used to raise): same cells, level axis sharded, bit-exact."""
+    from repro.serving import FleetProvisioner
+
+    ab = np.random.default_rng(25).integers(0, 5, size=(2, 60))
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    meshed = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=8, mesh=mesh)
+    plain = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=8)
+    windows = np.arange(3)
+    np.testing.assert_array_equal(
+        meshed.plan_sweep(ab, windows), plain.plan_sweep(ab, windows)
+    )
+    np.testing.assert_allclose(
+        meshed.sweep_costs(ab, windows), plain.sweep_costs(ab, windows),
+        rtol=1e-6,
+    )
+
+
 def test_unknown_policy_value_errors_name_valid_set():
     from repro.serving import FleetProvisioner
     from repro.serving.autoscaler import ReplicaAutoscaler
