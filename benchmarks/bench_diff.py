@@ -1,0 +1,149 @@
+"""BENCH-diff: compare two ``BENCH_provision.json`` artifacts cell by cell.
+
+CI's regression gate for the competitive-ratio trajectory: given the
+checked-in baseline and a freshly generated report, key every cell by
+``(policy, scenario, noise_std, window)`` and flag
+
+- **removed cells** — a grid that silently shrank is a coverage regression;
+- **mean-CR increases** beyond ``--tol`` — the empirical ratio drifting up
+  means the engine got *worse* at following the offline optimum (common
+  random numbers make mean CR deterministic per seed, so any drift is a
+  code change, not sampling noise);
+- **bound-verdict flips** (``bound_ok``/per-type ``group_bound_ok``
+  true → false) — a paper guarantee newly violated.
+
+New cells, CR improvements, and verdicts flipping false → true are
+informational only.  Exit status 1 on any regression, 0 otherwise::
+
+    PYTHONPATH=src python benchmarks/bench_diff.py baseline.json new.json
+
+Loads via :class:`repro.eval.report.EvalReport`, so a v1 baseline diffs
+cleanly against a v2 report (v1 cells just lack the distribution/typed
+columns, which the diff treats as absent rather than changed).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+from repro.eval import EvalReport
+from repro.eval.report import CellResult
+
+#: default tolerance on mean-CR drift before it counts as a regression
+DEFAULT_TOL = 1e-6
+
+
+def cell_key(c: CellResult) -> tuple:
+    return (c.policy, c.scenario, round(float(c.noise_std), 9), int(c.window))
+
+
+def _fmt_key(k: tuple) -> str:
+    policy, scenario, std, window = k
+    return f"{policy} on {scenario} (std={std:g}, w={window})"
+
+
+def _verdict_flipped(old: CellResult, new: CellResult) -> bool:
+    """True iff any bound verdict the baseline passed now fails."""
+    if old.bound_ok and not new.bound_ok:
+        return True
+    if old.group_bound_ok is not None and new.group_bound_ok is not None:
+        return any(o and not n for o, n in
+                   zip(old.group_bound_ok, new.group_bound_ok))
+    return False
+
+
+@dataclasses.dataclass
+class BenchDiff:
+    """The cell-by-cell comparison of two reports."""
+
+    removed: list[tuple]                               # keys gone from new
+    added: list[tuple]                                 # keys new grew
+    worse: list[tuple[tuple, float, float]]            # (key, old_cr, new_cr)
+    improved: list[tuple[tuple, float, float]]
+    flipped: list[tuple]                               # verdict true -> false
+    unflipped: list[tuple]                             # verdict false -> true
+    n_common: int = 0
+
+    @property
+    def regressed(self) -> bool:
+        return bool(self.removed or self.worse or self.flipped)
+
+    def lines(self) -> list[str]:
+        out = [f"{self.n_common} common cells, {len(self.added)} added, "
+               f"{len(self.removed)} removed"]
+        for k in self.removed:
+            out.append(f"REGRESSION removed cell: {_fmt_key(k)}")
+        for k, old, new in self.worse:
+            out.append(
+                f"REGRESSION mean CR up: {_fmt_key(k)}: "
+                f"{old:.6f} -> {new:.6f} (+{new - old:.2e})"
+            )
+        for k in self.flipped:
+            out.append(f"REGRESSION bound verdict flipped ok->VIOLATED: "
+                       f"{_fmt_key(k)}")
+        for k in self.added:
+            out.append(f"new cell: {_fmt_key(k)}")
+        for k, old, new in self.improved:
+            out.append(f"improved: {_fmt_key(k)}: {old:.6f} -> {new:.6f}")
+        for k in self.unflipped:
+            out.append(f"bound verdict recovered: {_fmt_key(k)}")
+        return out
+
+
+def diff_reports(
+    baseline: EvalReport, new: EvalReport, tol: float = DEFAULT_TOL
+) -> BenchDiff:
+    """Compare two reports; ``tol`` is the allowed mean-CR increase."""
+    old_cells = {cell_key(c): c for c in baseline.cells}
+    new_cells = {cell_key(c): c for c in new.cells}
+    if len(old_cells) != len(baseline.cells):
+        raise ValueError("baseline report has duplicate cell keys")
+    if len(new_cells) != len(new.cells):
+        raise ValueError("new report has duplicate cell keys")
+
+    diff = BenchDiff(
+        removed=sorted(k for k in old_cells if k not in new_cells),
+        added=sorted(k for k in new_cells if k not in old_cells),
+        worse=[], improved=[], flipped=[], unflipped=[],
+    )
+    for k in sorted(set(old_cells) & set(new_cells)):
+        o, n = old_cells[k], new_cells[k]
+        diff.n_common += 1
+        if n.mean_cr > o.mean_cr + tol:
+            diff.worse.append((k, o.mean_cr, n.mean_cr))
+        elif n.mean_cr < o.mean_cr - tol:
+            diff.improved.append((k, o.mean_cr, n.mean_cr))
+        if _verdict_flipped(o, n):
+            diff.flipped.append(k)
+        elif _verdict_flipped(n, o):
+            diff.unflipped.append(k)
+    return diff
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", type=pathlib.Path,
+                    help="the reference BENCH_provision.json")
+    ap.add_argument("new", type=pathlib.Path,
+                    help="the freshly generated report to gate")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="allowed mean-CR increase per cell "
+                         f"(default {DEFAULT_TOL:g})")
+    args = ap.parse_args(argv)
+
+    diff = diff_reports(
+        EvalReport.load(args.baseline), EvalReport.load(args.new), tol=args.tol
+    )
+    for line in diff.lines():
+        print(line)
+    if diff.regressed:
+        print("bench_diff: REGRESSION", file=sys.stderr)
+        return 1
+    print("bench_diff: ok", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

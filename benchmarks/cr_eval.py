@@ -11,7 +11,10 @@ Both legs hard-fail if any (policy, scenario, noise, α) cell's empirical CR
 violates its paper bound beyond the grid tolerance, or if re-running the
 grid recompiles anything (the whole grid must execute as warmed batched
 device programs — one program per (policy, scenario), shapes shared across
-scenarios).
+scenarios).  Both grids carry ``TYPED_GROUPS`` — a two-generation
+heterogeneous fleet — so every run also records multi-type AQ-det/AQ-rand
+cells with per-type CR verdicts, gated against the Albers–Quedenfeld 2d
+(and d·e/(e−1)) aggregate bounds.
 """
 from __future__ import annotations
 
@@ -20,20 +23,32 @@ import dataclasses
 import pathlib
 import sys
 
+from repro.core import ServerGroup
 from repro.eval import EvalGrid, EvalReport, evaluate
 from repro.scenarios import Scenario
+
+#: the benchmark's heterogeneous fleet: two server generations (Albers–
+#: Quedenfeld d=2).  "efficient" is the paper's normalized server; "legacy"
+#: burns 1.5× the power with proportionally pricier toggles (same Δ, so the
+#: per-type ski-rental structure is identical and only routing differs).
+TYPED_GROUPS = (
+    ServerGroup("efficient", 96, P=1.0, beta_on=3.0, beta_off=3.0),
+    ServerGroup("legacy", 96, P=1.5, beta_on=4.5, beta_off=4.5),
+)
 
 SMOKE_GRID = EvalGrid(
     noise_stds=(0.0, 0.2),
     windows=(0, 2, 4),
     n_traces=4,
     n_slots=288,
+    typed_groups=TYPED_GROUPS,
 )
 
 FULL_GRID = EvalGrid(
     noise_stds=(0.0, 0.1, 0.25, 0.5),
     windows=(0, 1, 2, 3, 4, 5),
     n_traces=16,
+    typed_groups=TYPED_GROUPS,
 )
 
 
@@ -103,6 +118,21 @@ def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True) -> EvalRepor
                 for c in report.violations()
             )
             raise AssertionError(f"paper-bound violations:\n{lines}")
+        if report.grid.get("typed_groups"):
+            d = len(report.grid["typed_groups"])
+            det = [c for c in report.cells
+                   if c.group_mean_cr is not None and c.policy == "AQ-det"]
+            if not det:
+                raise AssertionError(
+                    "grid declares typed_groups but produced no AQ-det "
+                    "multi-type cell"
+                )
+            off = [c for c in det if c.bound != 2.0 * d]
+            if off:
+                raise AssertionError(
+                    f"AQ-det typed cells must carry the 2d = {2.0 * d:g} "
+                    f"aggregate bound, got {sorted({c.bound for c in off})}"
+                )
     finally:
         # always leave the report on disk — a gate failure is exactly when
         # the per-cell diagnostics are needed (CI uploads it unconditionally)

@@ -108,6 +108,59 @@ def provision_grid_vs_lax_scan(rows: list[str]) -> None:
         )
 
 
+def provision_grid_routed(rows: list[str]) -> None:
+    """Typed-fleet block packing: the same (W, B) grid through the kernel's
+    group-aligned routed layout (scalar-prefetch route lanes, pad lanes
+    carrying the sentinel id) vs the contiguous single-type layout — the
+    routing must be pure lane relabeling, bit-identical after compaction."""
+    from repro.core.jax_provision import _group_layout
+    from repro.kernels.provision_scan import provision_scan_grid
+
+    W, B, T = 2, 2, 256
+    group_sizes = (24, 40)                        # d=2 typed fleet, n=64
+    n = sum(group_sizes)
+    delta, max_w = 6, 2
+    rng = np.random.default_rng(1)
+    ab = jnp.asarray(rng.integers(0, n, size=(B, T)), jnp.int32)
+    windows = jnp.arange(W, dtype=jnp.float32)
+    thr1 = jnp.maximum(0.0, float(delta) - windows - 1.0)        # (W,)
+    hor1 = jnp.minimum(windows + 1.0, float(delta))              # (W,)
+    w_ix, b_ix = jnp.meshgrid(jnp.arange(W), jnp.arange(B), indexing="ij")
+    cells = (b_ix.reshape(-1), b_ix.reshape(-1),
+             w_ix.reshape(-1), w_ix.reshape(-1))
+
+    route_np, sel_np, n_layout = _group_layout(n, group_sizes, 1)
+    sel = jnp.asarray(sel_np)
+    thr_l = jnp.zeros((W, 1, n_layout)).at[:, :, sel].set(
+        jnp.broadcast_to(thr1[:, None, None], (W, 1, n))
+    )
+    hor_l = jnp.zeros((W, n_layout)).at[:, sel].set(
+        jnp.broadcast_to(hor1[:, None], (W, n))
+    )
+
+    contig = jax.jit(lambda: provision_scan_grid(
+        ab, ab, jnp.broadcast_to(thr1[:, None, None], (W, 1, n)), *cells,
+        delta=delta, horizon=max_w + 1,
+        level_horizon=jnp.broadcast_to(hor1[:, None], (W, n)),
+    ))
+    routed = jax.jit(lambda: provision_scan_grid(
+        ab, ab, thr_l, *cells, delta=delta, horizon=max_w + 1,
+        level_horizon=hor_l, routes=jnp.asarray(route_np),
+    ))
+
+    got, want = np.asarray(routed())[..., sel_np], np.asarray(contig())
+    assert (got == want).all(), "routed grid kernel != contiguous layout"
+    cells_n = W * B * T
+    mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    for tag, fn, lanes in ((f"contig_{mode}", contig, n),
+                           (f"routed_{mode}", routed, n_layout)):
+        us = _bench(fn)
+        rows.append(
+            f"provision_grid_{tag}_w{W}b{B}n{lanes},{us:.1f},"
+            f"decisions_per_s={cells_n * lanes / (us / 1e6):.3e}"
+        )
+
+
 def interpret_correctness(rows: list[str]) -> None:
     """Tiny interpret-mode run vs oracle (wall time = CPU emulation only)."""
     from repro.kernels.flash_attention import flash_attention
@@ -136,3 +189,4 @@ def run(rows: list[str]) -> None:
     decode_roofline(rows)
     interpret_correctness(rows)
     provision_grid_vs_lax_scan(rows)
+    provision_grid_routed(rows)

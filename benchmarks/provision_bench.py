@@ -28,6 +28,7 @@ from repro.core import (
     PolicySpec,
     PredictionNoise,
     ProvisionSpec,
+    ServerGroup,
     Workload,
     generate_brick_trace,
     msr_like_trace,
@@ -113,6 +114,39 @@ def heterogeneous_throughput(rows: list[str], n_levels=256) -> None:
         rows.append(
             f"provision_{tag}_n{n_levels},{us:.1f},"
             f"decisions_per_s={n_levels * len(a) / (us / 1e6):.3e}"
+        )
+
+
+def typed_fleet_throughput(rows: list[str], n_total=256) -> None:
+    """Typed d=2 fleet (CostModel.from_groups) under AQ-det vs the untyped
+    scalar model under delayedoff on the same demand — same per-level timer
+    mechanics, so the delta is the cost of the group axis (group_cost
+    reduction + routing-priority concatenation)."""
+    half = n_total // 2
+    typed = CostModel.from_groups(
+        ServerGroup("efficient", half, P=1.0, beta_on=3.0, beta_off=3.0),
+        ServerGroup("legacy", n_total - half, P=1.5, beta_on=4.5, beta_off=4.5),
+    )
+    a = _trace(n_total)
+    for tag, costs, policy in (
+        ("untyped_delayedoff", COSTS, "delayedoff"),
+        ("typed2_AQ-det", typed, "AQ-det"),
+    ):
+        spec = ProvisionSpec(
+            costs=costs,
+            workload=Workload(demand=jnp.asarray(a, jnp.int32)),
+            policy=PolicySpec(policy),
+            n_levels=n_total,
+        )
+        fn = lambda: provision(spec).cost
+        jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(fn())
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        rows.append(
+            f"provision_{tag}_n{n_total},{us:.1f},"
+            f"decisions_per_s={n_total * len(a) / (us / 1e6):.3e}"
         )
 
 
@@ -238,6 +272,7 @@ def run(rows: list[str]) -> None:
     jax_provisioner_throughput(rows)
     batched_sweep_throughput(rows)
     heterogeneous_throughput(rows)
+    typed_fleet_throughput(rows)
     pallas_scan_throughput(rows)
     mesh_grid_throughput(rows)
     brick_simulator_throughput(rows)
@@ -251,6 +286,7 @@ def run_smoke(rows: list[str]) -> None:
     jax_provisioner_throughput(rows, sizes=(64,))
     batched_sweep_throughput(rows, n_levels=32, n_traces=4)
     heterogeneous_throughput(rows, n_levels=32)
+    typed_fleet_throughput(rows, n_total=32)
     pallas_scan_throughput(rows, sizes=(128,))
     mesh_grid_throughput(rows, n_levels=32, n_traces=2, n_windows=2, n_stds=2,
                          n_slots=160)

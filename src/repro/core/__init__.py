@@ -15,7 +15,7 @@ The loose-kwargs ``provision_schedule``/``provision_sweep[_costs]``/
 ``provision_cost``/``provision_schedule_sharded`` functions are deprecated
 wrappers around ``provision``.
 """
-from .costs import PAPER_COSTS, CostModel, schedule_cost
+from .costs import PAPER_COSTS, CostModel, ServerGroup, schedule_cost
 from .dp_oracle import dp_optimal_cost
 from .events import BrickTrace, Job, generate_brick_trace, trace_from_intervals
 from .fluid import FluidResult, fluid_cost, fluid_scan
@@ -60,6 +60,7 @@ from .traces import (
 __all__ = [
     "PAPER_COSTS",
     "CostModel",
+    "ServerGroup",
     "schedule_cost",
     "dp_optimal_cost",
     "BrickTrace",

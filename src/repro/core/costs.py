@@ -7,6 +7,17 @@ Albers & Quedenfeld, PAPERS.md).  The critical interval ``delta`` is always
 *derived* — Δ = (β_on + β_off) / P per level (paper eq. 12) — never passed
 separately.  The class is a registered pytree so specs built from it flow
 through ``jax.jit``/``vmap`` as data, not as static compile keys.
+
+Typed fleets (Albers & Quedenfeld, arXiv 2107.14672) are first-class:
+:meth:`CostModel.from_groups` builds a model from :class:`ServerGroup`
+declarations — one group per server *type*, each with its own power draw,
+toggle costs and level count.  Groups are concatenated in routing-priority
+order (ascending ``P`` by default, so the cheapest-to-run type takes base
+load), which makes the greedy demand split implicit in the level stack:
+level ``j`` of the flat model is busy iff demand exceeds ``j``, exactly the
+homogeneous dispatcher compare.  The grouping itself (``group_sizes``,
+``group_names``) rides along as *static* pytree metadata, so a typed model
+hashes into jit compile keys while the cost values stay traced data.
 """
 from __future__ import annotations
 
@@ -21,17 +32,87 @@ from .stepfn import StepFn
 ArrayLike = "float | np.ndarray | jax.Array"
 
 
+@dataclasses.dataclass(frozen=True)
+class ServerGroup:
+    """One server *type*: ``n_servers`` identical machines with shared costs.
+
+    The building block of a typed fleet (Albers & Quedenfeld's *d* server
+    types): ``P`` is the per-slot energy of one running server of this type,
+    ``beta_on``/``beta_off`` its toggle costs, so the type's critical
+    interval is Δ = (β_on + β_off) / P (paper eq. 12, per type).
+    """
+
+    name: str
+    n_servers: int
+    P: float = 1.0
+    beta_on: float = 3.0
+    beta_off: float = 3.0
+
+    @property
+    def delta(self) -> float:
+        return (self.beta_on + self.beta_off) / self.P
+
+    def validate(self) -> "ServerGroup":
+        if self.n_servers < 1:
+            raise ValueError(f"group {self.name!r}: n_servers must be >= 1")
+        if self.P <= 0 or self.beta_on < 0 or self.beta_off < 0:
+            raise ValueError(f"group {self.name!r}: need P > 0 and beta >= 0")
+        return self
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class CostModel:
     """P: energy per unit time per running server; beta_on/off: toggle costs.
 
     Each field is a scalar (homogeneous fleet) or an ``(n_levels,)`` array
     (per-level server types); scalars broadcast against array fields.
+
+    ``group_sizes``/``group_names``: optional static metadata marking the
+    level stack as a *typed* fleet of ``d = len(group_sizes)`` server types
+    — levels ``[offset_g, offset_g + group_sizes[g])`` all belong to type
+    ``g``.  Build typed models with :meth:`from_groups`; the metadata drives
+    per-type cost aggregation (:meth:`group_reduce`) and the group-aligned
+    kernel block packing in the sharded engine.
     """
 
     P: "ArrayLike" = 1.0
     beta_on: "ArrayLike" = 3.0
     beta_off: "ArrayLike" = 3.0
+    group_sizes: tuple[int, ...] | None = None
+    group_names: tuple[str, ...] | None = None
+
+    @classmethod
+    def from_groups(cls, *groups: ServerGroup, order: str | None = "energy") -> "CostModel":
+        """Typed fleet from :class:`ServerGroup` declarations.
+
+        ``order="energy"`` (default) sorts groups by ascending ``P`` (stable)
+        so the cheapest-to-run type takes base load — the routing-priority
+        convention that makes the greedy demand split implicit in the level
+        stack.  ``order=None`` keeps the declared order (the caller asserts
+        its own routing priority).
+        """
+        if not groups:
+            raise ValueError("from_groups needs at least one ServerGroup")
+        for g in groups:
+            g.validate()
+        names = [g.name for g in groups]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate group names: {names}")
+        if order == "energy":
+            groups = tuple(sorted(groups, key=lambda g: g.P))
+        elif order is not None:
+            raise ValueError(f"order must be 'energy' or None, got {order!r}")
+        return cls(
+            P=np.concatenate([np.full(g.n_servers, g.P, np.float32) for g in groups]),
+            beta_on=np.concatenate(
+                [np.full(g.n_servers, g.beta_on, np.float32) for g in groups]
+            ),
+            beta_off=np.concatenate(
+                [np.full(g.n_servers, g.beta_off, np.float32) for g in groups]
+            ),
+            group_sizes=tuple(int(g.n_servers) for g in groups),
+            group_names=tuple(g.name for g in groups),
+        )
 
     @property
     def beta(self):
@@ -60,6 +141,73 @@ class CostModel:
             raise ValueError(f"inconsistent per-level field lengths: {sorted(sizes)}")
         return int(sizes.pop())
 
+    @property
+    def n_groups(self) -> int:
+        """Number of server types d (1 for ungrouped models)."""
+        return 1 if self.group_sizes is None else len(self.group_sizes)
+
+    @property
+    def group_offsets(self) -> tuple[int, ...]:
+        """First level id of each group (``group_sizes`` prefix sums)."""
+        if self.group_sizes is None:
+            return (0,)
+        return tuple(int(o) for o in np.cumsum((0,) + self.group_sizes)[:-1])
+
+    @property
+    def groups(self) -> tuple[ServerGroup, ...] | None:
+        """Reconstructed :class:`ServerGroup` tuple (None when ungrouped)."""
+        if self.group_sizes is None:
+            return None
+        self.validate_groups()
+        out = []
+        for name, size, off in zip(self.group_names, self.group_sizes, self.group_offsets):
+            P, bon, boff = (np.asarray(f).reshape(-1) for f in
+                            (self.P, self.beta_on, self.beta_off))
+            out.append(ServerGroup(
+                name=name, n_servers=size, P=float(P[off]),
+                beta_on=float(bon[off]), beta_off=float(boff[off]),
+            ))
+        return tuple(out)
+
+    def validate_groups(self) -> "CostModel":
+        """Check the group metadata is consistent with the per-level arrays."""
+        if self.group_sizes is None:
+            return self
+        if self.group_names is None or len(self.group_names) != len(self.group_sizes):
+            raise ValueError(
+                f"group_names {self.group_names} must name every group in "
+                f"group_sizes {self.group_sizes}"
+            )
+        if any(int(s) < 1 for s in self.group_sizes):
+            raise ValueError(f"group_sizes must all be >= 1, got {self.group_sizes}")
+        n = self.n_levels
+        total = int(sum(self.group_sizes))
+        if n is None or n != total:
+            raise ValueError(
+                f"group_sizes sum to {total} but the per-level cost arrays "
+                f"pin {n} levels"
+            )
+        return self
+
+    def group_reduce(self, level_values):
+        """Sum a trailing ``(..., n_levels)`` axis per group -> ``(..., d)``.
+
+        The per-type aggregation behind ``ProvisionResult.group_cost`` and
+        the eval grid's per-type CR columns.  Works on an ungrouped model
+        too (one group spanning the whole stack).
+        """
+        import jax.numpy as jnp
+
+        v = jnp.asarray(level_values)
+        if self.group_sizes is None:
+            return v.sum(axis=-1, keepdims=True)
+        self.validate_groups()
+        return jnp.stack(
+            [v[..., o:o + s].sum(axis=-1)
+             for o, s in zip(self.group_offsets, self.group_sizes)],
+            axis=-1,
+        )
+
     def delta_slots(self) -> int:
         """Static scan bound: ceil of the largest per-level Delta (slots)."""
         return int(math.ceil(float(np.max(np.asarray(self.delta)))))
@@ -80,7 +228,9 @@ class CostModel:
 
 
 jax.tree_util.register_dataclass(
-    CostModel, data_fields=["P", "beta_on", "beta_off"], meta_fields=[]
+    CostModel,
+    data_fields=["P", "beta_on", "beta_off"],
+    meta_fields=["group_sizes", "group_names"],
 )
 
 

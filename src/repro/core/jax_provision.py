@@ -4,14 +4,20 @@ The fluid-model level decomposition (DESIGN.md §2) makes every algorithm an
 independent per-level computation, so the whole fleet is one vectorized
 ``lax.scan`` over slots.  On top of that single scan this module layers
 
-  * all five policies — ``A1`` (deterministic, ratio ``2 - α``), ``A2``
+  * all the policies — ``A1`` (deterministic, ratio ``2 - α``), ``A2``
     (randomized, ``(e-α)/(e-1)``), ``A3`` (randomized, ``e/(e-1+α)``),
-    ``offline`` (hindsight optimum, closed form) and ``delayedoff`` — with
+    ``offline`` (hindsight optimum, closed form), ``delayedoff``, and the
+    typed-fleet pair from the Albers–Quedenfeld line (arXiv 2107.14672):
+    ``AQ-det`` (per-type break-even timers, 2d-competitive over d server
+    types) and ``AQ-rand`` (randomized per-type waits, d·e/(e−1)) — with
     the randomized waits sampled per level via an explicit PRNG key,
     matching :mod:`repro.core.ski_rental` semantics;
   * heterogeneous per-level cost models: ``Δ``, ``P`` and the toggle costs
     may all be ``(n_levels,)`` arrays (one server type per level), with the
     per-level critical interval driving waits, peek horizons and costs;
+    typed fleets (``CostModel.from_groups``) ride the same arrays, with the
+    group metadata driving routed level ids and the group-aligned kernel
+    block layout in the sharded path;
   * a leading batch axis over demand traces (``(B, T)`` demand, one subkey
     per trace) via ``vmap``;
   * a vectorized sweep axis over prediction windows (``α = (w+1)/Δ``) via
@@ -50,13 +56,20 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 E = math.e
 
-POLICIES = ("A1", "A2", "A3", "offline", "delayedoff")
+POLICIES = ("A1", "A2", "A3", "offline", "delayedoff", "AQ-det", "AQ-rand")
 RANDOMIZED = ("A2", "A3")
+#: policies that consume a PRNG key (RANDOMIZED plus the typed AQ-rand)
+KEYED = RANDOMIZED + ("AQ-rand",)
+#: policies with no prediction peek (ski-rental timers only)
+NO_PEEK = ("delayedoff", "AQ-det", "AQ-rand")
+#: policies whose schedule ignores the window sweep entirely
+WINDOW_FREE = ("offline",) + NO_PEEK
 
 
 def _check_policy(policy: str) -> None:
@@ -89,13 +102,17 @@ def _waits_from_uniforms(policy, u0, u, window, delta):
 
     A2: Z ~ e^{z/((1-α)Δ)} / ((e-1)(1-α)Δ) on [0, (1-α)Δ]  (inverse CDF).
     A3: atom at 0 w.p. α/(e-1+α), else A2's density (corrected atom, see
-    ski_rental.py).  ``delta`` is a scalar or a per-level ``(N,)`` array —
-    heterogeneous fleets get a distinct α and span per level.  Keeping the
-    transform separate from the draws lets the α-sweep share draws across
-    windows.
+    ski_rental.py).  AQ-rand: the no-peek α = 0 case — the full-span
+    e/(e−1) ski-rental distribution per level, which on a typed fleet is
+    the Albers–Quedenfeld randomized per-type wait (d·e/(e−1) overall).
+    ``delta`` is a scalar or a per-level ``(N,)`` array — heterogeneous
+    fleets get a distinct α and span per level.  Keeping the transform
+    separate from the draws lets the α-sweep share draws across windows.
     """
     b = jnp.asarray(delta, jnp.float32)
     alpha = jnp.clip((jnp.asarray(window, jnp.float32) + 1.0) / b, 0.0, 1.0)
+    if policy == "AQ-rand":             # no peek: the window never enters
+        alpha = jnp.zeros_like(alpha)
     span = (1.0 - alpha) * b
     waits = span * jnp.log1p(u * (E - 1.0))
     if policy == "A3":
@@ -123,8 +140,8 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
     b = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
     pad = jnp.concatenate([pred, jnp.zeros((max_h,), pred.dtype)])
     w = jnp.asarray(window, jnp.float32)
-    if policy == "delayedoff":      # timer Δ, no peek
-        horizon = jnp.zeros((n,), jnp.float32)
+    if policy in NO_PEEK:           # timer Δ_l (the per-type break-even
+        horizon = jnp.zeros((n,), jnp.float32)   # timer for AQ-det), no peek
         m_static = b
     else:
         horizon = jnp.minimum(w + 1.0, b)
@@ -193,7 +210,7 @@ def _level_schedule(a, n_levels, delta, window, policy, predicted=None, key=None
     if policy == "offline":
         return _offline_levels(a, n_levels, delta)
     waits = None
-    if policy in RANDOMIZED:
+    if policy in KEYED:
         _require_key(policy, key)
         u0, u = _uniforms(key, a.shape[0], n_levels)
         waits = _waits_from_uniforms(policy, u0, u, window, delta)
@@ -267,18 +284,29 @@ def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
         out["x"] = ons.sum(axis=1).astype(jnp.int32)
         return out
 
-    if policy in ("offline", "delayedoff"):
+    if policy in WINDOW_FREE:
         # window-independent policies: compute once, broadcast over the sweep
-        def one(ai, pi):
-            ons = (
-                _offline_levels(ai, n_levels, delta)
-                if policy == "offline"
-                else _on_matrix_scan(ai, pi, levels, delta=delta, max_h=max_h,
-                                     window=0, policy=policy)
-            )
+        # (AQ-rand draws its per-level waits from the key but never peeks,
+        # so one sample serves the whole sweep too)
+        if policy == "AQ-rand":
+            u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)
+        else:
+            u0 = u = jnp.zeros((B, 0, 0))
+
+        def one(ai, pi, u0i, ui):
+            if policy == "offline":
+                ons = _offline_levels(ai, n_levels, delta)
+            else:
+                waits = (
+                    _waits_from_uniforms(policy, u0i, ui, 0, delta)
+                    if policy == "AQ-rand"
+                    else None
+                )
+                ons = _on_matrix_scan(ai, pi, levels, delta=delta, max_h=max_h,
+                                      window=0, policy=policy, waits=waits)
             return reduce(ai, ons)
 
-        out = jax.vmap(one)(ab, predb)
+        out = jax.vmap(one)(ab, predb, u0, u)
         return jax.tree.map(
             lambda o: jnp.broadcast_to(o[None], (windows.shape[0],) + o.shape), out
         )
@@ -331,7 +359,7 @@ def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
 
 def _sharded_run(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
                  beta_off_lv, *, n_levels, max_h, policy, keys=None,
-                 use_pallas=True):
+                 use_pallas=True, group_sizes=None):
     """Level-sharded engine over the full (S, W, B) sweep grid.
 
     ``ab``: (B, T) demand; ``predb``: (S, B, T) predicted traces (S = 1
@@ -356,10 +384,10 @@ def _sharded_run(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
             "sharded path supports online policies (offline has no slot scan); "
             f"valid policies are {tuple(p for p in POLICIES if p != 'offline')}"
         )
-    if policy in RANDOMIZED and keys is None:
+    if policy in KEYED and keys is None:
         _require_key(policy, None)
     windows = jnp.asarray(windows, jnp.int32)
-    if policy == "delayedoff":
+    if policy in NO_PEEK:
         h_unroll = 0
     else:
         try:
@@ -376,14 +404,53 @@ def _sharded_run(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
         beta_on_lv, beta_off_lv, keys,
         mesh=mesh, axis=axis, n_levels=n_levels, max_h=max_h,
         h_unroll=h_unroll, policy=policy, use_pallas=use_pallas,
+        group_sizes=group_sizes,
     )
 
 
+#: routing id for pad lanes in the sharded level layout: compares false
+#: against any int32 demand, so a pad lane can never turn on
+ROUTE_SENTINEL = 2**30
+
+
+def _group_layout(n_levels, group_sizes, size):
+    """Static (route, sel, n_layout) storage layout for the sharded level axis.
+
+    ``route[j]`` is the *routing id* of storage lane ``j`` — the global
+    level the busy compare ``a(t) > route[j]`` dispatches against — or
+    ``ROUTE_SENTINEL`` for pad lanes.  ``sel[l]`` is the storage lane of
+    real level ``l`` (compacts gathered per-lane outputs back to level
+    order).  Ungrouped fleets lay levels out contiguously (identical to the
+    pre-typed engine).  Typed fleets pad each group to an 8-sublane
+    multiple — capped at the kernel's 128-lane block — so no
+    threshold/horizon block straddles two server types: each Pallas block
+    is group-pure, which is what lets a block carry one type's Δ/waits.
+    The tail is padded to a mesh-size multiple either way.
+    """
+    if group_sizes is None:
+        sizes = padded = [int(n_levels)]
+    else:
+        sizes = [int(s) for s in group_sizes]
+        align = min(128, -(-max(sizes) // 8) * 8)
+        padded = [-(-s // align) * align for s in sizes]
+    n_layout = -(-sum(padded) // size) * size
+    route = np.full(n_layout, ROUTE_SENTINEL, np.int32)
+    sel = np.empty(n_levels, np.int64)
+    off_route = off_lane = 0
+    for s, p in zip(sizes, padded):
+        route[off_lane:off_lane + s] = np.arange(off_route, off_route + s)
+        sel[off_route:off_route + s] = np.arange(off_lane, off_lane + s)
+        off_route += s
+        off_lane += p
+    return route, sel, n_layout
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "mesh", "axis", "n_levels", "max_h", "h_unroll", "policy", "use_pallas"))
+    "mesh", "axis", "n_levels", "max_h", "h_unroll", "policy", "use_pallas",
+    "group_sizes"))
 def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
                   keys, *, mesh, axis, n_levels, max_h, h_unroll, policy,
-                  use_pallas):
+                  use_pallas, group_sizes=None):
     """One device program for the sharded (S, W, B) grid.
 
     The demand/predicted traces and the per-cell wait tables are replicated
@@ -394,38 +461,62 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
     tiled all_gather, so the caller sees (S, W, B, ...) leaves identical to
     the unsharded engine.  Scales to fleets far past one host's memory
     (1000+ node deployments decide locally, paper Sec. IV).
+
+    Typed fleets (``group_sizes``): levels are stored in the group-aligned
+    layout of :func:`_group_layout` and every lane carries its *routing id*
+    explicitly — the kernel's dispatcher compares demand against the routed
+    id, not the storage position — so group padding never shifts the demand
+    split and gathered outputs compact back to level order via ``sel``.
     """
     from repro.kernels.provision_scan import provision_scan_grid
 
     S, B, T = predb.shape
     W = windows.shape[0]
     size = mesh.shape[axis]
-    n_padded = -(-n_levels // size) * size
-    per_shard = n_padded // size
+    route_np, sel_np, n_layout = _group_layout(n_levels, group_sizes, size)
+    per_shard = n_layout // size
+    route = jnp.asarray(route_np)
+    sel = jnp.asarray(sel_np)
 
     def pad_lv(v, fill):
+        # scatter a real (n_levels,) row into the storage layout; pad lanes
+        # take ``fill`` (they are masked out of every output anyway)
         v = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n_levels,))
-        return jnp.pad(v, (0, n_padded - n_levels), constant_values=fill)
+        return jnp.full((n_layout,), fill, jnp.float32).at[sel].set(v)
 
-    b = pad_lv(delta, 1.0)          # padded levels are masked out; Δ irrelevant
+    b_real = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n_levels,))
+    b = pad_lv(delta, 1.0)          # padded lanes are masked out; Δ irrelevant
     wf = windows.astype(jnp.float32)
     if policy in RANDOMIZED:
-        # draw at n_levels (NOT n_padded) so the (trace, key) -> schedule
-        # contract holds regardless of mesh size, then pad the table; the
-        # same per-trace draws serve every window (common random numbers)
+        # draw at n_levels (NOT n_layout) so the (trace, key) -> schedule
+        # contract holds regardless of mesh size or group padding, then
+        # scatter the table into the layout; the same per-trace draws serve
+        # every window (common random numbers)
         u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)  # (B, T, N)
-        thresholds = jax.vmap(lambda w: jax.vmap(
-            lambda u0i, ui: _waits_from_uniforms(policy, u0i, ui, w, b[:n_levels])
+        waits = jax.vmap(lambda w: jax.vmap(
+            lambda u0i, ui: _waits_from_uniforms(policy, u0i, ui, w, b_real)
         )(u0, u))(wf)                                        # (W, B, T, N)
-        thresholds = jnp.pad(
-            thresholds, ((0, 0), (0, 0), (0, 0), (0, n_padded - n_levels))
-        ).reshape(W * B, T, n_padded)
-    elif policy == "delayedoff":
-        thresholds = jnp.broadcast_to(b, (W, n_padded))[:, None, :]  # timer Δ
+        thresholds = (
+            jnp.zeros((W, B, T, n_layout), jnp.float32)
+            .at[..., sel].set(waits)
+            .reshape(W * B, T, n_layout)
+        )
+    elif policy == "AQ-rand":
+        # window-free randomized waits: one (T, N) table per trace serves
+        # the whole sweep (the AQ transform pins α = 0)
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)
+        waits = jax.vmap(
+            lambda u0i, ui: _waits_from_uniforms(policy, u0i, ui, 0, b_real)
+        )(u0, u)                                             # (B, T, N)
+        thresholds = (
+            jnp.zeros((B, T, n_layout), jnp.float32).at[..., sel].set(waits)
+        )
+    elif policy in ("delayedoff", "AQ-det"):
+        thresholds = jnp.broadcast_to(b, (W, n_layout))[:, None, :]  # timer Δ_l
     else:                                                    # A1 per window
         thresholds = jnp.maximum(0.0, b[None, :] - wf[:, None] - 1.0)[:, None, :]
-    if policy == "delayedoff":
-        horizon_wl = jnp.zeros((W, n_padded), jnp.float32)   # no peek
+    if policy in NO_PEEK:
+        horizon_wl = jnp.zeros((W, n_layout), jnp.float32)   # no peek
     else:
         horizon_wl = jnp.minimum(wf[:, None] + 1.0, b[None, :])
     P_pad = pad_lv(P_lv, 0.0)
@@ -441,6 +532,8 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
     cell_pred = (s_ix * B + b_ix).reshape(-1).astype(jnp.int32)
     if policy in RANDOMIZED:
         cell_thr = (w_ix * B + b_ix).reshape(-1).astype(jnp.int32)
+    elif policy == "AQ-rand":
+        cell_thr = b_ix.reshape(-1).astype(jnp.int32)        # per-trace tables
     else:
         cell_thr = w_ix.reshape(-1).astype(jnp.int32)
     cell_hor = w_ix.reshape(-1).astype(jnp.int32)
@@ -448,32 +541,28 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
     pred_rows = predb.reshape(S * B, T)
 
     def local(a_rows, p_rows, ct, cp, cthr, chor, cw, thr_l, hor_l, b_l,
-              Pp, bon, boff):
-        i = jax.lax.axis_index(axis)
-        base = i * per_shard
-        levels = base + jnp.arange(per_shard)
+              Pp, bon, boff, route_l):
         if use_pallas:
             ons = provision_scan_grid(
                 a_rows, p_rows, thr_l, ct, cp, cthr, chor,
-                delta=max_h, horizon=h_unroll, base_level=base,
+                delta=max_h, horizon=h_unroll, routes=route_l,
                 level_horizon=hor_l,
             )                                          # (G, T, per_shard)
         else:
             def per_cell(bi, pi, ti, w):
-                waits = thr_l[ti] if policy in RANDOMIZED else None
+                waits = thr_l[ti] if policy in KEYED else None
                 return _on_matrix_scan(
-                    a_rows[bi], p_rows[pi], levels, delta=b_l, max_h=max_h,
+                    a_rows[bi], p_rows[pi], route_l, delta=b_l, max_h=max_h,
                     window=w, policy=policy, waits=waits,
                 )
             ons = jax.vmap(per_cell)(ct, cp, cthr, cw)
-        # phantom padded levels (ids >= n_levels) turn on whenever demand
-        # exceeds the fleet cap; mask them so x(t) matches the unsharded
-        # engine regardless of mesh size
-        ons = ons & (levels < n_levels)[None, None, :]
+        # pad lanes carry ROUTE_SENTINEL and can never turn on; the mask
+        # keeps x(t) robust to any lane whose routed id fell off the fleet
+        ons = ons & (route_l < n_levels)[None, None, :]
         x = jax.lax.psum(ons.sum(axis=-1).astype(jnp.int32), axis)
         ons = ons.reshape(S, W, B, T, per_shard)
         a_swb = jnp.broadcast_to(a_rows[None, None], (S, W, B, T))
-        terms = _cost_terms(a_swb, ons, Pp, bon, boff, levels=levels)
+        terms = _cost_terms(a_swb, ons, Pp, bon, boff, levels=route_l)
         terms = {
             k: jax.lax.all_gather(v, axis, axis=3, tiled=True)
             for k, v in terms.items()
@@ -486,14 +575,17 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
         local,
         mesh=mesh,
         in_specs=(P(), P()) + cell_spec
-        + (P(None, None, axis), P(None, axis), P(axis), P(axis), P(axis), P(axis)),
+        + (P(None, None, axis), P(None, axis), P(axis), P(axis), P(axis),
+           P(axis), P(axis)),
         out_specs={"x": P(), "energy": P(), "on_cost": P(), "off_cost": P()},
         check_rep=False,    # no replication rule for pallas_call yet
     )
     out = fn(ab, pred_rows, cell_trace, cell_pred, cell_thr, cell_hor, cell_w,
-             thresholds, horizon_wl, b, P_pad, bon_pad, boff_pad)
+             thresholds, horizon_wl, b, P_pad, bon_pad, boff_pad, route)
+    # compact the gathered storage layout back to level order (a no-op
+    # slice for ungrouped fleets, where sel is contiguous)
     return {
-        k: (v if k == "x" else v[..., :n_levels]) for k, v in out.items()
+        k: (v if k == "x" else v[..., sel]) for k, v in out.items()
     }
 
 

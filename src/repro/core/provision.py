@@ -5,6 +5,9 @@ The spec is three pytree-registered frozen dataclasses plus options:
   * :class:`~repro.core.costs.CostModel` — ``P``/``beta_on``/``beta_off`` as
     scalars or ``(n_levels,)`` arrays (heterogeneous fleets); the critical
     interval Δ is always *derived* per level (paper eq. 12), never passed;
+    typed fleets come from ``CostModel.from_groups(ServerGroup(...), ...)``
+    — d server types in routing-priority order, with ``group_cost`` on the
+    result breaking every schedule's spend down per type;
   * :class:`Workload` — demand ``(T,)`` or ``(B, T)``, an optional
     ``predicted`` trace, or an optional :class:`PredictionNoise` model that
     synthesizes one (paper Sec. V-C);
@@ -122,8 +125,10 @@ class PolicySpec:
     number of future slots the peek sees (α = (window+1)/Δ per level).
     ``windows``: optional (W,) sweep axis — evaluates every window in one
     program and puts a leading W axis on the result; overrides ``window``.
-    ``key``: explicit PRNG key, required for the randomized A2/A3 (split per
-    trace for batched demand).
+    ``key``: explicit PRNG key, required for the randomized A2/A3 and the
+    typed-fleet AQ-rand (split per trace for batched demand).  The
+    Albers–Quedenfeld pair ``AQ-det``/``AQ-rand`` never peeks, so both
+    ignore ``window``/``windows`` (the sweep axis broadcasts).
     """
 
     name: str = "A1"
@@ -135,7 +140,7 @@ class PolicySpec:
         """Raise ValueError for unknown policy names or a missing key on the
         randomized policies; returns self (chainable)."""
         _engine._check_policy(self.name)
-        if self.name in _engine.RANDOMIZED:
+        if self.name in _engine.KEYED:
             _engine._require_key(self.name, self.key)
         return self
 
@@ -182,7 +187,10 @@ class ProvisionResult:
     ``x``: powered-on servers per slot, (..., T) int32.  ``cost`` =
     ``energy`` + ``toggle_cost`` (paper eq. 5, forced x(T)=a(T) boundary).
     ``level_cost``: (..., N) per-level totals — the heterogeneous-fleet
-    breakdown (which server types the money went to).
+    breakdown (which server types the money went to).  ``group_cost``:
+    (..., d) per-type totals for typed fleets (``CostModel.from_groups``,
+    one column per server type in routing-priority order); None for
+    ungrouped models.
     """
 
     x: jax.Array
@@ -190,11 +198,13 @@ class ProvisionResult:
     energy: jax.Array
     toggle_cost: jax.Array
     level_cost: jax.Array
+    group_cost: jax.Array | None = None
 
 
 jax.tree_util.register_dataclass(
     ProvisionResult,
-    data_fields=["x", "cost", "energy", "toggle_cost", "level_cost"],
+    data_fields=["x", "cost", "energy", "toggle_cost", "level_cost",
+                 "group_cost"],
     meta_fields=[],
 )
 
@@ -235,6 +245,7 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
             )
         predb = jnp.expand_dims(pred, -2) if squeeze_b else pred
 
+    spec.costs.validate_groups()
     n_levels = spec.n_levels
     if n_levels is None:
         n_levels = spec.costs.n_levels
@@ -264,7 +275,7 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
     )
 
     keys = None
-    if pol.name in _engine.RANDOMIZED:
+    if pol.name in _engine.KEYED:
         keys = (
             pol.key[None] if squeeze_b else jax.random.split(pol.key, ab.shape[0])
         )
@@ -278,6 +289,7 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
             spec.mesh, spec.mesh_axis, ab, predb3, windows, delta_lv, P_lv,
             bon_lv, boff_lv, n_levels=n_levels, max_h=max_h,
             policy=pol.name, keys=keys, use_pallas=spec.use_pallas,
+            group_sizes=spec.costs.group_sizes,
         )
 
         def _squeeze(o):
@@ -313,4 +325,8 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
         energy=out["energy"].sum(axis=-1),
         toggle_cost=(out["on_cost"] + out["off_cost"]).sum(axis=-1),
         level_cost=level_cost,
+        group_cost=(
+            None if spec.costs.group_sizes is None
+            else spec.costs.group_reduce(level_cost)
+        ),
     )

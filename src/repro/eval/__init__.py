@@ -5,7 +5,16 @@ scenario × noise-std × window cell against the offline optimum, checked
 against the paper's bounds, as warmed batched device programs.  The report
 serializes to ``BENCH_provision.json`` (``benchmarks/cr_eval.py``).
 """
-from .harness import EvalGrid, evaluate
-from .report import SCHEMA, CellResult, EvalReport
+from .harness import TYPED_POLICIES, EvalGrid, evaluate
+from .report import CR_QUANTILES, SCHEMA, SCHEMA_V1, CellResult, EvalReport
 
-__all__ = ["SCHEMA", "CellResult", "EvalGrid", "EvalReport", "evaluate"]
+__all__ = [
+    "CR_QUANTILES",
+    "SCHEMA",
+    "SCHEMA_V1",
+    "TYPED_POLICIES",
+    "CellResult",
+    "EvalGrid",
+    "EvalReport",
+    "evaluate",
+]

@@ -6,6 +6,15 @@ checks it against the paper's worst-case bounds â€” A1 â‰¤ 2âˆ’Î±, A2 â‰¤ (eâˆ’Î
 and A3 â‰¤ e/(eâˆ’1+Î±) *in expectation* (Theorems 2â€“4), delayed-off â‰¤ 2 â€” within
 a statistical tolerance.
 
+``EvalGrid.typed_groups`` adds a typed-fleet block to the same report: per
+scenario, each ``typed_policies`` entry (the Albersâ€“Quedenfeld ``AQ-det``/
+``AQ-rand``) runs on the d-type fleet ``CostModel.from_groups(*groups)``
+and is checked against the aggregate 2d (deterministic) or dÂ·e/(eâˆ’1)
+(randomized) guarantee, with per-server-type CR columns verified against
+the per-type ski-rental bounds (2 and e/(eâˆ’1) â€” the level decomposition
+achieves the per-type bound, which is strictly stronger than the
+aggregate).
+
 The whole grid runs as warmed batched device programs, not a Python loop per
 cell: one ``provision(spec)`` call per (policy, scenario) covers the full
 ``(S, W, B)`` block via the ``PredictionNoise.std_frac`` sweep axis and
@@ -21,6 +30,7 @@ The result serializes to ``BENCH_provision.json`` via
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 
 import jax
@@ -33,12 +43,13 @@ from repro.core import (
     PolicySpec,
     PredictionNoise,
     ProvisionSpec,
+    ServerGroup,
     Workload,
     provision,
     theoretical_ratio,
 )
 from repro.core.jax_provision import (
-    RANDOMIZED,
+    KEYED,
     _run,
     _run_noise_sweep,
     _sharded_grid,
@@ -46,7 +57,10 @@ from repro.core.jax_provision import (
 from repro.core.traces import WEEK_SLOTS
 from repro.scenarios import DEFAULT_SCENARIOS, Scenario
 
-from .report import CellResult, EvalReport
+from .report import CR_QUANTILES, CellResult, EvalReport
+
+#: typed-fleet policies the harness knows bounds for (Albersâ€“Quedenfeld)
+TYPED_POLICIES = ("AQ-det", "AQ-rand")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +79,13 @@ class EvalGrid:
     against the lax.scan programs, so the report's cells are identical
     either way â€” this knob exists to run the eval grid *as* a fleet-path
     regression gate.  ``use_pallas=False`` keeps the sharded lax.scan body.
+
+    ``typed_groups``: optional :class:`~repro.core.ServerGroup` tuple â€” a
+    d-type fleet evaluated (per scenario, no noise/window axes: the AQ
+    policies never peek) as extra cells with per-type CR columns, one cell
+    per ``typed_policies`` entry per scenario.  The typed fleet rides
+    ``mesh``/``use_pallas`` too, exercising the group-aligned kernel
+    layout.
     """
 
     policies: tuple[str, ...] = ("A1", "A2", "A3")
@@ -84,13 +105,28 @@ class EvalGrid:
     mesh: "jax.sharding.Mesh | None" = None
     mesh_axis: str = "data"
     use_pallas: bool = True
+    typed_groups: tuple[ServerGroup, ...] | None = None
+    typed_policies: tuple[str, ...] = TYPED_POLICIES
 
     def validate(self) -> "EvalGrid":
         if self.costs.is_heterogeneous:
             raise ValueError(
                 "EvalGrid needs a homogeneous CostModel: competitive-ratio "
-                "bounds are per-Î”, and a per-level model has no single Î±"
+                "bounds are per-Î”, and a per-level model has no single Î± "
+                "(typed fleets go through typed_groups=, which carries the "
+                "per-type structure the bounds need)"
             )
+        if self.typed_groups is not None:
+            if not self.typed_groups:
+                raise ValueError("typed_groups needs at least one ServerGroup")
+            for g in self.typed_groups:
+                g.validate()
+            unknown = [p for p in self.typed_policies if p not in TYPED_POLICIES]
+            if unknown or not self.typed_policies:
+                raise ValueError(
+                    f"typed_policies must be drawn from {TYPED_POLICIES}, "
+                    f"got {self.typed_policies}"
+                )
         if not self.policies or not self.scenarios:
             raise ValueError("EvalGrid needs at least one policy and scenario")
         if any(w < 0 for w in self.windows) or not self.windows:
@@ -135,7 +171,25 @@ def _bound(policy: str, alpha: float) -> float | None:
         return 2.0              # break-even timer Î”, classic ski-rental bound
     if policy in ("A1", "A2", "A3"):
         return theoretical_ratio(policy, alpha)
+    if policy == "AQ-det":
+        return 2.0              # per-type break-even timer (d = 1 view)
+    if policy == "AQ-rand":
+        return math.e / (math.e - 1.0)
     return None
+
+
+def _typed_bounds(policy: str, d: int) -> tuple[float, float]:
+    """(aggregate, per-type) competitive-ratio bounds on a d-type fleet.
+
+    The Albersâ€“Quedenfeld guarantees: 2d for the deterministic algorithm,
+    dÂ·e/(eâˆ’1) for the randomized one.  The per-type column is the plain
+    ski-rental bound (2 / e/(eâˆ’1)) â€” the per-level decomposition achieves
+    it type by type, which implies the aggregate bound with room to spare.
+    """
+    per_type = _bound(policy, 0.0)
+    if per_type is None or policy not in TYPED_POLICIES:
+        raise ValueError(f"no typed bound for policy {policy!r}")
+    return d * per_type, per_type
 
 
 def _scenario_labels(scenarios: tuple[Scenario, ...]) -> list[str]:
@@ -149,6 +203,93 @@ def _scenario_labels(scenarios: tuple[Scenario, ...]) -> list[str]:
     return labels
 
 
+def _evaluate_typed(
+    grid: EvalGrid, labels: list[str], demands: list, base_statics: tuple
+) -> tuple[list[CellResult], int]:
+    """Typed-fleet cells for every (typed policy, scenario) pair.
+
+    One ``provision`` per pair plus one typed offline baseline per scenario
+    â€” no noise/window axes (the AQ policies never peek).  Returns the cells
+    and the number of extra compiled programs the block is expected to add
+    (``base_statics`` is the untyped block's (n_levels, max_h) static key:
+    the typed offline baseline reuses its program when the keys collide).
+    """
+    if grid.typed_groups is None:
+        return [], 0
+    costs = CostModel.from_groups(*grid.typed_groups)
+    d = costs.n_groups
+    expected = len(set(grid.typed_policies))
+    if (costs.n_levels, costs.delta_slots()) != base_statics:
+        expected += 1                                   # the typed offline
+    cells: list[CellResult] = []
+    for label, demand_np in zip(labels, demands):
+        # typed fleets pin their capacity; cap demand at it (same semantic
+        # as make_workload(clip_to=...)) so every scenario fits the fleet
+        demand = jnp.minimum(
+            jnp.asarray(demand_np, jnp.int32), costs.n_levels
+        )
+        opt_group = provision(ProvisionSpec(
+            costs=costs,
+            workload=Workload(demand=demand),
+            policy=PolicySpec("offline"),
+        )).group_cost                                   # (B, d)
+        opt_group = np.asarray(jax.block_until_ready(opt_group), np.float64)
+        opt = opt_group.sum(axis=-1)
+        for pi, policy in enumerate(grid.typed_policies):
+            cost_group = provision(ProvisionSpec(
+                costs=costs,
+                workload=Workload(demand=demand),
+                policy=PolicySpec(
+                    policy,
+                    key=(
+                        jax.random.fold_in(jax.random.key(grid.seed + 2), pi)
+                        if policy in KEYED
+                        else None
+                    ),
+                ),
+                mesh=grid.mesh,
+                mesh_axis=grid.mesh_axis,
+                use_pallas=grid.use_pallas,
+            )).group_cost                               # (B, d)
+            cost_group = np.asarray(jax.block_until_ready(cost_group), np.float64)
+            cost = cost_group.sum(axis=-1)
+            cr = cost / opt
+            bound, per_type_bound = _typed_bounds(policy, d)
+            # a type the offline optimum never powers is never powered
+            # online either (same dispatcher condition), so 0/0 cells are
+            # vacuously ratio 1
+            group_cr = np.where(
+                opt_group > 0,
+                cost_group / np.where(opt_group > 0, opt_group, 1.0),
+                1.0,
+            ).mean(axis=0)                              # (d,)
+            mean_cr = float(cr.mean())
+            quantiles = [float(q) for q in np.quantile(cr, CR_QUANTILES)]
+            cells.append(CellResult(
+                policy=policy,
+                scenario=label,
+                noise_std=0.0,
+                window=0,
+                alpha=0.0,                              # no peek
+                bound=bound,
+                mean_cr=mean_cr,
+                p95_cr=float(np.percentile(cr, 95)),
+                max_cr=float(cr.max()),
+                mean_cost=float(cost.mean()),
+                mean_opt_cost=float(opt.mean()),
+                bound_ok=mean_cr <= bound + grid.tol,
+                p50_cr=quantiles[CR_QUANTILES.index(0.5)],
+                cr_quantiles=quantiles,
+                group_names=list(costs.group_names),
+                group_mean_cr=[float(v) for v in group_cr],
+                group_bound=[per_type_bound] * d,
+                group_bound_ok=[
+                    bool(v <= per_type_bound + grid.tol) for v in group_cr
+                ],
+            ))
+    return cells, expected
+
+
 def evaluate(grid: EvalGrid) -> EvalReport:
     """Run the full grid and return the scored :class:`EvalReport`.
 
@@ -156,8 +297,9 @@ def evaluate(grid: EvalGrid) -> EvalReport:
     axes live inside the program â€” and one per scenario for the offline
     baseline.  Because every scenario shares the fleet size and trace
     shapes, the jit cache holds at most ``len(set(policies)) + 1`` entries
-    for the whole run (reported as ``expected_compiles`` and asserted by
-    ``benchmarks/cr_eval.py --smoke``).  With ``grid.mesh`` set the policy
+    for the whole run â€” plus one per typed policy and one typed offline
+    when ``typed_groups`` is set (reported as ``expected_compiles`` and
+    asserted by ``benchmarks/cr_eval.py --smoke``).  With ``grid.mesh`` set the policy
     programs run through the sharded Pallas fleet path instead
     (``_sharded_grid``, counted by the same cache watcher); the cells are
     bit-exact either way.
@@ -198,7 +340,7 @@ def evaluate(grid: EvalGrid) -> EvalReport:
                     windows=windows,
                     key=(
                         jax.random.fold_in(jax.random.key(grid.seed), pi)
-                        if policy in RANDOMIZED
+                        if policy in KEYED
                         else None
                     ),
                 ),
@@ -214,6 +356,8 @@ def evaluate(grid: EvalGrid) -> EvalReport:
                     alpha = min(1.0, (window + 1) / delta)
                     bound = _bound(policy, alpha)
                     mean_cr = float(cr[s, w].mean())
+                    quantiles = [float(q) for q in
+                                 np.quantile(cr[s, w], CR_QUANTILES)]
                     cells.append(CellResult(
                         policy=policy,
                         scenario=label,
@@ -231,7 +375,14 @@ def evaluate(grid: EvalGrid) -> EvalReport:
                             or mean_cr
                             <= bound + grid.tol + grid.noise_slack * float(std)
                         ),
+                        p50_cr=quantiles[CR_QUANTILES.index(0.5)],
+                        cr_quantiles=quantiles,
                     ))
+
+    typed_cells, typed_compiles = _evaluate_typed(
+        grid, labels, demands, (n_levels, grid.costs.delta_slots())
+    )
+    cells.extend(typed_cells)
 
     entries_after = _engine_cache_size()
     entries_added = -1 if entries_before < 0 else entries_after - entries_before
@@ -251,10 +402,19 @@ def evaluate(grid: EvalGrid) -> EvalReport:
             "noise_slack": grid.noise_slack,
             "mesh": None if grid.mesh is None else dict(grid.mesh.shape),
             "use_pallas": grid.use_pallas,
+            "cr_quantiles": list(CR_QUANTILES),
+            "typed_groups": (
+                None if grid.typed_groups is None
+                else [dataclasses.asdict(g) for g in
+                      CostModel.from_groups(*grid.typed_groups).groups]
+            ),
+            "typed_policies": (
+                None if grid.typed_groups is None else list(grid.typed_policies)
+            ),
         },
         cells=cells,
         backend=jax.default_backend(),
         jit_entries_added=entries_added,
-        expected_compiles=len(set(grid.policies)) + 1,
+        expected_compiles=len(set(grid.policies)) + 1 + typed_compiles,
         elapsed_s=time.perf_counter() - t0,
     )

@@ -7,6 +7,13 @@ without JAX: every (policy, scenario, noise_std, window) grid cell carries
 its empirical competitive-ratio statistics against the offline optimum and
 the paper-bound verdict.  ``schema`` is versioned; bump it when a field
 changes meaning, not when fields are appended.
+
+v2 adds (all backward-compatible, defaulted on v1 loads): the per-cell CR
+distribution (``p50_cr`` plus ``cr_quantiles``, the ratio values at the
+fixed :data:`CR_QUANTILES` probabilities) and the typed-fleet columns
+(``group_names``/``group_mean_cr``/``group_bound``/``group_bound_ok`` —
+per-server-type CR statistics and verdicts, None on untyped cells).
+:meth:`EvalReport.load` still reads v1 artifacts.
 """
 from __future__ import annotations
 
@@ -14,7 +21,11 @@ import dataclasses
 import json
 import pathlib
 
-SCHEMA = "repro.eval/v1"
+SCHEMA = "repro.eval/v2"
+SCHEMA_V1 = "repro.eval/v1"
+
+#: the fixed probabilities ``CellResult.cr_quantiles`` reports CR values at
+CR_QUANTILES = (0.05, 0.25, 0.5, 0.75, 0.95)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +40,15 @@ class CellResult:
     for sampling error and prediction noise) — an *expectation* check: the randomized
     A2/A3 guarantee their ratio in expectation only, so the mean (not the
     max) is what the paper promises.
+
+    ``p50_cr``/``cr_quantiles``: the per-trace CR distribution — the median
+    plus the values at the fixed :data:`CR_QUANTILES` probabilities (None
+    on cells loaded from v1 artifacts).  Typed-fleet cells additionally
+    carry per-server-type columns: ``group_names`` (routing-priority
+    order), ``group_mean_cr`` (mean of per-type cost over per-type offline
+    cost), ``group_bound`` (the per-type ski-rental bound: 2 for AQ-det,
+    e/(e−1) for AQ-rand) and ``group_bound_ok`` verdicts; the cell-level
+    ``bound`` is the aggregate Albers–Quedenfeld guarantee (2d / d·e/(e−1)).
     """
 
     policy: str
@@ -43,6 +63,12 @@ class CellResult:
     mean_cost: float
     mean_opt_cost: float
     bound_ok: bool
+    p50_cr: float | None = None
+    cr_quantiles: list[float] | None = None
+    group_names: list[str] | None = None
+    group_mean_cr: list[float] | None = None
+    group_bound: list[float] | None = None
+    group_bound_ok: list[bool] | None = None
 
 
 @dataclasses.dataclass
@@ -59,11 +85,19 @@ class EvalReport:
 
     @property
     def bounds_ok(self) -> bool:
-        """True iff every cell's empirical CR respects its paper bound."""
-        return all(c.bound_ok for c in self.cells)
+        """True iff every cell's empirical CR respects its paper bound —
+        including, on typed cells, every per-server-type verdict."""
+        return all(
+            c.bound_ok and (c.group_bound_ok is None or all(c.group_bound_ok))
+            for c in self.cells
+        )
 
     def violations(self) -> list[CellResult]:
-        return [c for c in self.cells if not c.bound_ok]
+        return [
+            c for c in self.cells
+            if not c.bound_ok
+            or (c.group_bound_ok is not None and not all(c.group_bound_ok))
+        ]
 
     def threshold(self, c: CellResult) -> float | None:
         """The value ``bound_ok`` compared ``mean_cr`` against: the paper
@@ -105,9 +139,12 @@ class EvalReport:
 
     @classmethod
     def from_dict(cls, d: dict) -> "EvalReport":
-        if d.get("schema") != SCHEMA:
+        # v1 artifacts load as-is: the v2 fields are all defaulted, so a v1
+        # cell dict simply leaves them None (back-compat contract)
+        if d.get("schema") not in (SCHEMA, SCHEMA_V1):
             raise ValueError(
-                f"report schema {d.get('schema')!r} != expected {SCHEMA!r}"
+                f"report schema {d.get('schema')!r} != expected {SCHEMA!r} "
+                f"(or the readable {SCHEMA_V1!r})"
             )
         return cls(
             grid=d["grid"],
@@ -125,12 +162,20 @@ class EvalReport:
 
     def summary_lines(self) -> list[str]:
         """Human-readable per-cell table (policy-major, CSV-ish)."""
-        lines = ["policy,scenario,noise,window,alpha,mean_cr,p95_cr,bound,ok"]
+        lines = ["policy,scenario,noise,window,alpha,mean_cr,p50_cr,p95_cr,bound,ok"]
         for c in self.cells:
             b = "-" if c.bound is None else f"{c.bound:.4f}"
-            lines.append(
+            p50 = "-" if c.p50_cr is None else f"{c.p50_cr:.4f}"
+            line = (
                 f"{c.policy},{c.scenario},{c.noise_std:g},{c.window},"
-                f"{c.alpha:.2f},{c.mean_cr:.4f},{c.p95_cr:.4f},{b},"
+                f"{c.alpha:.2f},{c.mean_cr:.4f},{p50},{c.p95_cr:.4f},{b},"
                 f"{'ok' if c.bound_ok else 'VIOLATED'}"
             )
+            if c.group_mean_cr is not None:
+                per_type = " ".join(
+                    f"{n}={v:.3f}{'' if ok else '!'}" for n, v, ok in
+                    zip(c.group_names, c.group_mean_cr, c.group_bound_ok)
+                )
+                line += f",types[{per_type}]"
+            lines.append(line)
         return lines

@@ -21,11 +21,23 @@ tables are blocked into VMEM via scalar-prefetch-driven index maps, so a
 program only ever sees its own cell's rows — no HBM traffic beyond those
 blocks and the output.
 
+Each lane additionally carries its *routing id* in a blocked ``(1, BN)``
+``routes`` row: the dispatcher compares demand against the routed id, not
+the lane's storage position.  For a plain fleet the ids are just
+``base_level + arange(N)`` (the default), but typed fleets
+(``CostModel.from_groups``) store their levels group-aligned — each server
+type padded out to its own block boundary so a threshold/horizon block
+never straddles two types — and then storage position ≠ level id; the
+routes row is what keeps the greedy demand split exact under that packing.
+Pad lanes get a sentinel id larger than any demand, so they can never turn
+on.
+
 Thresholds are constant rows for the deterministic policies (A1's
-``max(0, Δ_l−w−1)`` per window, DELAYEDOFF's ``Δ_l``) or ``(T, N)`` tables
-of sampled waits for A2/A3 (entry [t, l] is consumed iff level l becomes
-newly idle in slot t, matching the engine's PRNG contract; the table for
-cell (s, w, b) depends on (w, b) only — noise sweeps share wait draws).
+``max(0, Δ_l−w−1)`` per window, DELAYEDOFF's and AQ-DET's ``Δ_l``) or
+``(T, N)`` tables of sampled waits for A2/A3/AQ-RAND (entry [t, l] is
+consumed iff level l becomes newly idle in slot t, matching the engine's
+PRNG contract; the table for cell (s, w, b) depends on (w, b) only — noise
+sweeps share wait draws — and for the window-free AQ-RAND on b alone).
 Heterogeneous fleets give each level its own Δ, hence its own threshold
 *and* its own peek reach: ``level_horizon`` rows are per-level floats
 masking the statically unrolled ``horizon`` peek to ``min(w+1, Δ_l)``
@@ -47,20 +59,23 @@ from ._compat import CompilerParams
 
 DEFAULT_BN = 128     # level-block width (lane dimension)
 
+#: routing id given to pad lanes: larger than any int32 demand value, so a
+#: padded lane's dispatcher compare is never true and it can never turn on
+PAD_ROUTE = 2**30
+
 
 def _grid_scan_kernel(
     cb_ref, cp_ref, ct_ref, ch_ref,   # scalar prefetch (SMEM): (G,) cell maps
-    base_ref,                         # scalar prefetch (SMEM): (1,) level offset
     a_ref,                            # scalar prefetch (SMEM): (B, T+max_h) demand
     p_ref,                            # scalar prefetch (SMEM): (R, T+max_h) predicted
     m_ref,                            # (1, 1 | T, BN) f32 wait thresholds (cell block)
     h_ref,                            # (1, BN) f32 per-level peek horizon (cell block)
+    r_ref,                            # (1, BN) int32 routing ids (level block)
     o_ref,                            # (1, T, BN) int32 on-matrix block
     *, T: int, bn: int, horizon: int, time_varying: bool,
 ):
     g = pl.program_id(0)
-    blk = pl.program_id(1)
-    levels = base_ref[0] + blk * bn + jax.lax.broadcasted_iota(jnp.int32, (1, bn), 1)
+    levels = r_ref[pl.ds(0, 1), :]    # routed level ids for this lane block
     b = cb_ref[g]                     # demand row for this cell
     p = cp_ref[g]                     # predicted row for this cell
     h_row = h_ref[pl.ds(0, 1), :]
@@ -103,16 +118,20 @@ def provision_scan_grid(
     delta: int,                 # static pad/peek bound: ceil(max per-level Delta)
     horizon: int,               # peek slots unrolled: min(max_w+1, delta), 0 = none
     base_level: jax.Array | int = 0,
+    routes: jax.Array | None = None,  # (N,) int32 routed level id per lane
     level_horizon: jax.Array | None = None,  # (H, N) per-level peek reach rows
     block_levels: int = DEFAULT_BN,
     interpret: bool | None = None,
 ) -> jax.Array:
     """(G, T, N) bool on-matrix: one (noise, window, trace) cell per row.
 
-    Cell ``g`` runs the slot scan for levels ``[base_level, base_level+N)``
-    with demand ``traces[cell_trace[g]]``, peek trace
-    ``predicted[cell_pred[g]]``, wait thresholds ``thresholds[cell_thr[g]]``
-    and per-level peek reach ``level_horizon[cell_hor[g]]``.
+    Cell ``g`` runs the slot scan with demand ``traces[cell_trace[g]]``,
+    peek trace ``predicted[cell_pred[g]]``, wait thresholds
+    ``thresholds[cell_thr[g]]`` and per-level peek reach
+    ``level_horizon[cell_hor[g]]``.  Lane ``j`` dispatches against level id
+    ``routes[j]`` — defaulting to the contiguous ``base_level + j`` — so a
+    group-aligned typed layout can interleave pad lanes freely; block
+    padding always uses the never-on :data:`PAD_ROUTE` sentinel.
     """
     traces = jnp.asarray(traces, jnp.int32)
     predicted = jnp.asarray(predicted, jnp.int32)
@@ -133,12 +152,15 @@ def provision_scan_grid(
         h2d = jnp.full((1, n), float(horizon), jnp.float32)
     else:
         h2d = jnp.asarray(level_horizon, jnp.float32)
+    if routes is None:
+        routes = jnp.asarray(base_level, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    r2d = jnp.asarray(routes, jnp.int32).reshape(1, n)
     if pad_n:
         m3d = jnp.pad(m3d, ((0, 0), (0, 0), (0, pad_n)))
         h2d = jnp.pad(h2d, ((0, 0), (0, pad_n)))
+        r2d = jnp.pad(r2d, ((0, 0), (0, pad_n)), constant_values=PAD_ROUTE)
     a_pad = jnp.pad(traces, ((0, 0), (0, max_h)))
     p_pad = jnp.pad(predicted, ((0, 0), (0, max_h)))
-    base = jnp.asarray(base_level, jnp.int32).reshape((1,))
     cells = tuple(jnp.asarray(c, jnp.int32) for c in
                   (cell_trace, cell_pred, cell_thr, cell_hor))
     if interpret is None:
@@ -149,13 +171,15 @@ def provision_scan_grid(
     )
     # index maps receive the scalar-prefetch refs: p[2]/p[3] are the
     # cell -> (threshold row, horizon row) maps, so each program's VMEM
-    # blocks are exactly its own cell's tables
+    # blocks are exactly its own cell's tables; the routes row is blocked
+    # by level block only (shared across cells)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,
+        num_scalar_prefetch=6,
         grid=(G, n_padded // bn),
         in_specs=[
             pl.BlockSpec((1, m3d.shape[1], bn), lambda g, j, *p: (p[2][g], 0, j)),
             pl.BlockSpec((1, bn), lambda g, j, *p: (p[3][g], j)),
+            pl.BlockSpec((1, bn), lambda g, j, *p: (0, j)),
         ],
         out_specs=pl.BlockSpec((1, T, bn), lambda g, j, *p: (g, 0, j)),
     )
@@ -167,7 +191,7 @@ def provision_scan_grid(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,
-    )(*cells, base, a_pad, p_pad, m3d, h2d)
+    )(*cells, a_pad, p_pad, m3d, h2d, r2d)
     return out[:, :, :n].astype(bool)
 
 

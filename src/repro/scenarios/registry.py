@@ -177,6 +177,7 @@ def make_workload(
     *,
     noise_std=None,
     noise_key=None,
+    clip_to: int | None = None,
 ):
     """A ready :class:`~repro.core.provision.Workload` for one scenario.
 
@@ -185,16 +186,24 @@ def make_workload(
     array to sweep prediction-error levels as a leading result axis (common
     random numbers: one normal draw per trace, scaled per level).
     ``noise_key``: PRNG key for the noise draws; defaults to
-    ``jax.random.key(scenario.seed)``.  A single trace (``n_traces=1``)
-    still yields a ``(1, n_slots)`` batch — index ``demand[0]`` if you want
-    the unbatched convention.
+    ``jax.random.key(scenario.seed)``.  ``clip_to``: cap demand at a fleet
+    capacity (typed fleets pin theirs via ``CostModel.n_levels`` — a
+    scenario's peak may exceed it, and provisioning requires
+    ``demand <= n_levels``).  A single trace (``n_traces=1``) still yields
+    a ``(1, n_slots)`` batch — index ``demand[0]`` if you want the
+    unbatched convention.
     """
     import jax
     import jax.numpy as jnp
 
     from repro.core.provision import PredictionNoise, Workload
 
-    demand = jnp.asarray(generate(scenario, n_traces, n_slots), jnp.int32)
+    raw = generate(scenario, n_traces, n_slots)
+    if clip_to is not None:
+        if clip_to < 1:
+            raise ValueError(f"clip_to={clip_to} must be >= 1")
+        raw = np.minimum(raw, clip_to)
+    demand = jnp.asarray(raw, jnp.int32)
     noise = None
     if noise_std is not None:
         if noise_key is None:

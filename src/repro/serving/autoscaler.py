@@ -218,6 +218,13 @@ class FleetProvisioner:
     windows sweeps ride along (one kernel program per (window, trace) cell,
     bit-exact against the unsharded engine).  Randomized policies need an
     explicit PRNG ``key``.
+
+    Typed fleets plug straight in: build ``costs`` with
+    ``CostModel.from_groups(ServerGroup(...), ...)`` — e.g. one group per
+    accelerator generation — and the fleet size defaults to the model's
+    pinned capacity, ``plan(...).group_cost`` breaks the spend down per
+    replica type, and the Albers–Quedenfeld ``AQ-det``/``AQ-rand`` policies
+    become available alongside the paper's A1/A2/A3.
     """
 
     def __init__(
@@ -225,7 +232,7 @@ class FleetProvisioner:
         costs: CostModel,
         policy="A1",
         window: int = 0,
-        max_replicas: int = 1024,
+        max_replicas: int | None = None,
         key=None,
         mesh=None,
         mesh_axis: str = "data",
@@ -242,6 +249,18 @@ class FleetProvisioner:
         else:
             self.policy = PolicySpec(name=policy, window=int(window), key=key)
         self.policy.validate()
+        costs.validate_groups()
+        pinned = costs.n_levels
+        if max_replicas is None:
+            # a level-pinned model (per-replica arrays or typed groups) IS
+            # the fleet size; scalar models fall back to a planning cap
+            max_replicas = 1024 if pinned is None else pinned
+        elif pinned is not None and int(max_replicas) != pinned:
+            raise ValueError(
+                f"max_replicas={max_replicas} conflicts with the cost "
+                f"model's pinned fleet size {pinned}; drop max_replicas "
+                "(it defaults to the pinned size)"
+            )
         self.max_replicas = int(max_replicas)
         self.mesh = mesh
         self.mesh_axis = mesh_axis

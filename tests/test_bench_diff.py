@@ -1,0 +1,99 @@
+"""bench_diff: the BENCH_provision.json cell-by-cell regression gate."""
+import dataclasses
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+from benchmarks.bench_diff import DEFAULT_TOL, cell_key, diff_reports, main
+from repro.eval import SCHEMA, EvalReport
+from repro.eval.report import CellResult
+
+
+def _cell(policy="A1", scenario="sinusoidal", noise_std=0.0, window=0,
+          mean_cr=1.1, bound_ok=True, **kw):
+    return CellResult(
+        policy=policy, scenario=scenario, noise_std=noise_std, window=window,
+        alpha=0.5, bound=1.5, mean_cr=mean_cr, p95_cr=mean_cr, max_cr=mean_cr,
+        mean_cost=10.0, mean_opt_cost=9.0, bound_ok=bound_ok, **kw,
+    )
+
+
+def _report(cells):
+    return EvalReport(grid={}, cells=cells, backend="cpu",
+                      jit_entries_added=0, expected_compiles=0, elapsed_s=0.0)
+
+
+def test_identical_reports_diff_clean():
+    r = _report([_cell(), _cell(policy="A3", window=2)])
+    d = diff_reports(r, r)
+    assert not d.regressed
+    assert d.n_common == 2 and not d.added and not d.removed
+
+
+def test_removed_cell_is_a_regression_added_is_not():
+    old = _report([_cell(), _cell(policy="A3")])
+    new = _report([_cell(), _cell(policy="AQ-det", scenario="replay")])
+    d = diff_reports(old, new)
+    assert d.regressed
+    assert d.removed == [cell_key(old.cells[1])]
+    assert d.added == [cell_key(new.cells[1])]
+    # the reverse direction only adds — clean
+    assert not diff_reports(_report([_cell()]), old).regressed
+
+
+def test_mean_cr_drift_over_tol_regresses():
+    old = _report([_cell(mean_cr=1.10)])
+    worse = _report([_cell(mean_cr=1.10 + 1e-3)])
+    better = _report([_cell(mean_cr=1.09)])
+    assert diff_reports(old, worse).regressed
+    assert diff_reports(old, worse, tol=1e-2).n_common == 1
+    assert not diff_reports(old, worse, tol=1e-2).regressed
+    d = diff_reports(old, better)
+    assert not d.regressed and len(d.improved) == 1
+    # drift within the default tolerance is noise, not a verdict
+    assert not diff_reports(
+        old, _report([_cell(mean_cr=1.10 + DEFAULT_TOL / 2)])).regressed
+
+
+def test_bound_verdict_flip_regresses_both_levels():
+    old = _report([_cell(bound_ok=True)])
+    assert diff_reports(old, _report([_cell(bound_ok=False)])).regressed
+    # per-type verdicts count too (aggregate still ok)
+    t_old = _report([_cell(group_bound_ok=[True, True])])
+    t_new = _report([_cell(group_bound_ok=[True, False])])
+    d = diff_reports(t_old, t_new)
+    assert d.regressed and len(d.flipped) == 1
+    back = diff_reports(t_new, t_old)
+    assert not back.regressed and len(back.unflipped) == 1
+
+
+def test_duplicate_cell_keys_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        diff_reports(_report([_cell(), _cell()]), _report([_cell()]))
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    old = _report([_cell(mean_cr=1.10)])
+    new = _report([_cell(mean_cr=1.20)])
+    p_old, p_new = tmp_path / "old.json", tmp_path / "new.json"
+    old.save(p_old)
+    new.save(p_new)
+    assert main([str(p_old), str(p_old)]) == 0
+    assert main([str(p_old), str(p_new)]) == 1
+    assert main([str(p_old), str(p_new), "--tol", "0.5"]) == 0
+    out = capsys.readouterr().out
+    assert "REGRESSION mean CR up" in out
+
+
+def test_checked_in_baseline_self_diffs_clean():
+    """The repo's own BENCH_provision.json must be a valid baseline (the CI
+    gate diffs a fresh smoke run against it)."""
+    path = pathlib.Path(__file__).parent.parent / "BENCH_provision.json"
+    report = EvalReport.load(path)
+    assert report.schema == SCHEMA
+    assert any(c.group_mean_cr is not None for c in report.cells), (
+        "checked-in benchmark lost its multi-type cells")
+    assert not diff_reports(report, report).regressed

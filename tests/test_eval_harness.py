@@ -231,3 +231,100 @@ def test_offline_and_delayedoff_cells_carry_bounds():
         if c.policy == "offline":
             assert c.mean_cr == pytest.approx(1.0)
         assert c.bound_ok
+
+
+# ---------------------------------------------------------------------------
+# Typed-fleet cells (EvalGrid.typed_groups) + v1 artifact back-compat
+# ---------------------------------------------------------------------------
+
+from repro.core import ServerGroup  # noqa: E402
+from repro.eval import SCHEMA_V1, TYPED_POLICIES  # noqa: E402
+
+TYPED_SMALL = dataclasses.replace(SMALL, typed_groups=(
+    ServerGroup("efficient", 24, P=1.0, beta_on=3.0, beta_off=3.0),
+    ServerGroup("legacy", 24, P=1.5, beta_on=4.5, beta_off=4.5),
+))
+
+
+@pytest.fixture(scope="module")
+def typed_report():
+    return evaluate(TYPED_SMALL)
+
+
+def test_typed_cells_cover_policies_by_scenario(typed_report):
+    typed = [c for c in typed_report.cells if c.group_mean_cr is not None]
+    keys = {(c.policy, c.scenario) for c in typed}
+    assert keys == {
+        (p, s) for p in TYPED_POLICIES
+        for s in typed_report.grid["scenario_labels"]
+    }
+    untyped = [c for c in typed_report.cells if c.group_mean_cr is None]
+    assert len(untyped) == 2 * 2 * 2 * 2           # the plain grid rides along
+    d = len(TYPED_SMALL.typed_groups)
+    for c in typed:
+        assert c.group_names == ["efficient", "legacy"]
+        assert len(c.group_mean_cr) == d
+        assert c.bound == pytest.approx(
+            d * {"AQ-det": 2.0, "AQ-rand": np.e / (np.e - 1)}[c.policy])
+        assert all(b == pytest.approx(c.bound / d) for b in c.group_bound)
+        assert c.noise_std == 0.0 and c.window == 0 and c.alpha == 0.0
+
+
+def test_typed_cells_respect_aq_bounds(typed_report):
+    assert typed_report.bounds_ok
+    for c in typed_report.cells:
+        if c.group_bound_ok is not None:
+            assert all(c.group_bound_ok)
+
+
+def test_typed_grid_metadata_and_round_trip(tmp_path, typed_report):
+    g = typed_report.grid
+    assert [t["name"] for t in g["typed_groups"]] == ["efficient", "legacy"]
+    assert g["typed_policies"] == list(TYPED_POLICIES)
+    p = typed_report.save(tmp_path / "typed.json")
+    loaded = EvalReport.load(p)
+    assert loaded.cells == typed_report.cells
+    assert loaded.bounds_ok
+
+
+def test_typed_group_violation_fails_the_report(typed_report):
+    """bounds_ok / violations() must consider the per-type verdicts, not
+    just the aggregate one."""
+    broken = dataclasses.replace(
+        typed_report.cells[-1], group_bound_ok=[True, False])
+    assert broken.group_mean_cr is not None        # it IS a typed cell
+    report = dataclasses.replace(
+        typed_report, cells=typed_report.cells[:-1] + [broken])
+    assert not report.bounds_ok
+    assert report.violations() == [broken]
+
+
+def test_v1_artifact_still_loads(tmp_path, report):
+    """A checked-in v1 report (no distribution/typed columns) must load:
+    the v2 fields come back defaulted, verdict logic unchanged."""
+    d = report.to_dict()
+    d["schema"] = SCHEMA_V1
+    v2_only = ("p50_cr", "cr_quantiles", "group_names", "group_mean_cr",
+               "group_bound", "group_bound_ok")
+    for c in d["cells"]:
+        for k in v2_only:
+            del c[k]
+    p = tmp_path / "v1.json"
+    p.write_text(json.dumps(d))
+    loaded = EvalReport.load(p)
+    assert loaded.schema == SCHEMA_V1
+    assert len(loaded.cells) == len(report.cells)
+    for got, want in zip(loaded.cells, report.cells):
+        assert got.p50_cr is None and got.cr_quantiles is None
+        assert got.group_mean_cr is None
+        assert got.mean_cr == want.mean_cr
+        assert got.bound_ok == want.bound_ok
+    assert loaded.bounds_ok == report.bounds_ok
+
+
+def test_typed_grid_validation():
+    with pytest.raises(ValueError, match="typed_policies"):
+        evaluate(dataclasses.replace(
+            TYPED_SMALL, typed_policies=("A1",)))
+    with pytest.raises(ValueError, match="ServerGroup"):
+        evaluate(dataclasses.replace(TYPED_SMALL, typed_groups=()))

@@ -609,3 +609,122 @@ def test_predicted_shape_must_match_demand():
         run(ab, predicted=ab.T, n_levels=5)       # same size, wrong shape
     with pytest.raises(ValueError, match="must match demand shape"):
         run(ab[0], predicted=ab[0][:-1], n_levels=5)
+
+
+# ---------------------------------------------------------------------------
+# Typed server groups: AQ policies + the group-aligned kernel layout
+# ---------------------------------------------------------------------------
+
+from repro.core import ServerGroup  # noqa: E402
+
+TYPED = CostModel.from_groups(
+    ServerGroup("efficient", 5, P=1.0, beta_on=2.0, beta_off=2.0),
+    ServerGroup("legacy", 4, P=1.5, beta_on=4.5, beta_off=4.5),
+)
+
+
+def _typed_trace(seed=11, n_slots=96):
+    rng = np.random.default_rng(seed)
+    return np.minimum(msr_like_trace(rng, mean_jobs=4.0, n_slots=n_slots),
+                      TYPED.n_levels)
+
+
+def test_aq_det_is_delayedoff_on_a_single_type():
+    """d = 1 AQ-det IS the paper's delayed-off: same break-even timer Δ, no
+    peek — the schedules must be bit-identical."""
+    a = np.random.default_rng(7).integers(0, 9, size=120)
+    got, want = run(a, policy="AQ-det"), run(a, policy="delayedoff")
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_array_equal(np.asarray(got.level_cost),
+                                  np.asarray(want.level_cost))
+
+
+@pytest.mark.parametrize("policy", ["A1", "A3", "offline", "delayedoff",
+                                    "AQ-det", "AQ-rand"])
+def test_single_group_typed_model_bit_exact_vs_untyped(policy):
+    """The d=1 regression gate: one ServerGroup carrying the untyped scalar
+    parameters must reproduce the untyped engine bit-exactly (same PRNG
+    stream included) on the lax.scan path."""
+    from repro.core.jax_provision import KEYED
+
+    a = np.random.default_rng(8).integers(0, 9, size=120)
+    n = int(a.max()) + 1
+    typed = CostModel.from_groups(
+        ServerGroup("std", n, P=1.0, beta_on=3.0, beta_off=3.0))
+    key = jax.random.key(5) if policy in KEYED else None
+    got = run(a, policy=policy, key=key, costs=typed, n_levels=n)
+    want = run(a, policy=policy, key=key, n_levels=n)
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_array_equal(np.asarray(got.level_cost),
+                                  np.asarray(want.level_cost))
+    # the typed result additionally carries the (single) group reduction
+    np.testing.assert_allclose(np.asarray(got.group_cost)[..., 0],
+                               np.asarray(got.cost), rtol=1e-6)
+    assert want.group_cost is None
+
+
+@pytest.mark.parametrize("policy", ["A1", "AQ-det", "AQ-rand"])
+def test_single_group_typed_model_bit_exact_on_fleet_path(policy):
+    """Same d=1 gate through the sharded Pallas fleet path (the group-
+    aligned routed kernel layout vs the contiguous one)."""
+    from repro.core.jax_provision import KEYED
+
+    a = np.random.default_rng(9).integers(0, 9, size=96)
+    n = int(a.max()) + 1
+    typed = CostModel.from_groups(
+        ServerGroup("std", n, P=1.0, beta_on=3.0, beta_off=3.0))
+    key = jax.random.key(6) if policy in KEYED else None
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    got = run(a, policy=policy, window=2, key=key, costs=typed, n_levels=n,
+              mesh=mesh)
+    want = run(a, policy=policy, window=2, key=key, n_levels=n, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(got.x), np.asarray(want.x))
+    np.testing.assert_array_equal(np.asarray(got.level_cost),
+                                  np.asarray(want.level_cost))
+
+
+@pytest.mark.parametrize("policy", ["A1", "AQ-det", "AQ-rand"])
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_multi_type_fleet_path_matches_unsharded(policy, use_pallas):
+    """Multi-type parity: the sharded fleet path (Pallas routed kernel and
+    the sharded lax.scan body) must reproduce the unsharded engine on a
+    genuinely heterogeneous d=2 fleet, group_cost included."""
+    from repro.core.jax_provision import KEYED
+
+    ab = np.stack([_typed_trace(s) for s in (11, 12)])
+    key = jax.random.key(3) if policy in KEYED else None
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    plain = run(ab, policy=policy, window=2, key=key, costs=TYPED,
+                n_levels=TYPED.n_levels)
+    fleet = run(ab, policy=policy, window=2, key=key, costs=TYPED,
+                n_levels=TYPED.n_levels, mesh=mesh, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(plain.x), np.asarray(fleet.x))
+    np.testing.assert_array_equal(np.asarray(plain.level_cost),
+                                  np.asarray(fleet.level_cost))
+    np.testing.assert_allclose(np.asarray(plain.group_cost),
+                               np.asarray(fleet.group_cost), rtol=1e-6)
+    # group_cost is the exact per-group reduction of level_cost
+    np.testing.assert_allclose(
+        np.asarray(plain.group_cost).sum(axis=-1), np.asarray(plain.cost),
+        rtol=1e-6)
+
+
+def test_aq_rand_respects_per_type_bound_in_expectation():
+    """AQ-rand's per-type guarantee: over PRNG replicas, each type's mean
+    cost stays within e/(e−1) of that type's offline share (plus sampling
+    slack) — the randomized full-span waits are doing their job."""
+    import math
+
+    a = _typed_trace(21, n_slots=288)
+    opt = run(a, policy="offline", costs=TYPED, n_levels=TYPED.n_levels)
+    opt_group = np.asarray(opt.group_cost, np.float64)
+    reps = [
+        np.asarray(run(a, policy="AQ-rand", key=jax.random.key(s),
+                       costs=TYPED, n_levels=TYPED.n_levels).group_cost,
+                   np.float64)
+        for s in range(12)
+    ]
+    mean_group = np.mean(reps, axis=0)
+    bound = math.e / (math.e - 1.0)
+    assert (mean_group <= opt_group * (bound + 0.15)).all(), (
+        f"per-type mean cost {mean_group} vs offline {opt_group}")

@@ -319,3 +319,144 @@ def test_unknown_policy_value_errors_name_valid_set():
         FleetProvisioner(PAPER_COSTS, policy="A7")
     with pytest.raises(ValueError, match="valid policies"):
         ReplicaAutoscaler(4, PAPER_COSTS, policy="nope")
+
+
+# ---------------------------------------------------------------------------
+# Typed server groups: CostModel.from_groups reduction laws
+# ---------------------------------------------------------------------------
+
+from repro.core import ServerGroup  # noqa: E402
+
+
+def _single_group(n):
+    return CostModel.from_groups(
+        ServerGroup("std", n, P=1.0, beta_on=3.0, beta_off=3.0))
+
+
+def check_typed_d1_reduces_to_untyped(a, policy, window, seed):
+    """One group with the untyped scalar parameters == the untyped engine,
+    bit-exact (schedule, per-level cost, PRNG stream)."""
+    from repro.core.jax_provision import KEYED
+
+    n = int(a.max()) + 1
+    key = jax.random.key(seed) if policy in KEYED else None
+    typed = provision(spec_for(a, _single_group(n), policy, window=window,
+                               key=key, n_levels=n))
+    untyped = provision(spec_for(a, PAPER_COSTS, policy, window=window,
+                                 key=key, n_levels=n))
+    np.testing.assert_array_equal(np.asarray(typed.x), np.asarray(untyped.x))
+    np.testing.assert_array_equal(np.asarray(typed.level_cost),
+                                  np.asarray(untyped.level_cost))
+
+
+def check_merging_identical_types_cost_invariant(a, sizes, window):
+    """Splitting one server type into several identically-parameterized
+    groups is pure relabeling: schedule and total cost are unchanged, and
+    the split group_cost columns sum to the merged one."""
+    n = sum(sizes)
+    a = np.minimum(a, n)
+    merged = CostModel.from_groups(
+        ServerGroup("all", n, P=1.0, beta_on=3.0, beta_off=3.0))
+    split = CostModel.from_groups(*(
+        ServerGroup(f"g{i}", s, P=1.0, beta_on=3.0, beta_off=3.0)
+        for i, s in enumerate(sizes)
+    ))
+    rm = provision(spec_for(a, merged, "A1", window=window, n_levels=n))
+    rs = provision(spec_for(a, split, "A1", window=window, n_levels=n))
+    np.testing.assert_array_equal(np.asarray(rm.x), np.asarray(rs.x))
+    np.testing.assert_array_equal(np.asarray(rm.level_cost),
+                                  np.asarray(rs.level_cost))
+    np.testing.assert_allclose(
+        np.asarray(rs.group_cost).sum(axis=-1),
+        np.asarray(rm.group_cost)[..., 0], rtol=1e-6)
+
+
+if given is not None:
+    typed_traces = st.lists(
+        st.integers(min_value=0, max_value=6), min_size=8, max_size=40
+    ).map(lambda xs: np.asarray(xs, np.int64))
+
+    @settings(max_examples=15, deadline=None)
+    @given(a=typed_traces,
+           policy=st.sampled_from(["A1", "A3", "offline", "delayedoff",
+                                   "AQ-det", "AQ-rand"]),
+           window=st.integers(min_value=0, max_value=4),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_typed_d1_reduces_to_untyped(a, policy, window, seed):
+        check_typed_d1_reduces_to_untyped(a, policy, window, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(a=typed_traces,
+           sizes=st.lists(st.integers(min_value=1, max_value=4),
+                          min_size=2, max_size=4),
+           window=st.integers(min_value=0, max_value=3))
+    def test_merging_identical_types_cost_invariant(a, sizes, window):
+        check_merging_identical_types_cost_invariant(a, tuple(sizes), window)
+
+
+def test_typed_reduction_fixed_examples():
+    """The typed reduction laws on fixed traces (runs without hypothesis)."""
+    rng = np.random.default_rng(31)
+    a = rng.integers(0, 7, size=40)
+    for policy in ("A1", "AQ-det", "AQ-rand"):
+        check_typed_d1_reduces_to_untyped(a, policy, 2, 99)
+    check_merging_identical_types_cost_invariant(a, (3, 2, 2), 1)
+
+
+def test_from_groups_orders_by_energy_and_validates():
+    eff = ServerGroup("eff", 2, P=1.0, beta_on=2.0, beta_off=2.0)
+    leg = ServerGroup("leg", 3, P=1.5, beta_on=4.5, beta_off=4.5)
+    cm = CostModel.from_groups(leg, eff)          # any order in...
+    assert cm.group_names == ("eff", "leg")       # ...ascending P out
+    assert cm.group_sizes == (2, 3)
+    assert cm.n_groups == 2 and cm.n_levels == 5
+    assert cm.group_offsets == (0, 2)
+    assert cm.groups == (eff, leg)                # reconstructs the inputs
+    np.testing.assert_allclose(np.asarray(cm.P), [1.0, 1.0, 1.5, 1.5, 1.5])
+    with pytest.raises(ValueError, match="duplicate group names"):
+        CostModel.from_groups(eff, dataclasses.replace(leg, name="eff"))
+    with pytest.raises(ValueError, match="n_servers"):
+        ServerGroup("empty", 0).validate()
+    with pytest.raises(ValueError, match="P"):
+        ServerGroup("free", 1, P=0.0).validate()
+
+
+def test_group_cost_sums_to_total():
+    from repro.core.jax_provision import KEYED
+
+    cm = CostModel.from_groups(
+        ServerGroup("eff", 4, P=1.0, beta_on=2.0, beta_off=2.0),
+        ServerGroup("leg", 3, P=1.5, beta_on=4.5, beta_off=4.5),
+    )
+    a = np.random.default_rng(32).integers(0, cm.n_levels + 1, size=60)
+    for policy in ("A1", "AQ-det", "AQ-rand"):
+        key = jax.random.key(1) if policy in KEYED else None
+        res = provision(spec_for(a, cm, policy, key=key,
+                                 n_levels=cm.n_levels))
+        gc = np.asarray(res.group_cost)
+        assert gc.shape[-1] == 2
+        np.testing.assert_allclose(gc.sum(axis=-1), np.asarray(res.cost),
+                                   rtol=1e-6)
+        # each column is exactly that group's slice of level_cost
+        lc = np.asarray(res.level_cost)
+        np.testing.assert_allclose(gc[..., 0], lc[..., :4].sum(axis=-1),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(gc[..., 1], lc[..., 4:].sum(axis=-1),
+                                   rtol=1e-6)
+
+
+def test_fleet_provisioner_pins_typed_fleet_size():
+    from repro.serving import FleetProvisioner
+
+    cm = CostModel.from_groups(
+        ServerGroup("eff", 6, P=1.0, beta_on=2.0, beta_off=2.0),
+        ServerGroup("leg", 4, P=1.5, beta_on=4.5, beta_off=4.5),
+    )
+    planner = FleetProvisioner(cm, policy="AQ-det")
+    assert planner.max_replicas == 10             # pinned by the model
+    res = planner.plan(np.array([0, 3, 8, 8, 2, 0]))
+    assert np.asarray(res.group_cost).shape == (2,)
+    with pytest.raises(ValueError, match="pinned fleet size"):
+        FleetProvisioner(cm, policy="A1", max_replicas=12)
+    # scalar models keep the old planning default
+    assert FleetProvisioner(PAPER_COSTS, policy="A1").max_replicas == 1024

@@ -172,6 +172,20 @@ def test_make_workload_attaches_a_noise_sweep():
     assert not np.array_equal(np.asarray(pred[1]), np.asarray(wl.demand))
 
 
+def test_make_workload_clips_to_fleet_capacity():
+    """clip_to caps demand at a (typed) fleet's pinned capacity; below the
+    cap the trace is untouched."""
+    sc = Scenario("flash_crowd", seed=4, target_pmr=6.0, mean_jobs=16.0)
+    full = make_workload(sc, 3, N_SLOTS)
+    cap = int(np.asarray(full.demand).max()) - 5
+    clipped = make_workload(sc, 3, N_SLOTS, clip_to=cap)
+    np.testing.assert_array_equal(
+        np.asarray(clipped.demand), np.minimum(np.asarray(full.demand), cap))
+    assert int(np.asarray(clipped.demand).max()) == cap
+    with pytest.raises(ValueError, match="clip_to"):
+        make_workload(sc, 1, N_SLOTS, clip_to=0)
+
+
 @pytest.mark.parametrize("name", BUILTIN)
 def test_a2_empirical_cr_respects_the_paper_bound(name):
     """A2's expectation guarantee (Thm 3) holds empirically on every
