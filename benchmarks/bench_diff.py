@@ -2,23 +2,27 @@
 
 CI's regression gate for the competitive-ratio trajectory: given the
 checked-in baseline and a freshly generated report, key every cell by
-``(policy, scenario, noise_std, window)`` and flag
+``(policy, scenario, noise_std, window, slack, rule)`` (the deferral
+coordinates are None on rigid cells, so pre-v3 keys are unchanged) and
+flag
 
 - **removed cells** — a grid that silently shrank is a coverage regression;
 - **mean-CR increases** beyond ``--tol`` — the empirical ratio drifting up
   means the engine got *worse* at following the offline optimum (common
   random numbers make mean CR deterministic per seed, so any drift is a
   code change, not sampling noise);
-- **bound-verdict flips** (``bound_ok``/per-type ``group_bound_ok``
-  true → false) — a paper guarantee newly violated.
+- **bound-verdict flips** (``bound_ok``/per-type ``group_bound_ok``/the
+  deferral latency ``slo_ok`` true → false) — a paper guarantee or
+  latency SLO newly violated.
 
-New cells, CR improvements, and verdicts flipping false → true are
-informational only.  Exit status 1 on any regression, 0 otherwise::
+New cells, CR improvements, verdicts flipping false → true, and
+``p99_delay`` drift (reported per cell) are informational only.  Exit
+status 1 on any regression, 0 otherwise::
 
     PYTHONPATH=src python benchmarks/bench_diff.py baseline.json new.json
 
-Loads via :class:`repro.eval.report.EvalReport`, so a v1 baseline diffs
-cleanly against a v2 report (v1 cells just lack the distribution/typed
+Loads via :class:`repro.eval.report.EvalReport`, so a v1/v2 baseline
+diffs cleanly against a v3 report (older cells just lack the newer
 columns, which the diff treats as absent rather than changed).
 """
 from __future__ import annotations
@@ -36,21 +40,43 @@ DEFAULT_TOL = 1e-6
 
 
 def cell_key(c: CellResult) -> tuple:
-    return (c.policy, c.scenario, round(float(c.noise_std), 9), int(c.window))
+    return (
+        c.policy,
+        c.scenario,
+        round(float(c.noise_std), 9),
+        int(c.window),
+        None if c.slack is None else int(c.slack),
+        c.rule,
+    )
+
+
+def _sort_key(k: tuple) -> tuple:
+    """Total order over cell keys: rigid cells (slack None) sort before
+    deferral cells — plain sorted() would choke comparing None with int."""
+    policy, scenario, std, window, slack, rule = k
+    return (policy, scenario, std, window,
+            slack is not None, slack or 0, rule or "")
 
 
 def _fmt_key(k: tuple) -> str:
-    policy, scenario, std, window = k
-    return f"{policy} on {scenario} (std={std:g}, w={window})"
+    policy, scenario, std, window, slack, rule = k
+    base = f"{policy} on {scenario} (std={std:g}, w={window})"
+    if slack is not None:
+        base += f" defer[{rule} slack={slack}]"
+    return base
 
 
 def _verdict_flipped(old: CellResult, new: CellResult) -> bool:
-    """True iff any bound verdict the baseline passed now fails."""
+    """True iff any bound/SLO verdict the baseline passed now fails."""
     if old.bound_ok and not new.bound_ok:
         return True
     if old.group_bound_ok is not None and new.group_bound_ok is not None:
-        return any(o and not n for o, n in
-                   zip(old.group_bound_ok, new.group_bound_ok))
+        if any(o and not n for o, n in
+               zip(old.group_bound_ok, new.group_bound_ok)):
+            return True
+    if old.slo_ok is not None and new.slo_ok is not None:
+        if old.slo_ok and not new.slo_ok:
+            return True
     return False
 
 
@@ -64,6 +90,9 @@ class BenchDiff:
     improved: list[tuple[tuple, float, float]]
     flipped: list[tuple]                               # verdict true -> false
     unflipped: list[tuple]                             # verdict false -> true
+    latency_drift: list[tuple[tuple, int, int]] = dataclasses.field(
+        default_factory=list
+    )                                                  # (key, old_p99, new_p99)
     n_common: int = 0
 
     @property
@@ -89,6 +118,8 @@ class BenchDiff:
             out.append(f"improved: {_fmt_key(k)}: {old:.6f} -> {new:.6f}")
         for k in self.unflipped:
             out.append(f"bound verdict recovered: {_fmt_key(k)}")
+        for k, old, new in self.latency_drift:
+            out.append(f"p99 delay drift: {_fmt_key(k)}: {old} -> {new}")
         return out
 
 
@@ -104,11 +135,13 @@ def diff_reports(
         raise ValueError("new report has duplicate cell keys")
 
     diff = BenchDiff(
-        removed=sorted(k for k in old_cells if k not in new_cells),
-        added=sorted(k for k in new_cells if k not in old_cells),
+        removed=sorted((k for k in old_cells if k not in new_cells),
+                       key=_sort_key),
+        added=sorted((k for k in new_cells if k not in old_cells),
+                     key=_sort_key),
         worse=[], improved=[], flipped=[], unflipped=[],
     )
-    for k in sorted(set(old_cells) & set(new_cells)):
+    for k in sorted(set(old_cells) & set(new_cells), key=_sort_key):
         o, n = old_cells[k], new_cells[k]
         diff.n_common += 1
         if n.mean_cr > o.mean_cr + tol:
@@ -119,6 +152,12 @@ def diff_reports(
             diff.flipped.append(k)
         elif _verdict_flipped(n, o):
             diff.unflipped.append(k)
+        if (
+            o.p99_delay is not None
+            and n.p99_delay is not None
+            and o.p99_delay != n.p99_delay
+        ):
+            diff.latency_drift.append((k, o.p99_delay, n.p99_delay))
     return diff
 
 

@@ -14,7 +14,10 @@ device programs — one program per (policy, scenario), shapes shared across
 scenarios).  Both grids carry ``TYPED_GROUPS`` — a two-generation
 heterogeneous fleet — so every run also records multi-type AQ-det/AQ-rand
 cells with per-type CR verdicts, gated against the Albers–Quedenfeld 2d
-(and d·e/(e−1)) aggregate bounds.
+(and d·e/(e−1)) aggregate bounds.  Both grids also sweep
+``DEFERRAL_SLACKS``: deferral cells run the defer-then-provision path and
+are gated on the latency-SLO verdict (``slo_ok`` — zero deadline misses,
+p99 queueing delay within the granted slack) on top of the CR bound.
 """
 from __future__ import annotations
 
@@ -36,12 +39,17 @@ TYPED_GROUPS = (
     ServerGroup("legacy", 96, P=1.5, beta_on=4.5, beta_off=4.5),
 )
 
+#: the deferral-slack sweep (slots): 0 is the rigid fixed point (bit-exact
+#: with no deferral at all), the rest trace the cost-vs-slack curve
+DEFERRAL_SLACKS = (0, 2, 6, 12)
+
 SMOKE_GRID = EvalGrid(
     noise_stds=(0.0, 0.2),
     windows=(0, 2, 4),
     n_traces=4,
     n_slots=288,
     typed_groups=TYPED_GROUPS,
+    deferral_slacks=DEFERRAL_SLACKS,
 )
 
 FULL_GRID = EvalGrid(
@@ -49,6 +57,7 @@ FULL_GRID = EvalGrid(
     windows=(0, 1, 2, 3, 4, 5),
     n_traces=16,
     typed_groups=TYPED_GROUPS,
+    deferral_slacks=DEFERRAL_SLACKS,
 )
 
 
@@ -133,6 +142,39 @@ def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True) -> EvalRepor
                     f"AQ-det typed cells must carry the 2d = {2.0 * d:g} "
                     f"aggregate bound, got {sorted({c.bound for c in off})}"
                 )
+        if report.grid.get("deferral_slacks"):
+            dcells = [c for c in report.cells if c.slack is not None]
+            want = (
+                len(report.grid["deferral_slacks"])
+                * len(report.grid["deferral_policies"])
+                * len(report.grid["scenario_labels"])
+            )
+            if len(dcells) != want:
+                raise AssertionError(
+                    f"grid declares deferral_slacks but produced "
+                    f"{len(dcells)} deferral cells, expected {want}"
+                )
+            bad_slo = [c for c in dcells if not c.slo_ok]
+            if bad_slo:
+                lines = "\n".join(
+                    f"  {c.policy} on {c.scenario} slack={c.slack}: "
+                    f"p99={c.p99_delay} misses={c.deadline_misses}"
+                    for c in bad_slo
+                )
+                raise AssertionError(f"latency-SLO violations:\n{lines}")
+            # the slack axis must actually buy something: per (policy,
+            # scenario), the widest-slack cell may not cost more than rigid
+            by_ps: dict[tuple, list] = {}
+            for c in dcells:
+                by_ps.setdefault((c.policy, c.scenario), []).append(c)
+            for (policy, scenario), cs in by_ps.items():
+                cs = sorted(cs, key=lambda c: c.slack)
+                if cs[-1].mean_cost > cs[0].mean_cost:
+                    raise AssertionError(
+                        f"deferral bought nothing: {policy} on {scenario} "
+                        f"costs {cs[0].mean_cost:.1f} rigid but "
+                        f"{cs[-1].mean_cost:.1f} at slack={cs[-1].slack}"
+                    )
     finally:
         # always leave the report on disk — a gate failure is exactly when
         # the per-cell diagnostics are needed (CI uploads it unconditionally)

@@ -233,6 +233,45 @@ def mesh_grid_compile_gate(rows: list[str], n_levels=48, n_slots=168) -> None:
     rows.append(f"mesh_grid_compiles,0.0,cold={cold};warm_added={warm}")
 
 
+def deferral_cost_vs_slack(rows: list[str], n_levels=256,
+                           slacks=(0, 2, 6, 12)) -> None:
+    """The defer-then-provision path: provisioning cost as a function of the
+    granted queueing slack, one row per slack.  Slack is pytree data (the
+    specs share ``max_slack``), so the whole curve reuses one compiled
+    program; the widest-slack schedule must not cost more than rigid."""
+    from repro.deferral import DeferralSpec
+
+    a = _trace(n_levels)
+    max_slack = max(slacks)
+    curve = []
+    for slack in slacks:
+        spec = ProvisionSpec(
+            costs=COSTS,
+            workload=Workload(
+                demand=jnp.asarray(a, jnp.int32),
+                deferral=DeferralSpec(slack=slack, max_slack=max_slack),
+            ),
+            policy=PolicySpec("A1", window=2),
+            n_levels=n_levels,
+        )
+        res = provision(spec)
+        jax.block_until_ready(res.cost)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(provision(spec).cost)
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        curve.append(float(res.cost))
+        rows.append(
+            f"deferral_slack{slack}_n{n_levels},{us:.1f},"
+            f"cost={curve[-1]:.1f};p99={int(res.p99_delay)};"
+            f"miss={int(res.deadline_misses)}"
+        )
+    assert curve[-1] <= curve[0], (
+        f"deferral bought nothing: rigid costs {curve[0]:.1f}, "
+        f"slack={slacks[-1]} costs {curve[-1]:.1f}"
+    )
+
+
 def brick_simulator_throughput(rows: list[str]) -> None:
     rng = np.random.default_rng(1)
     tr = generate_brick_trace(rng, horizon=2000.0, rate=3.0, mean_duration=4.0)
@@ -275,6 +314,7 @@ def run(rows: list[str]) -> None:
     typed_fleet_throughput(rows)
     pallas_scan_throughput(rows)
     mesh_grid_throughput(rows)
+    deferral_cost_vs_slack(rows)
     brick_simulator_throughput(rows)
     jit_cache_reuse(rows)
     mesh_grid_compile_gate(rows)
@@ -290,6 +330,7 @@ def run_smoke(rows: list[str]) -> None:
     pallas_scan_throughput(rows, sizes=(128,))
     mesh_grid_throughput(rows, n_levels=32, n_traces=2, n_windows=2, n_stds=2,
                          n_slots=160)
+    deferral_cost_vs_slack(rows, n_levels=32, slacks=(0, 4))
     jit_cache_reuse(rows)
     mesh_grid_compile_gate(rows)
 

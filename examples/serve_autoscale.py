@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import RANDOMIZED_POLICIES, CostModel, PolicySpec
+from repro.core import RANDOMIZED_POLICIES, CostModel, DeferralSpec, PolicySpec
 from repro.data.requests import generate_sessions
 from repro.models import init_params
 from repro.serving import (
@@ -78,6 +78,24 @@ def main() -> None:
         line = " ".join(f"w={w}:{c:,.0f}" for w, c in zip(windows, costs))
         print(f"  {policy}: {line}  -> best window {windows[best]} "
               f"(alpha={min(1.0, (windows[best] + 1) / COSTS.delta):.2f})")
+    print()
+
+    # deferrable sessions: grant the queue k slots of slack and let the
+    # planner water-fill arrivals before provisioning — bursts are absorbed
+    # by the backlog instead of replica toggles, and the plan reports the
+    # latency actually paid (p99 queueing delay, deadline misses).
+    print("planned cost by deferral slack (A1, defer-then-provision):")
+    for slack in (0, 1, 2, 4):
+        planner = FleetProvisioner(
+            COSTS, policy="A1", max_replicas=int(demand.max()) + 1,
+            deferral=DeferralSpec(slack=slack),
+        )
+        res = planner.plan(demand)
+        x = np.asarray(res.x)
+        toggles = int(np.maximum(np.diff(x, prepend=0), 0).sum())
+        print(f"  slack={slack}: cost={float(res.cost):,.0f} "
+              f"toggles(on)={toggles} p99_delay={int(res.p99_delay)} "
+              f"misses={int(res.deadline_misses)}")
     print()
 
     cfg = get_config(args.arch, reduced=True).replace(remat="none")

@@ -15,6 +15,7 @@ The loose-kwargs ``provision_schedule``/``provision_sweep[_costs]``/
 ``provision_cost``/``provision_schedule_sharded`` functions are deprecated
 wrappers around ``provision``.
 """
+from ..deferral import DeferralSpec
 from .costs import PAPER_COSTS, CostModel, ServerGroup, schedule_cost
 from .dp_oracle import dp_optimal_cost
 from .events import BrickTrace, Job, generate_brick_trace, trace_from_intervals
@@ -60,6 +61,7 @@ from .traces import (
 __all__ = [
     "PAPER_COSTS",
     "CostModel",
+    "DeferralSpec",
     "ServerGroup",
     "schedule_cost",
     "dp_optimal_cost",

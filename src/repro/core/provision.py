@@ -38,6 +38,7 @@ from jax.sharding import Mesh
 
 from .costs import CostModel
 from . import jax_provision as _engine
+from ..deferral import DeferralSpec
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -95,12 +96,18 @@ class Workload:
     dispatcher always sees the true current slot).  ``noise``: optional
     :class:`PredictionNoise` that synthesizes ``predicted`` from ``demand``
     (its ``std_frac`` may be a ``(S,)`` sweep axis); mutually exclusive with
-    an explicit ``predicted``.
+    an explicit ``predicted``.  ``deferral``: optional
+    :class:`~repro.deferral.DeferralSpec` marking the demand as *arrivals
+    with slack* rather than rigid load — :func:`provision` then water-fills
+    the arrivals into the deferred service profile before the engine sees
+    them (defer-then-provision) and reports queue metrics on the result.
+    A zero-slack spec is bit-exact with no spec at all.
     """
 
     demand: jax.Array
     predicted: jax.Array | None = None
     noise: PredictionNoise | None = None
+    deferral: DeferralSpec | None = None
 
     def resolve_predicted(self, demand_i32: jax.Array) -> jax.Array | None:
         if self.predicted is not None and self.noise is not None:
@@ -113,7 +120,9 @@ class Workload:
 
 
 jax.tree_util.register_dataclass(
-    Workload, data_fields=["demand", "predicted", "noise"], meta_fields=[]
+    Workload,
+    data_fields=["demand", "predicted", "noise", "deferral"],
+    meta_fields=[],
 )
 
 
@@ -191,6 +200,14 @@ class ProvisionResult:
     (..., d) per-type totals for typed fleets (``CostModel.from_groups``,
     one column per server type in routing-priority order); None for
     ungrouped models.
+
+    Deferral-enabled workloads (``Workload(deferral=...)``) additionally
+    carry the queue's view of the schedule, all None otherwise:
+    ``backlog`` (..., T) work still queued after each slot;
+    ``max_delay`` / ``p99_delay`` (...) worst and 99th-percentile queueing
+    delay in slots over served units; ``deadline_misses`` (...) units that
+    expired while queued; ``unserved`` (...) units left at the horizon
+    (0 whenever the schedule covers the deferred profile).
     """
 
     x: jax.Array
@@ -199,12 +216,18 @@ class ProvisionResult:
     toggle_cost: jax.Array
     level_cost: jax.Array
     group_cost: jax.Array | None = None
+    backlog: jax.Array | None = None
+    max_delay: jax.Array | None = None
+    p99_delay: jax.Array | None = None
+    deadline_misses: jax.Array | None = None
+    unserved: jax.Array | None = None
 
 
 jax.tree_util.register_dataclass(
     ProvisionResult,
     data_fields=["x", "cost", "energy", "toggle_cost", "level_cost",
-                 "group_cost"],
+                 "group_cost", "backlog", "max_delay", "p99_delay",
+                 "deadline_misses", "unserved"],
     meta_fields=[],
 )
 
@@ -223,6 +246,13 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
     a = jnp.asarray(spec.workload.demand, jnp.int32)
     if a.ndim not in (1, 2):
         raise ValueError(f"demand must be (T,) or (B, T), got shape {a.shape}")
+    defer = spec.workload.deferral
+    arrivals = a
+    if defer is not None:
+        # defer-then-provision: the engine (predictions, noise, n_levels
+        # inference, the offline baseline) runs on the water-filled service
+        # profile; queue metrics below are measured on the true arrivals
+        a = defer.validate().apply(a)
     squeeze_b = a.ndim == 1
     ab = a[None] if squeeze_b else a
     noise = spec.workload.noise
@@ -319,6 +349,9 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
             out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead), out)
 
     level_cost = out["energy"] + out["on_cost"] + out["off_cost"]
+    queue = (
+        {} if defer is None else defer.metrics(arrivals, out["x"])
+    )
     return ProvisionResult(
         x=out["x"],
         cost=level_cost.sum(axis=-1),
@@ -329,4 +362,9 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
             None if spec.costs.group_sizes is None
             else spec.costs.group_reduce(level_cost)
         ),
+        backlog=queue.get("backlog"),
+        max_delay=queue.get("max_delay"),
+        p99_delay=queue.get("p99_delay"),
+        deadline_misses=queue.get("deadline_misses"),
+        unserved=queue.get("unserved"),
     )

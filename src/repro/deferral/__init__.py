@@ -1,0 +1,19 @@
+"""repro.deferral — slack-aware workload deferral as a batched JAX layer.
+
+The subsystem has two halves: :func:`defer_demand` turns arrivals + slack
+into the water-filled service profile the provisioning engine runs on
+(defer-then-provision), and :func:`queue_scan` measures the resulting
+queue — backlog, queueing delay, deadline misses — under a dispatch rule.
+:class:`DeferralSpec` is the user-facing model attached to
+``Workload(deferral=...)``; see ``docs/deferral.md``.
+"""
+from .queue_scan import defer_demand, due_envelope, queue_scan
+from .spec import RULES, DeferralSpec
+
+__all__ = [
+    "DeferralSpec",
+    "RULES",
+    "defer_demand",
+    "due_envelope",
+    "queue_scan",
+]

@@ -1,0 +1,245 @@
+"""Vectorized slack-aware queueing: water-filled deferral + a batched queue scan.
+
+Two jitted primitives replace the heap a discrete-event queue simulator
+would use (Adnan et al., "Dynamic Deferral of Workload for Capacity
+Provisioning in Data Centers", arXiv 1109.3839, PAPERS.md):
+
+  * :func:`defer_demand` — the *defer-then-provision* transform.  Arrivals
+    ``a(t)`` with per-job slack become the water-filled service profile
+    ``ã(t)``: the least capacity that still meets every deadline, computed
+    from two prefix-sum envelopes (cumulative arrivals ``A`` above,
+    cumulative work due ``L`` below) with an optimal-available rate rule —
+    at each slot serve ``max_k ceil((L(t+k) − S(t−1)) / (k+1))`` over the
+    remaining horizon.  Peaks flatten by up to ``slack + 1``× (a burst's
+    work spreads over its whole deadline span) and the deferred remainder
+    rides the next valley.  Zero slack makes every envelope tight, so
+    ``ã ≡ a`` **bit-exactly** — the rigid path is the fixed point, not a
+    special case (property-gated in ``tests/test_deferral.py``).
+
+  * :func:`queue_scan` — the measurement half.  Given true arrivals and a
+    capacity profile ``x(t)`` (typically a provisioned schedule), simulate
+    the queue under a dispatch rule and return backlog/latency metrics.
+    Instead of a heap, the backlog lives in *age buckets*: ``w[j]`` is the
+    unserved work of the batch that arrived ``j`` slots ago (``j ≤
+    max_slack``, plus one merged bucket for late work), so each slot is a
+    shift + a **sorted prefix-sum waterfill**: order buckets by the rule's
+    priority key, serve ``clip(x(t) − work_ahead, 0, w)`` cumulatively,
+    scatter back.  Everything is fixed-shape ``jnp`` ops inside one
+    ``lax.scan``, so the whole thing jits, vmaps over any ``(S, W, B)``
+    sweep grid, and composes with both the lax.scan and Pallas fleet paths
+    (which only ever see the deferred profile).
+
+Dispatch rules (:data:`repro.deferral.spec.RULES`, idiom from anafor's
+LPT/SPT stream schedulers — SNIPPETS.md):
+
+  * ``EDF`` — earliest deadline first among live batches; expired work is
+    served last (it cannot be saved, so it must not starve a tight batch).
+    For unit jobs this greedy is throughput-optimal, hence the
+    EDF-dominance law: no rule misses fewer deadlines.
+  * ``FIFO`` — strict arrival order, expired work included (it is oldest,
+    so it stays head-of-line — the honest queue).
+  * ``SPT`` / ``LPT`` — smallest / largest remaining batch first among
+    live batches (shortest/longest processing time on the per-slot arrival
+    batches), expired work last.
+
+Metric conventions: a unit *misses* its deadline when it is still queued
+as its remaining slack crosses below zero (counted exactly once, at
+expiry; late units stay queued — work is conserved, never dropped, so
+``served + unserved == arrived`` always).  Queueing delay of a served
+unit is its age in slots at service time; delays beyond ``max_slack + 1``
+are lumped into the merged late bucket (exact wherever deadlines can
+still be met, which is where the SLO verdict looks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def due_envelope(a: jax.Array, slack: jax.Array | int) -> jax.Array:
+    """``L(t)``: cumulative work whose deadline is at or before slot ``t``.
+
+    ``a``: (T,) integer arrivals; ``slack``: scalar or (T,) slots of slack
+    for the batch arriving at each slot (deadline ``t + slack(t)``, clipped
+    to the horizon — all work must finish in-trace, mirroring the engine's
+    forced ``x(T) = a(T)`` boundary).  A plain scatter-add + prefix sum, so
+    it traces under jit/vmap with no sorting.
+    """
+    T = a.shape[0]
+    dead = jnp.clip(jnp.arange(T) + jnp.asarray(slack, jnp.int32), 0, T - 1)
+    return jnp.cumsum(jax.ops.segment_sum(a, dead, num_segments=T))
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def defer_demand(
+    a: jax.Array,
+    slack: jax.Array | int,
+    *,
+    cap: int | None = None,
+) -> jax.Array:
+    """Water-filled service profile ``ã``: (T,) int32, the deferred demand.
+
+    The optimal-available rate rule over the deadline envelope: with
+    ``S(t−1)`` work served so far, slot ``t`` serves
+
+        ``ã(t) = min(A(t) − S,  max_{k=0..T−1−t} ⌈(L(t+k) − S)/(k+1)⌉)``
+
+    — the smallest rate that, held for ``k+1`` slots, still clears every
+    pending deadline, never exceeding what has actually arrived (``A`` =
+    cumulative arrivals).  The density max ranges over the *full* remaining
+    horizon (the OA speed-scaling rule), so deadline mass the trace
+    boundary concentrates at ``T−1`` is anticipated from the first slot
+    and spread at the mean rate instead of surfacing as a late catch-up
+    burst.  O(T²) per trace, which is fine at planning horizons
+    (provisioning slots, not the streaming kernel's microsecond ticks).
+
+    ``cap`` additionally clamps ``ã(t) ≤ cap`` — a fleet-capacity ceiling.
+    A binding cap makes laziness unsafe (deferred work could strand beyond
+    the horizon), so the lower envelope is first tightened to
+    ``L'(t) = max_{j≥t} (L(j) − cap·(j−t))`` — serve early enough that the
+    remaining capped slots can still absorb everything due.  Work the cap
+    displaces thus re-enters the backlog and is served in *earlier* or
+    later slots, never dropped: ``sum(ã) == sum(a)`` whenever a feasible
+    schedule exists at all (the conservation law
+    ``make_workload(clip_to=...)`` leans on).  An infeasible cap (arrivals
+    outrun ``cap`` for longer than slack covers) leaves a shortfall;
+    :func:`queue_scan` reports it as misses/unserved.
+
+    With ``slack = 0`` and no cap the causality bound is also the ``k=0``
+    density term, so ``ã == a`` bit-exactly.
+    """
+    T = a.shape[0]
+    a = jnp.asarray(a, jnp.int32)
+    A = jnp.cumsum(a)
+    L = due_envelope(a, slack)
+    if cap is not None:
+        j = jnp.arange(T, dtype=L.dtype)
+        L = jnp.flip(jax.lax.cummax(jnp.flip(L - cap * j))) + cap * j
+    # pad with the total so out-of-horizon terms are dominated, not special
+    Lpad = jnp.concatenate([L, jnp.full((T,), L[-1], L.dtype)])
+    k = jnp.arange(T)
+
+    def step(S, t):
+        fut = jax.lax.dynamic_slice(Lpad, (t,), (T,))
+        need = (jnp.maximum(fut - S, 0) + k) // (k + 1)     # integer ceil
+        c = jnp.minimum(need.max(), A[t] - S)               # causality
+        if cap is not None:
+            c = jnp.minimum(c, jnp.int32(cap))
+        c = jnp.maximum(c, 0)
+        return S + c, c
+
+    _, out = jax.lax.scan(step, jnp.zeros((), jnp.int32), jnp.arange(T))
+    return out.astype(jnp.int32)
+
+
+def _priority(rule: str, w, rem, live, ages, n_buckets):
+    """(primary, secondary) sort keys, smaller served first.
+
+    Expired work (``~live``) sorts after every live batch for all rules
+    except FIFO, whose strict arrival order keeps it head-of-line.  The
+    secondary key breaks ties oldest-first, so every rule is a total,
+    deterministic order.
+    """
+    late = jnp.int32(n_buckets + 1)
+    if rule == "EDF":
+        prim = jnp.where(live, rem, late)
+    elif rule == "FIFO":
+        prim = -ages                               # oldest first, late included
+    elif rule == "SPT":
+        prim = jnp.where(live, w, jnp.int32(2**30))
+    elif rule == "LPT":
+        prim = jnp.where(live, -w, jnp.int32(2**30))
+    else:  # pragma: no cover - guarded by DeferralSpec.validate
+        raise ValueError(f"unknown dispatch rule {rule!r}")
+    return prim, (n_buckets - 1) - ages
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "max_slack"))
+def queue_scan(
+    a: jax.Array,
+    x: jax.Array,
+    slack: jax.Array | int,
+    *,
+    rule: str = "EDF",
+    max_slack: int,
+) -> dict:
+    """Simulate the deferral queue for one (arrivals, capacity) pair.
+
+    ``a``/``x``: (T,) int32 arrivals and per-slot service capacity;
+    ``slack``: scalar or (T,) slack of each slot's arrival batch;
+    ``max_slack``: static bucket bound (≥ the largest slack).  Each slot:
+    age the buckets (counting units whose deadline just expired), admit the
+    new batch, then serve ``x(t)`` units by the rule's sorted prefix-sum
+    waterfill.  Late work stays queued at the rule's late priority until
+    served or the trace ends.
+
+    Returns a dict of device arrays:
+
+    - ``backlog`` (T,): units still queued at the end of each slot;
+    - ``served_by_age`` (max_slack + 2,): served-unit delay histogram
+      (index = slots waited; the last bucket lumps delays > max_slack);
+    - ``deadline_misses`` (): units that were still queued when their
+      deadline expired (each counted once);
+    - ``unserved`` (): units left at the horizon (0 whenever the capacity
+      profile covers the deferred demand — work conservation);
+    - ``max_delay`` / ``p99_delay`` (): the max and 99th-percentile
+      queueing delay over all served units, in slots.
+    """
+    T = a.shape[0]
+    K = max_slack
+    nb = K + 2                                    # ages 0..K + merged late
+    a = jnp.asarray(a, jnp.int32)
+    x = jnp.asarray(x, jnp.int32)
+    slack_t = jnp.broadcast_to(jnp.asarray(slack, jnp.int32), (T,))
+    # spad[t + K - j] = slack of the batch that arrived at t - j
+    spad = jnp.concatenate([jnp.zeros((K,), jnp.int32), slack_t])
+    ages = jnp.arange(nb, dtype=jnp.int32)
+
+    def slack_window(t):
+        """slack of the batch aged j at slot t, j = 0..K (junk for t-j < 0,
+        where the bucket is empty anyway)."""
+        return jax.lax.dynamic_slice(spad, (t,), (K + 1,))[::-1]
+
+    def step(carry, t):
+        w, miss, hist = carry
+        # units whose last service chance was slot t-1 and are still queued
+        prev_rem = slack_window(t - 1) - ages[: K + 1]
+        miss = miss + jnp.sum(jnp.where(prev_rem == 0, w[: K + 1], 0))
+        # age every bucket; ages past K merge into the late bucket
+        w_new = jnp.concatenate([a[t][None], w[:-1]]).at[nb - 1].add(w[nb - 1])
+        rem = jnp.concatenate(
+            [slack_window(t) - ages[: K + 1], jnp.full((1,), -1, jnp.int32)]
+        )
+        prim, sec = _priority(rule, w_new, rem, rem >= 0, ages, nb)
+        order = jnp.lexsort((sec, prim))
+        ws = w_new[order]
+        ahead = jnp.cumsum(ws) - ws
+        served_sorted = jnp.clip(x[t] - ahead, 0, ws)
+        served = jnp.zeros_like(w_new).at[order].set(served_sorted)
+        w_after = w_new - served
+        return (w_after, miss, hist + served), w_after.sum()
+
+    init = (
+        jnp.zeros((nb,), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((nb,), jnp.int32),
+    )
+    (w_final, miss, hist), backlog = jax.lax.scan(step, init, jnp.arange(T))
+    # deadlines that expire exactly at the horizon never age past it inside
+    # the scan; count their leftovers here
+    final_rem = slack_window(T - 1) - ages[: K + 1]
+    miss = miss + jnp.sum(jnp.where(final_rem <= 0, w_final[: K + 1], 0))
+    miss = miss + w_final[nb - 1]                 # merged late leftovers
+    total = hist.sum()
+    cum = jnp.cumsum(hist)
+    p99 = jnp.argmax(cum >= jnp.ceil(0.99 * total)).astype(jnp.int32)
+    return {
+        "backlog": backlog,
+        "served_by_age": hist,
+        "deadline_misses": miss,
+        "unserved": w_final.sum(),
+        "max_delay": jnp.maximum(jnp.max(jnp.where(hist > 0, ages, -1)), 0),
+        "p99_delay": p99,
+    }

@@ -1,0 +1,142 @@
+"""`DeferralSpec`: the slack/deadline model attached to a :class:`Workload`.
+
+Declares *how long arriving work may wait*: a scalar slack (every batch
+may wait that many slots) or a per-slot ``(T,)`` slack vector
+(heterogeneous deadlines — batch arriving at ``t`` must finish by
+``t + slack[t]``), plus the dispatch rule the queue uses and an optional
+per-slot service cap.  Like the other spec pytrees, *values* (the slack
+array) are jit data while *shape-like* knobs (rule, cap, the static
+bucket bound) are metadata, so sweeping slack values never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .queue_scan import defer_demand as _defer_demand
+from .queue_scan import queue_scan as _queue_scan
+
+#: dispatch rules understood by the queue scan
+RULES = ("EDF", "FIFO", "SPT", "LPT")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeferralSpec:
+    """Slack/deadline model for deferrable work.
+
+    Attributes:
+        slack: scalar or per-slot ``(T,)`` integer slots of slack.  The
+            batch arriving at slot ``t`` must be served by ``t + slack``
+            (clipped to the trace horizon).  ``0`` means rigid — the
+            deferred profile is bit-exact with the raw demand.  Jit
+            *data*: sweeping slack values reuses the compiled program.
+            Per-slot slack keeps the zero-miss guarantee only under
+            *monotone effective deadlines* (``t + slack[t]``
+            non-decreasing — later work never jumps the queue); the
+            transform satisfies the prefix envelope either way, but for
+            non-monotone deadlines that is weaker than Hall's interval
+            condition and the metrics may report genuine misses.
+        rule: dispatch rule for the measurement queue, one of
+            :data:`RULES`.  Static (part of the compile key).
+        cap: optional per-slot ceiling on the deferred service profile
+            (e.g. a fleet-size limit).  Displaced work re-enters the
+            backlog rather than being dropped.  Static.
+        max_slack: static bucket/scan bound, ``>= max(slack)``.  Usually
+            inferred from a concrete ``slack``; must be given explicitly
+            when ``slack`` is a tracer (inside jit/vmap), mirroring the
+            engine's ``n_levels`` convention.
+    """
+
+    slack: Any = 0
+    rule: str = "EDF"
+    cap: int | None = None
+    max_slack: int | None = None
+
+    def validate(self) -> "DeferralSpec":
+        if self.rule not in RULES:
+            raise ValueError(
+                f"unknown dispatch rule {self.rule!r}; expected one of {RULES}"
+            )
+        if self.cap is not None and int(self.cap) <= 0:
+            raise ValueError(f"cap must be positive, got {self.cap}")
+        bound = self.bound()
+        if bound < 0:
+            raise ValueError(f"slack must be non-negative, got {self.slack}")
+        if np.ndim(self.slack) > 1:
+            raise ValueError(
+                f"slack must be a scalar or a (T,) vector, got shape "
+                f"{np.shape(self.slack)}"
+            )
+        return self
+
+    def bound(self) -> int:
+        """The static slack bound (scan length / bucket count - 2).
+
+        Derived from a concrete ``slack``; under tracing ``max_slack``
+        must be set explicitly (clear error otherwise, like ``n_levels``).
+        """
+        if self.max_slack is not None:
+            return int(self.max_slack)
+        if isinstance(self.slack, jax.core.Tracer):
+            raise ValueError(
+                "DeferralSpec.slack is a tracer; pass max_slack= explicitly "
+                "when calling provision() under jit/vmap"
+            )
+        return int(np.max(np.asarray(self.slack)))
+
+    def slack_for(self, n_slots: int) -> jax.Array:
+        """The per-slot slack vector, broadcast to ``(n_slots,)`` int32."""
+        s = jnp.asarray(self.slack, jnp.int32)
+        if s.ndim == 1 and s.shape[0] != n_slots:
+            raise ValueError(
+                f"per-slot slack has length {s.shape[0]} but the workload "
+                f"has {n_slots} slots"
+            )
+        return jnp.broadcast_to(s, (n_slots,))
+
+    def apply(self, demand: jax.Array) -> jax.Array:
+        """Deferred service profile ``ã`` for ``(T,)`` or ``(B, T)`` demand."""
+        demand = jnp.asarray(demand, jnp.int32)
+        slack_t = self.slack_for(demand.shape[-1])
+
+        def one(row):
+            return _defer_demand(row, slack_t, cap=self.cap)
+
+        if demand.ndim == 1:
+            return one(demand)
+        flat = demand.reshape(-1, demand.shape[-1])
+        return jax.vmap(one)(flat).reshape(demand.shape)
+
+    def metrics(self, arrivals: jax.Array, x: jax.Array) -> dict:
+        """Queue metrics for true ``arrivals`` under capacity profile ``x``.
+
+        ``arrivals``: ``(T,)`` or ``(B, T)``; ``x``: any shape broadcastable
+        to ``(..., B, T)`` (e.g. the engine's ``(S, W, B, T)`` sweep grid).
+        Leaves keep the leading sweep axes: ``backlog`` is ``(..., T)``,
+        scalars (misses/unserved/max_delay/p99_delay) are ``(...,)``.
+        """
+        x = jnp.asarray(x, jnp.int32)
+        a = jnp.broadcast_to(jnp.asarray(arrivals, jnp.int32), x.shape)
+        K = self.bound()
+        T = x.shape[-1]
+        slack_t = self.slack_for(T)
+
+        def one(a_row, x_row):
+            return _queue_scan(
+                a_row, x_row, slack_t, rule=self.rule, max_slack=K
+            )
+
+        out = jax.vmap(one)(a.reshape(-1, T), x.reshape(-1, T))
+        lead = x.shape[:-1]
+        return {
+            key: val.reshape(lead + val.shape[1:]) for key, val in out.items()
+        }
+
+
+jax.tree_util.register_dataclass(
+    DeferralSpec, data_fields=["slack"], meta_fields=["rule", "cap", "max_slack"]
+)

@@ -6,12 +6,20 @@ against the paper's bounds, as warmed batched device programs.  The report
 serializes to ``BENCH_provision.json`` (``benchmarks/cr_eval.py``).
 """
 from .harness import TYPED_POLICIES, EvalGrid, evaluate
-from .report import CR_QUANTILES, SCHEMA, SCHEMA_V1, CellResult, EvalReport
+from .report import (
+    CR_QUANTILES,
+    SCHEMA,
+    SCHEMA_V1,
+    SCHEMA_V2,
+    CellResult,
+    EvalReport,
+)
 
 __all__ = [
     "CR_QUANTILES",
     "SCHEMA",
     "SCHEMA_V1",
+    "SCHEMA_V2",
     "TYPED_POLICIES",
     "CellResult",
     "EvalGrid",

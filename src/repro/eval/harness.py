@@ -40,6 +40,7 @@ import numpy as np
 from repro.core import (
     PAPER_COSTS,
     CostModel,
+    DeferralSpec,
     PolicySpec,
     PredictionNoise,
     ProvisionSpec,
@@ -48,6 +49,7 @@ from repro.core import (
     provision,
     theoretical_ratio,
 )
+from repro.deferral import RULES
 from repro.core.jax_provision import (
     KEYED,
     _run,
@@ -86,6 +88,17 @@ class EvalGrid:
     per ``typed_policies`` entry per scenario.  The typed fleet rides
     ``mesh``/``use_pallas`` too, exercising the group-aligned kernel
     layout.
+
+    ``deferral_slacks``: optional slack sweep (slots) — adds one deferral
+    cell per (``deferral_policies`` entry × scenario × slack), each running
+    the defer-then-provision path (``Workload(deferral=...)``, rule
+    ``deferral_rule``) at window 0 with exact predictions.  The CR
+    denominator is the offline optimum *on the deferred profile* (the CR
+    bound is a property of the provisioning game, whatever demand it is
+    fed), so cost-vs-slack shows up in ``mean_cost``/``mean_opt_cost``
+    falling while CR stays bounded; the latency side lands in the
+    ``slo_ok`` verdict — no deadline misses and p99 delay within the
+    granted slack.  Deferral cells ride ``mesh``/``use_pallas`` too.
     """
 
     policies: tuple[str, ...] = ("A1", "A2", "A3")
@@ -107,6 +120,9 @@ class EvalGrid:
     use_pallas: bool = True
     typed_groups: tuple[ServerGroup, ...] | None = None
     typed_policies: tuple[str, ...] = TYPED_POLICIES
+    deferral_slacks: tuple[int, ...] | None = None
+    deferral_rule: str = "EDF"
+    deferral_policies: tuple[str, ...] = ("A1",)
 
     def validate(self) -> "EvalGrid":
         if self.costs.is_heterogeneous:
@@ -141,6 +157,26 @@ class EvalGrid:
                 "no offline slot scan; drop 'offline' from policies (the "
                 "offline baseline is computed regardless)"
             )
+        if self.deferral_slacks is not None:
+            if not self.deferral_slacks or any(
+                k < 0 for k in self.deferral_slacks
+            ):
+                raise ValueError(
+                    "deferral_slacks must be a non-empty tuple of "
+                    f"non-negative slot counts, got {self.deferral_slacks}"
+                )
+            if self.deferral_rule not in RULES:
+                raise ValueError(
+                    f"deferral_rule must be one of {RULES}, "
+                    f"got {self.deferral_rule!r}"
+                )
+            bad = [p for p in self.deferral_policies
+                   if p == "offline" or _bound(p, 1.0) is None]
+            if bad or not self.deferral_policies:
+                raise ValueError(
+                    "deferral_policies must be online policies with a "
+                    f"stated bound, got {self.deferral_policies}"
+                )
         return self
 
 
@@ -290,6 +326,94 @@ def _evaluate_typed(
     return cells, expected
 
 
+def _evaluate_deferral(
+    grid: EvalGrid, labels: list[str], demands: list, n_levels: int
+) -> tuple[list[CellResult], int]:
+    """Deferral cells: (deferral policy × scenario × slack) at window 0.
+
+    One ``provision`` per (scenario, slack, policy) plus one deferred
+    offline baseline per (scenario, slack) — slack is jit *data* (and the
+    offline program is shared with the main block), so the whole sweep
+    adds ``len(set(deferral_policies))`` compiled engine programs.  Each
+    cell's CR is measured against the offline optimum on the *same*
+    deferred profile; the slack axis shows up as ``mean_cost`` falling
+    and the ``slo_ok`` latency verdict.
+    """
+    if grid.deferral_slacks is None:
+        return [], 0
+    max_slack = max(grid.deferral_slacks)
+    alpha = min(1.0, 1.0 / float(grid.costs.delta))         # window = 0
+    cells: list[CellResult] = []
+    for label, demand_np in zip(labels, demands):
+        demand = jnp.asarray(demand_np, jnp.int32)
+        for slack in grid.deferral_slacks:
+            dspec = DeferralSpec(
+                slack=slack, rule=grid.deferral_rule, max_slack=max_slack
+            )
+            opt = provision(ProvisionSpec(
+                costs=grid.costs,
+                workload=Workload(demand=demand, deferral=dspec),
+                policy=PolicySpec("offline"),
+                n_levels=n_levels,
+            )).cost                                         # (B,)
+            opt = np.asarray(jax.block_until_ready(opt), np.float64)
+            for pi, policy in enumerate(grid.deferral_policies):
+                res = provision(ProvisionSpec(
+                    costs=grid.costs,
+                    workload=Workload(demand=demand, deferral=dspec),
+                    policy=PolicySpec(
+                        policy,
+                        key=(
+                            jax.random.fold_in(
+                                jax.random.key(grid.seed + 3), pi
+                            )
+                            if policy in KEYED
+                            else None
+                        ),
+                    ),
+                    n_levels=n_levels,
+                    mesh=grid.mesh,
+                    mesh_axis=grid.mesh_axis,
+                    use_pallas=grid.use_pallas,
+                ))
+                cost = np.asarray(
+                    jax.block_until_ready(res.cost), np.float64
+                )                                           # (B,)
+                cr = cost / opt
+                misses = int(np.asarray(res.deadline_misses).sum())
+                unserved = int(np.asarray(res.unserved).sum())
+                p99 = int(np.asarray(res.p99_delay).max())
+                max_delay = int(np.asarray(res.max_delay).max())
+                bound = _bound(policy, alpha)
+                mean_cr = float(cr.mean())
+                quantiles = [float(q) for q in np.quantile(cr, CR_QUANTILES)]
+                cells.append(CellResult(
+                    policy=policy,
+                    scenario=label,
+                    noise_std=0.0,
+                    window=0,
+                    alpha=alpha,
+                    bound=bound,
+                    mean_cr=mean_cr,
+                    p95_cr=float(np.percentile(cr, 95)),
+                    max_cr=float(cr.max()),
+                    mean_cost=float(cost.mean()),
+                    mean_opt_cost=float(opt.mean()),
+                    bound_ok=mean_cr <= bound + grid.tol,
+                    p50_cr=quantiles[CR_QUANTILES.index(0.5)],
+                    cr_quantiles=quantiles,
+                    slack=int(slack),
+                    rule=grid.deferral_rule,
+                    max_delay=max_delay,
+                    p99_delay=p99,
+                    deadline_misses=misses,
+                    slo_ok=(
+                        misses == 0 and unserved == 0 and p99 <= int(slack)
+                    ),
+                ))
+    return cells, len(set(grid.deferral_policies))
+
+
 def evaluate(grid: EvalGrid) -> EvalReport:
     """Run the full grid and return the scored :class:`EvalReport`.
 
@@ -298,8 +422,10 @@ def evaluate(grid: EvalGrid) -> EvalReport:
     baseline.  Because every scenario shares the fleet size and trace
     shapes, the jit cache holds at most ``len(set(policies)) + 1`` entries
     for the whole run — plus one per typed policy and one typed offline
-    when ``typed_groups`` is set (reported as ``expected_compiles`` and
-    asserted by ``benchmarks/cr_eval.py --smoke``).  With ``grid.mesh`` set the policy
+    when ``typed_groups`` is set, and one per deferral policy when
+    ``deferral_slacks`` is set (slack itself is jit data; reported as
+    ``expected_compiles`` and asserted by ``benchmarks/cr_eval.py
+    --smoke``).  With ``grid.mesh`` set the policy
     programs run through the sharded Pallas fleet path instead
     (``_sharded_grid``, counted by the same cache watcher); the cells are
     bit-exact either way.
@@ -384,6 +510,11 @@ def evaluate(grid: EvalGrid) -> EvalReport:
     )
     cells.extend(typed_cells)
 
+    deferral_cells, deferral_compiles = _evaluate_deferral(
+        grid, labels, demands, n_levels
+    )
+    cells.extend(deferral_cells)
+
     entries_after = _engine_cache_size()
     entries_added = -1 if entries_before < 0 else entries_after - entries_before
     return EvalReport(
@@ -411,10 +542,23 @@ def evaluate(grid: EvalGrid) -> EvalReport:
             "typed_policies": (
                 None if grid.typed_groups is None else list(grid.typed_policies)
             ),
+            "deferral_slacks": (
+                None if grid.deferral_slacks is None
+                else list(grid.deferral_slacks)
+            ),
+            "deferral_rule": (
+                None if grid.deferral_slacks is None else grid.deferral_rule
+            ),
+            "deferral_policies": (
+                None if grid.deferral_slacks is None
+                else list(grid.deferral_policies)
+            ),
         },
         cells=cells,
         backend=jax.default_backend(),
         jit_entries_added=entries_added,
-        expected_compiles=len(set(grid.policies)) + 1 + typed_compiles,
+        expected_compiles=(
+            len(set(grid.policies)) + 1 + typed_compiles + deferral_compiles
+        ),
         elapsed_s=time.perf_counter() - t0,
     )

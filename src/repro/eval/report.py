@@ -13,7 +13,14 @@ distribution (``p50_cr`` plus ``cr_quantiles``, the ratio values at the
 fixed :data:`CR_QUANTILES` probabilities) and the typed-fleet columns
 (``group_names``/``group_mean_cr``/``group_bound``/``group_bound_ok`` —
 per-server-type CR statistics and verdicts, None on untyped cells).
-:meth:`EvalReport.load` still reads v1 artifacts.
+
+v3 adds the deferral-slack columns (None on rigid cells and on loaded
+v1/v2 artifacts): ``slack``/``rule`` identify a deferral cell (slack in
+slots, queue dispatch rule), ``max_delay``/``p99_delay`` are the worst
+per-trace queueing delays, ``deadline_misses`` the total expired units
+over the batch, and ``slo_ok`` the latency-SLO verdict — no deadline
+misses and p99 delay within the granted slack.  :meth:`EvalReport.load`
+still reads v1 and v2 artifacts.
 """
 from __future__ import annotations
 
@@ -21,7 +28,8 @@ import dataclasses
 import json
 import pathlib
 
-SCHEMA = "repro.eval/v2"
+SCHEMA = "repro.eval/v3"
+SCHEMA_V2 = "repro.eval/v2"
 SCHEMA_V1 = "repro.eval/v1"
 
 #: the fixed probabilities ``CellResult.cr_quantiles`` reports CR values at
@@ -49,6 +57,14 @@ class CellResult:
     cost), ``group_bound`` (the per-type ski-rental bound: 2 for AQ-det,
     e/(e−1) for AQ-rand) and ``group_bound_ok`` verdicts; the cell-level
     ``bound`` is the aggregate Albers–Quedenfeld guarantee (2d / d·e/(e−1)).
+
+    Deferral cells (v3) carry ``slack`` (slots of deferral granted),
+    ``rule`` (queue dispatch rule), the latency statistics ``max_delay`` /
+    ``p99_delay`` (worst per-trace values, in slots) and
+    ``deadline_misses`` (total expired units over the batch), plus the
+    SLO verdict ``slo_ok``: True iff no unit missed its deadline and the
+    p99 queueing delay stayed within the granted slack.  All None on
+    rigid cells.
     """
 
     policy: str
@@ -69,6 +85,12 @@ class CellResult:
     group_mean_cr: list[float] | None = None
     group_bound: list[float] | None = None
     group_bound_ok: list[bool] | None = None
+    slack: int | None = None
+    rule: str | None = None
+    max_delay: int | None = None
+    p99_delay: int | None = None
+    deadline_misses: int | None = None
+    slo_ok: bool | None = None
 
 
 @dataclasses.dataclass
@@ -86,9 +108,12 @@ class EvalReport:
     @property
     def bounds_ok(self) -> bool:
         """True iff every cell's empirical CR respects its paper bound —
-        including, on typed cells, every per-server-type verdict."""
+        including, on typed cells, every per-server-type verdict, and on
+        deferral cells the latency-SLO verdict."""
         return all(
-            c.bound_ok and (c.group_bound_ok is None or all(c.group_bound_ok))
+            c.bound_ok
+            and (c.group_bound_ok is None or all(c.group_bound_ok))
+            and (c.slo_ok is None or c.slo_ok)
             for c in self.cells
         )
 
@@ -97,6 +122,7 @@ class EvalReport:
             c for c in self.cells
             if not c.bound_ok
             or (c.group_bound_ok is not None and not all(c.group_bound_ok))
+            or (c.slo_ok is not None and not c.slo_ok)
         ]
 
     def threshold(self, c: CellResult) -> float | None:
@@ -139,12 +165,13 @@ class EvalReport:
 
     @classmethod
     def from_dict(cls, d: dict) -> "EvalReport":
-        # v1 artifacts load as-is: the v2 fields are all defaulted, so a v1
-        # cell dict simply leaves them None (back-compat contract)
-        if d.get("schema") not in (SCHEMA, SCHEMA_V1):
+        # v1/v2 artifacts load as-is: the newer fields are all defaulted,
+        # so an older cell dict simply leaves them None (back-compat
+        # contract)
+        if d.get("schema") not in (SCHEMA, SCHEMA_V2, SCHEMA_V1):
             raise ValueError(
                 f"report schema {d.get('schema')!r} != expected {SCHEMA!r} "
-                f"(or the readable {SCHEMA_V1!r})"
+                f"(or the readable {SCHEMA_V2!r} / {SCHEMA_V1!r})"
             )
         return cls(
             grid=d["grid"],
@@ -177,5 +204,11 @@ class EvalReport:
                     zip(c.group_names, c.group_mean_cr, c.group_bound_ok)
                 )
                 line += f",types[{per_type}]"
+            if c.slo_ok is not None:
+                line += (
+                    f",defer[{c.rule} slack={c.slack} p99={c.p99_delay} "
+                    f"miss={c.deadline_misses} "
+                    f"{'slo_ok' if c.slo_ok else 'SLO_VIOLATED'}]"
+                )
             lines.append(line)
         return lines

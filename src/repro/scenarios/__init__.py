@@ -7,13 +7,17 @@ families ship registered (``msr_diurnal``, ``sinusoidal``, ``flash_crowd``,
 ``step_outage``, ``heavy_tail_bursts``, ``replay``); each yields
 deterministic ``(B, T)`` demand batches at a target peak-to-mean ratio, and
 :func:`make_workload` bridges straight into a ``Workload`` with an optional
-prediction-noise sweep.  ``repro.eval`` runs the full grid.
+prediction-noise sweep and/or a deferral spec.  :func:`mix` and
+:func:`concat` combine registered families into composite scenarios
+(weighted overlay / timeline splice).  ``repro.eval`` runs the full grid.
 """
 from .registry import (
     Scenario,
+    concat,
     generate,
     get_generator,
     make_workload,
+    mix,
     register_scenario,
     scenario_names,
 )
@@ -35,9 +39,11 @@ __all__ = [
     "DEFAULT_SCENARIOS",
     "SAMPLE_TRACE_PATH",
     "Scenario",
+    "concat",
     "generate",
     "get_generator",
     "make_workload",
+    "mix",
     "register_scenario",
     "scenario_names",
 ]

@@ -170,6 +170,145 @@ def generate(scenario: Scenario, n_traces: int, n_slots: int) -> np.ndarray:
     return out
 
 
+def _component_trace(comp: Scenario, rng: np.random.Generator,
+                     n_slots: int) -> np.ndarray:
+    """One component's *float* trace for a combinator: the component's own
+    generator, ``target_pmr`` and ``mean_jobs`` applied in the continuous
+    domain (no rounding — the outer :func:`generate` pipeline quantizes
+    once, after combination).  The component draws from a child stream
+    seeded off the combinator's ``rng``, so the whole composite stays a
+    deterministic function of ``(seed, trace_index)``."""
+    fn = get_generator(comp.name)
+    child = np.random.default_rng(rng.integers(2**63))
+    a = np.asarray(fn(child, n_slots, **comp.params), np.float64)
+    if comp.target_pmr is not None:
+        a = scale_to_pmr(a, float(comp.target_pmr))
+    mean = a.mean()
+    if mean > 0:
+        a = a / mean * comp.mean_jobs
+    return a
+
+
+def _check_components(components) -> tuple:
+    components = tuple(components)
+    if not components:
+        raise ValueError("need at least one component scenario")
+    bad = [c for c in components if not isinstance(c, Scenario)]
+    if bad:
+        raise ValueError(f"components must be Scenario instances, got {bad}")
+    return components
+
+
+@register_scenario("mix")
+def _mix_generator(rng, n_slots, *, components, weights=None) -> np.ndarray:
+    """Overlay: the weighted sum of the component traces — e.g. a diurnal
+    base carrying heavy-tail burst traffic on top."""
+    components = _check_components(components)
+    if weights is None:
+        weights = (1.0,) * len(components)
+    weights = np.asarray(weights, np.float64)
+    if weights.shape != (len(components),) or (weights < 0).any() \
+            or weights.sum() <= 0:
+        raise ValueError(
+            f"weights must be {len(components)} non-negative numbers with a "
+            f"positive sum, got {weights}"
+        )
+    out = np.zeros(n_slots, np.float64)
+    for w, comp in zip(weights, components):
+        out += w * _component_trace(comp, rng, n_slots)
+    return out
+
+
+@register_scenario("concat")
+def _concat_generator(rng, n_slots, *, components, fractions=None) -> np.ndarray:
+    """Splice: the timeline divided among the components — e.g. a sinusoidal
+    week that turns into a flash crowd for its last quarter.  ``fractions``
+    are relative segment lengths (default equal); every segment gets at
+    least one slot and the last absorbs the rounding remainder."""
+    components = _check_components(components)
+    if fractions is None:
+        fractions = (1.0,) * len(components)
+    fractions = np.asarray(fractions, np.float64)
+    if fractions.shape != (len(components),) or (fractions <= 0).any():
+        raise ValueError(
+            f"fractions must be {len(components)} positive numbers, "
+            f"got {fractions}"
+        )
+    if n_slots < len(components):
+        raise ValueError(
+            f"cannot splice {len(components)} components into {n_slots} slots"
+        )
+    bounds = np.rint(
+        np.cumsum(fractions) / fractions.sum() * n_slots
+    ).astype(np.int64)
+    bounds[-1] = n_slots
+    # every segment gets >= 1 slot even under aggressive rounding
+    for i in range(1, len(bounds)):
+        bounds[i] = max(bounds[i], bounds[i - 1] + 1)
+    starts = np.concatenate([[0], bounds[:-1]])
+    return np.concatenate([
+        _component_trace(comp, rng, int(hi - lo))
+        for comp, lo, hi in zip(components, starts, bounds)
+    ])
+
+
+def mix(
+    *components: Scenario,
+    weights=None,
+    seed: int = 0,
+    target_pmr: float | None = None,
+    mean_jobs: float = 32.0,
+) -> Scenario:
+    """Overlay combinator: one :class:`Scenario` whose traces are the
+    weighted sum of the component scenarios' (continuous) traces.
+
+    Each component applies its own ``target_pmr``/``mean_jobs`` before the
+    weighting, so the weights are in units of the components' means; the
+    outer ``target_pmr``/``mean_jobs`` then rescale the composite through
+    the standard :func:`generate` pipeline.  The result composes everywhere
+    a built-in scenario does — ``generate``, ``make_workload``, eval grids.
+    """
+    return Scenario(
+        "mix",
+        params={
+            "components": _check_components(components),
+            "weights": None if weights is None
+            else tuple(float(w) for w in weights),
+        },
+        seed=seed,
+        target_pmr=target_pmr,
+        mean_jobs=mean_jobs,
+    )
+
+
+def concat(
+    *components: Scenario,
+    fractions=None,
+    seed: int = 0,
+    target_pmr: float | None = None,
+    mean_jobs: float = 32.0,
+) -> Scenario:
+    """Splice combinator: one :class:`Scenario` whose timeline is divided
+    among the components in ``fractions`` (default: equal shares).
+
+    Segment ``j`` is the ``j``-th component's trace generated at the
+    segment's length (its own ``target_pmr``/``mean_jobs`` applied in the
+    continuous domain); the outer knobs rescale the composite afterwards,
+    exactly like :func:`mix`.
+    """
+    return Scenario(
+        "concat",
+        params={
+            "components": _check_components(components),
+            "fractions": None if fractions is None
+            else tuple(float(f) for f in fractions),
+        },
+        seed=seed,
+        target_pmr=target_pmr,
+        mean_jobs=mean_jobs,
+    )
+
+
 def make_workload(
     scenario: Scenario,
     n_traces: int,
@@ -178,6 +317,7 @@ def make_workload(
     noise_std=None,
     noise_key=None,
     clip_to: int | None = None,
+    deferral=None,
 ):
     """A ready :class:`~repro.core.provision.Workload` for one scenario.
 
@@ -189,9 +329,14 @@ def make_workload(
     ``jax.random.key(scenario.seed)``.  ``clip_to``: cap demand at a fleet
     capacity (typed fleets pin theirs via ``CostModel.n_levels`` — a
     scenario's peak may exceed it, and provisioning requires
-    ``demand <= n_levels``).  A single trace (``n_traces=1``) still yields
-    a ``(1, n_slots)`` batch — index ``demand[0]`` if you want the
-    unbatched convention.
+    ``demand <= n_levels``).  ``deferral``: optional
+    :class:`~repro.deferral.DeferralSpec` attached to the workload; with
+    both ``deferral`` and ``clip_to`` set the demand is *not* hard-clipped
+    — the cap becomes the deferral spec's service ceiling, so displaced
+    work re-enters the backlog (work conservation) instead of being
+    silently dropped.  A single trace (``n_traces=1``) still yields a
+    ``(1, n_slots)`` batch — index ``demand[0]`` if you want the unbatched
+    convention.
     """
     import jax
     import jax.numpy as jnp
@@ -202,11 +347,16 @@ def make_workload(
     if clip_to is not None:
         if clip_to < 1:
             raise ValueError(f"clip_to={clip_to} must be >= 1")
-        raw = np.minimum(raw, clip_to)
+        if deferral is not None:
+            cap = clip_to if deferral.cap is None else min(deferral.cap,
+                                                          clip_to)
+            deferral = dataclasses.replace(deferral, cap=cap)
+        else:
+            raw = np.minimum(raw, clip_to)
     demand = jnp.asarray(raw, jnp.int32)
     noise = None
     if noise_std is not None:
         if noise_key is None:
             noise_key = jax.random.key(scenario.seed)
         noise = PredictionNoise(std_frac=noise_std, key=noise_key)
-    return Workload(demand=demand, noise=noise)
+    return Workload(demand=demand, noise=noise, deferral=deferral)

@@ -225,6 +225,14 @@ class FleetProvisioner:
     pinned capacity, ``plan(...).group_cost`` breaks the spend down per
     replica type, and the Albers–Quedenfeld ``AQ-det``/``AQ-rand`` policies
     become available alongside the paper's A1/A2/A3.
+
+    ``deferral=`` (a :class:`repro.deferral.DeferralSpec`) marks the
+    sessions as deferrable: the planner water-fills arrivals within their
+    slack before provisioning, so bursts are absorbed by the queue instead
+    of replica toggles, and every plan carries queue metrics
+    (``plan(...).p99_delay`` etc.).  The spec's service cap defaults to the
+    fleet size — demand above ``max_replicas`` re-enters the backlog
+    rather than being rejected.
     """
 
     def __init__(
@@ -236,6 +244,7 @@ class FleetProvisioner:
         key=None,
         mesh=None,
         mesh_axis: str = "data",
+        deferral=None,
     ):
         from repro.core import PolicySpec
 
@@ -264,6 +273,13 @@ class FleetProvisioner:
         self.max_replicas = int(max_replicas)
         self.mesh = mesh
         self.mesh_axis = mesh_axis
+        if deferral is not None:
+            if deferral.cap is None:
+                deferral = dataclasses.replace(deferral, cap=self.max_replicas)
+            deferral.validate()
+        self.deferral = deferral
+        self._history = np.zeros(0, np.int64)
+        self.last_plan = None
 
     def _spec(self, demand, predicted=None, windows=None):
         import dataclasses as _dc
@@ -278,6 +294,7 @@ class FleetProvisioner:
             workload=Workload(
                 demand=self._as_i32(demand),
                 predicted=None if predicted is None else self._as_i32(predicted),
+                deferral=self.deferral,
             ),
             policy=policy,
             n_levels=self.max_replicas,
@@ -309,12 +326,43 @@ class FleetProvisioner:
 
         return np.asarray(provision(self._spec(demand, windows=windows)).cost)
 
+    def advance(self, demand_chunk) -> np.ndarray:
+        """Absorb the next chunk of per-slot demand; return its replica plan.
+
+        A planning-window stepper for operating loops: each call appends
+        ``demand_chunk`` (shape ``(T_chunk,)``) to the planner's demand
+        history, re-plans over a trailing window wide enough to warm the
+        chunk's decisions (a few Δ of context plus the deferral slack
+        bound, so ski-rental clocks and queued backlog carry in), stores
+        the full :class:`ProvisionResult` on ``self.last_plan``, and
+        returns the ``(T_chunk,)`` slice of ``x`` covering the new slots.
+        This is deliberately plan-ahead, not the streaming kernel: earlier
+        slots may be re-decided as context grows, which is exactly what an
+        operator wants from a rolling capacity plan.
+        """
+        chunk = np.asarray(demand_chunk, np.int64)
+        if chunk.ndim != 1:
+            raise ValueError(
+                f"advance() steps one fleet: demand_chunk must be (T,), "
+                f"got shape {chunk.shape}"
+            )
+        if chunk.size == 0:
+            raise ValueError("advance() needs at least one demand slot")
+        self._history = np.concatenate([self._history, chunk])
+        slack = 0 if self.deferral is None else self.deferral.bound()
+        context = 3 * self.costs.delta_slots() + slack
+        window = self._history[-(chunk.size + context):]
+        self.last_plan = self.plan(window)
+        return np.asarray(self.last_plan.x)[-chunk.size:]
+
     def _as_i32(self, demand):
         import jax.numpy as jnp
 
         a = jnp.asarray(np.asarray(demand), jnp.int32)
         peak = int(np.asarray(demand).max())
-        if peak > self.max_replicas:
+        if peak > self.max_replicas and self.deferral is None:
+            # with a deferral spec the service cap (== the fleet size by
+            # default) absorbs the excess into the backlog instead
             raise ValueError(f"demand peak {peak} exceeds max_replicas {self.max_replicas}")
         return a
 

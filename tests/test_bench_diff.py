@@ -96,4 +96,50 @@ def test_checked_in_baseline_self_diffs_clean():
     assert report.schema == SCHEMA
     assert any(c.group_mean_cr is not None for c in report.cells), (
         "checked-in benchmark lost its multi-type cells")
+    dcells = [c for c in report.cells if c.slack is not None]
+    assert len(dcells) >= 4, "checked-in benchmark lost its deferral cells"
+    assert all(c.slo_ok for c in dcells)
     assert not diff_reports(report, report).regressed
+
+
+# ---------------------------------------------------------------------------
+# v3: deferral coordinates in the cell key, slo_ok flips, p99 drift
+# ---------------------------------------------------------------------------
+
+def test_deferral_coordinates_key_distinct_cells():
+    rigid = _cell()
+    soft = _cell(slack=4, rule="EDF", p99_delay=2, deadline_misses=0,
+                 slo_ok=True)
+    assert cell_key(rigid) != cell_key(soft)
+    assert cell_key(rigid)[4:] == (None, None)      # pre-v3 keys unchanged
+    d = diff_reports(_report([rigid, soft]), _report([rigid, soft]))
+    assert not d.regressed and d.n_common == 2
+
+
+def test_slo_verdict_flip_regresses():
+    ok = _cell(slack=4, rule="EDF", p99_delay=2, slo_ok=True)
+    bad = _cell(slack=4, rule="EDF", p99_delay=9, slo_ok=False)
+    d = diff_reports(_report([ok]), _report([bad]))
+    assert d.regressed and len(d.flipped) == 1
+    back = diff_reports(_report([bad]), _report([ok]))
+    assert not back.regressed and len(back.unflipped) == 1
+
+
+def test_p99_drift_is_informational():
+    old = _cell(slack=6, rule="EDF", p99_delay=2, slo_ok=True)
+    new = _cell(slack=6, rule="EDF", p99_delay=5, slo_ok=True)
+    d = diff_reports(_report([old]), _report([new]))
+    assert not d.regressed
+    assert d.latency_drift == [(cell_key(old), 2, 5)]
+    assert any("p99 delay drift" in line for line in d.lines())
+
+
+def test_v2_baseline_diffs_cleanly_against_v3():
+    """A pre-deferral baseline (no slack columns) gains deferral cells as
+    'added' — informational, exit 0."""
+    v2_base = _report([_cell()])
+    v3_new = _report([_cell(), _cell(slack=4, rule="EDF", slo_ok=True)])
+    d = diff_reports(v2_base, v3_new)
+    assert not d.regressed
+    assert len(d.added) == 1 and d.n_common == 1
+    assert "defer[EDF slack=4]" in d.lines()[1]

@@ -1,0 +1,388 @@
+"""Slack-aware deferral: the water-filling transform's conservation laws,
+the queueing accounting, the rigid fixed point (slack 0 bit-exact through
+provision() on both engine routes), caps, the spec sweep axes, and the
+serving planner's deferral mode.
+
+The laws are written as ``check_*`` functions and driven two ways: a
+seeded numpy sweep that always runs, and hypothesis ``@given`` wrappers
+over the same checks when hypothesis is installed (the container CI image
+may lack it — the laws must not silently vanish with it)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    PAPER_COSTS,
+    DeferralSpec,
+    PolicySpec,
+    ProvisionSpec,
+    Workload,
+    provision,
+)
+from repro.deferral import RULES, defer_demand, due_envelope, queue_scan
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _cum(a):
+    return np.cumsum(np.asarray(a, np.int64))
+
+
+def _rand_trace(rng, n=None):
+    n = n or int(rng.integers(8, 49))
+    burst = (rng.random(n) < 0.08) * rng.integers(10, 25)
+    return jnp.asarray(rng.poisson(rng.uniform(2, 12), n) + burst, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the laws
+# ---------------------------------------------------------------------------
+
+def check_defer_conservation_causality_deadlines(a, slack):
+    d = np.asarray(defer_demand(a, slack))
+    assert (d >= 0).all()
+    assert d.sum() == int(np.asarray(a).sum())              # conservation
+    assert (_cum(d) <= _cum(a)).all()                       # causality
+    # due_envelope is already cumulative: L(t) = work due by slot t
+    assert (_cum(d) >= np.asarray(due_envelope(a, slack))).all()  # feasibility
+
+
+def check_defer_never_roughens(a, slack):
+    """Deferral only makes the provisioning game easier: the peak and the
+    total variation of the deferred profile never exceed the raw trace's."""
+    a_np = np.asarray(a, np.int64)
+    d = np.asarray(defer_demand(a, slack), np.int64)
+    assert d.max() <= a_np.max()
+    assert np.abs(np.diff(d, prepend=0)).sum() \
+        <= np.abs(np.diff(a_np, prepend=0)).sum()
+
+
+def check_zero_slack_identity(a):
+    np.testing.assert_array_equal(np.asarray(defer_demand(a, 0)),
+                                  np.asarray(a))
+
+
+def check_peak_monotone_in_slack(a, slack):
+    lo = np.asarray(defer_demand(a, slack - 1), np.int64)
+    hi = np.asarray(defer_demand(a, slack), np.int64)
+    assert hi.max() <= lo.max()
+
+
+def check_feasible_cap_conserves(a, slack):
+    """A cap at the raw peak is always feasible; the deferred profile still
+    conserves work and respects the ceiling."""
+    cap = max(int(np.asarray(a).max()), 1)
+    d = np.asarray(defer_demand(a, slack, cap=cap), np.int64)
+    assert d.max() <= cap
+    assert d.sum() == int(np.asarray(a).sum())
+
+
+def check_queue_accounting_closes(a, x, slack):
+    """served + unserved == total arrivals, under every dispatch rule, even
+    against an adversarial (unrelated) schedule."""
+    n = min(a.shape[0], x.shape[0])
+    a, x = a[:n], x[:n]
+    for rule in RULES:
+        m = queue_scan(a, x, slack, rule=rule, max_slack=6)
+        assert int(m["served_by_age"].sum()) + int(m["unserved"]) \
+            == int(np.asarray(a).sum())
+        assert int(m["backlog"][-1]) == int(m["unserved"])
+        assert (np.asarray(m["backlog"]) >= 0).all()
+
+
+def check_edf_serves_within_slack(a, slack):
+    """Provisioning exactly the deferred profile and dispatching EDF meets
+    every deadline: zero misses, zero unserved, max delay <= slack."""
+    x = defer_demand(a, slack)
+    m = queue_scan(a, x, slack, rule="EDF", max_slack=6)
+    assert int(m["deadline_misses"]) == 0
+    assert int(m["unserved"]) == 0
+    assert int(m["max_delay"]) <= slack
+    assert int(m["p99_delay"]) <= int(m["max_delay"])
+
+
+def check_edf_dominates_fifo(a, x, slack):
+    """Earliest-deadline-first is deadline-optimal among work-conserving
+    rules: on any (arrivals, schedule) pair it misses no more than FIFO."""
+    n = min(a.shape[0], x.shape[0])
+    a, x = a[:n], x[:n]
+    edf = queue_scan(a, x, slack, rule="EDF", max_slack=6)
+    fifo = queue_scan(a, x, slack, rule="FIFO", max_slack=6)
+    assert int(edf["deadline_misses"]) <= int(fifo["deadline_misses"])
+
+
+# ---------------------------------------------------------------------------
+# seeded sweep: always runs, hypothesis or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_deferral_laws_seeded_sweep(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(8):
+        a = _rand_trace(rng)
+        x = _rand_trace(rng, n=a.shape[0])
+        slack = int(rng.integers(0, 7))
+        check_defer_conservation_causality_deadlines(a, slack)
+        check_defer_never_roughens(a, slack)
+        check_zero_slack_identity(a)
+        check_peak_monotone_in_slack(a, max(slack, 1))
+        check_feasible_cap_conserves(a, max(slack, 1))
+        check_queue_accounting_closes(a, x, slack)
+        check_edf_serves_within_slack(a, slack)
+        check_edf_dominates_fifo(a, x, slack)
+
+
+if HAVE_HYPOTHESIS:
+    traces = st.lists(st.integers(0, 30), min_size=8, max_size=48).map(
+        lambda v: jnp.asarray(v, jnp.int32)
+    )
+    slacks = st.integers(0, 6)
+
+    @settings(max_examples=50, deadline=None)
+    @given(traces, slacks)
+    def test_defer_demand_laws_hypothesis(a, slack):
+        check_defer_conservation_causality_deadlines(a, slack)
+        check_defer_never_roughens(a, slack)
+        check_feasible_cap_conserves(a, max(slack, 1))
+        if slack:
+            check_peak_monotone_in_slack(a, slack)
+
+    @settings(max_examples=40, deadline=None)
+    @given(traces, traces, slacks)
+    def test_queue_scan_laws_hypothesis(a, x, slack):
+        check_queue_accounting_closes(a, x, slack)
+        check_edf_serves_within_slack(a, slack)
+        check_edf_dominates_fifo(a, x, slack)
+
+
+def test_due_envelope_shifts_and_clips():
+    a = jnp.asarray([3, 0, 5, 0, 0, 2], jnp.int32)
+    # slack 2: arrivals become due two slots later, horizon-clipped
+    L = np.asarray(due_envelope(a, 2))
+    np.testing.assert_array_equal(L, np.cumsum([0, 0, 3, 0, 5, 2]))
+    np.testing.assert_array_equal(np.asarray(due_envelope(a, 0)), _cum(a))
+
+
+def test_infeasible_cap_is_best_effort_not_silent():
+    """A cap below the long-run mean cannot serve everything: the transform
+    saturates the cap and the shortfall is visible, never fabricated."""
+    a = jnp.asarray([10] * 20, jnp.int32)
+    d = np.asarray(defer_demand(a, 4, cap=5), np.int64)
+    assert d.max() <= 5
+    assert d.sum() == 5 * 20                   # every capped slot saturated
+    assert d.sum() < int(np.asarray(a).sum())  # the deficit is explicit
+
+
+def test_queue_scan_rejects_bad_rule():
+    a = jnp.zeros(8, jnp.int32)
+    with pytest.raises(ValueError, match="rule"):
+        queue_scan(a, a, 2, rule="LIFO", max_slack=4)
+
+
+# ---------------------------------------------------------------------------
+# DeferralSpec: validation, sweep axes, tracer contract
+# ---------------------------------------------------------------------------
+
+def test_spec_validation_names_the_field():
+    with pytest.raises(ValueError, match="rule"):
+        DeferralSpec(slack=2, rule="LIFO").validate()
+    with pytest.raises(ValueError, match="slack"):
+        DeferralSpec(slack=-1).validate()
+    with pytest.raises(ValueError, match="cap"):
+        DeferralSpec(slack=2, cap=0).validate()
+    DeferralSpec(slack=2, rule="SPT", cap=3).validate()
+
+
+def test_spec_bound_needs_max_slack_for_tracers():
+    assert DeferralSpec(slack=4).bound() == 4
+    assert DeferralSpec(slack=jnp.asarray([0, 2, 5])).bound() == 5
+    assert DeferralSpec(slack=2, max_slack=8).bound() == 8
+
+    def f(s):
+        return DeferralSpec(slack=s).bound()
+
+    with pytest.raises(ValueError, match="max_slack"):
+        jax.jit(f)(3)
+
+
+def test_spec_per_slot_slack_and_sweep_metrics():
+    """slack may be per-slot (heterogeneous deadlines); metrics broadcast
+    the true arrivals against any (..., B, T) capacity sweep grid.
+
+    The zero-miss guarantee needs *monotone effective deadlines*
+    (t + slack[t] non-decreasing, i.e. later work never jumps the queue);
+    non-monotone slack is still measured honestly, just without the
+    feasibility promise (the prefix envelope is not Hall's condition)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.poisson(10, (3, 48)), jnp.int32)
+    slack_t = jnp.asarray(([5, 4, 3, 2, 1, 0, 0, 3] * 6)[:48], jnp.int32)
+    assert (np.diff(np.arange(48) + np.asarray(slack_t)) >= 0).all()
+    spec = DeferralSpec(slack=slack_t).validate()
+    d = spec.apply(a)
+    assert d.shape == a.shape
+    np.testing.assert_array_equal(
+        np.asarray(d).sum(-1), np.asarray(a).sum(-1))    # conserved per row
+    # a sweep-shaped capacity grid keeps its leading axes on every metric
+    x = jnp.broadcast_to(d, (2,) + d.shape)
+    m = spec.metrics(a, x)
+    assert m["p99_delay"].shape == (2, 3)
+    assert m["backlog"].shape == (2, 3, 48)
+    assert int(np.asarray(m["deadline_misses"]).sum()) == 0
+    with pytest.raises(ValueError, match="scalar or a"):
+        DeferralSpec(slack=jnp.zeros((2, 2), jnp.int32)).validate()
+    with pytest.raises(ValueError, match="48"):
+        DeferralSpec(slack=jnp.zeros(7, jnp.int32)).apply(a)
+
+
+def test_slack_values_share_one_compiled_transform():
+    """slack is pytree data: re-running the transform at a new slack value
+    (same shapes, same static cap) must hit the jit cache."""
+    from repro.deferral.queue_scan import defer_demand as _jitted
+
+    if not hasattr(_jitted, "_cache_size"):    # private JAX API; skip if gone
+        pytest.skip("no _cache_size API")
+    a = _demand()
+    jax.block_until_ready(DeferralSpec(slack=2).apply(a))  # warm
+    before = _jitted._cache_size()
+    for slack in (3, 5, jnp.full(96, 4, jnp.int32)):
+        jax.block_until_ready(DeferralSpec(slack=slack).apply(a))
+    assert _jitted._cache_size() == before
+
+
+# ---------------------------------------------------------------------------
+# provision(): the rigid fixed point and the defer-then-provision route
+# ---------------------------------------------------------------------------
+
+def _spec(a, deferral=None, mesh=None):
+    return ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=a, deferral=deferral),
+        policy=PolicySpec("A1", window=2),
+        n_levels=40,
+        mesh=mesh,
+    )
+
+
+def _demand(b=None, t=96, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (t,) if b is None else (b, t)
+    base = rng.poisson(12, shape) + (rng.random(shape) < 0.06) * 20
+    return jnp.asarray(np.minimum(base, 39), jnp.int32)
+
+
+@pytest.mark.parametrize("use_mesh", [False, True], ids=["lax_scan", "mesh"])
+def test_zero_slack_is_bit_exact_with_rigid(use_mesh):
+    """DeferralSpec(slack=0) must be indistinguishable from no deferral at
+    all — every result leaf, on the lax.scan AND the Pallas fleet route —
+    so leaving deferral wired in can never perturb rigid results."""
+    a = _demand()
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",)) if use_mesh else None
+    rigid = provision(_spec(a, mesh=mesh))
+    soft = provision(_spec(a, deferral=DeferralSpec(slack=0), mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(rigid.x), np.asarray(soft.x))
+    np.testing.assert_array_equal(np.asarray(rigid.cost), np.asarray(soft.cost))
+    np.testing.assert_array_equal(np.asarray(rigid.level_cost),
+                                  np.asarray(soft.level_cost))
+    # the queue columns exist on the deferred result and report a clean SLO
+    assert rigid.p99_delay is None
+    assert int(soft.p99_delay) == 0 and int(soft.deadline_misses) == 0
+
+
+def test_deferred_mesh_matches_lax_scan():
+    a = _demand(b=2)
+    d = DeferralSpec(slack=4)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    plain = provision(_spec(a, deferral=d))
+    meshed = provision(_spec(a, deferral=d, mesh=mesh))
+    np.testing.assert_array_equal(np.asarray(plain.x), np.asarray(meshed.x))
+    np.testing.assert_array_equal(np.asarray(plain.p99_delay),
+                                  np.asarray(meshed.p99_delay))
+
+
+def test_slack_cuts_cost_and_reports_latency():
+    a = _demand()
+    costs, p99s = [], []
+    for slack in (0, 2, 6):
+        res = provision(_spec(a, deferral=DeferralSpec(slack=slack,
+                                                       max_slack=6)))
+        assert int(res.deadline_misses) == 0 and int(res.unserved) == 0
+        assert int(res.p99_delay) <= slack
+        costs.append(float(res.cost))
+        p99s.append(int(res.p99_delay))
+    assert costs[-1] <= costs[0]               # slack buys cost off
+    assert costs[1] <= costs[0]
+    assert p99s[0] == 0
+
+
+def test_deferred_sweep_axes_compose():
+    """The deferral transform rides the (S, W, B) sweep axes like any other
+    workload feature: queue metrics get the same leading axes as cost."""
+    from repro.core import PredictionNoise
+
+    a = _demand(b=3)
+    spec = ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(
+            demand=a,
+            noise=PredictionNoise(jnp.asarray([0.0, 0.2]), jax.random.key(0)),
+            deferral=DeferralSpec(slack=3),
+        ),
+        policy=PolicySpec("A1", windows=jnp.arange(2)),
+        n_levels=40,
+    )
+    res = provision(spec)
+    assert res.x.shape == (2, 2, 3, 96)
+    assert res.cost.shape == (2, 2, 3)
+    assert res.p99_delay.shape == (2, 2, 3)
+    assert res.backlog.shape == (2, 2, 3, 96)
+
+
+# ---------------------------------------------------------------------------
+# FleetProvisioner: planner-level deferral + the rolling advance() stepper
+# ---------------------------------------------------------------------------
+
+def test_planner_deferral_absorbs_over_peak_demand():
+    from repro.core import CostModel
+    from repro.serving import FleetProvisioner
+
+    costs = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+    a = np.asarray(_demand())
+    big = a.copy()
+    big[5] = 80                                # above the 64-replica fleet
+    rigid = FleetProvisioner(costs, policy="A1", max_replicas=64)
+    with pytest.raises(ValueError, match="exceeds max_replicas"):
+        rigid.plan(big)
+    soft = FleetProvisioner(costs, policy="A1", max_replicas=64,
+                            deferral=DeferralSpec(slack=4))
+    assert soft.deferral.cap == 64             # cap defaults to the fleet
+    res = soft.plan(big)
+    assert int(np.asarray(res.x).max()) <= 64
+    assert int(res.unserved) == 0
+
+    # zero slack through the planner is the rigid plan, bit-exact
+    zero = FleetProvisioner(costs, policy="A1", max_replicas=64,
+                            deferral=DeferralSpec(slack=0))
+    np.testing.assert_array_equal(np.asarray(zero.plan(a).x),
+                                  np.asarray(rigid.plan(a).x))
+
+
+def test_planner_advance_steps_chunks():
+    from repro.core import CostModel
+    from repro.serving import FleetProvisioner
+
+    costs = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
+    a = np.asarray(_demand())
+    p = FleetProvisioner(costs, policy="A1", max_replicas=64,
+                         deferral=DeferralSpec(slack=4))
+    xs = [p.advance(a[i:i + 32]) for i in range(0, 96, 32)]
+    assert [x.shape for x in xs] == [(32,)] * 3
+    assert p._history.shape == (96,)
+    assert p.last_plan is not None and int(p.last_plan.deadline_misses) == 0
+    with pytest.raises(ValueError, match="one fleet"):
+        p.advance(a.reshape(2, 48))

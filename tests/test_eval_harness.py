@@ -328,3 +328,110 @@ def test_typed_grid_validation():
             TYPED_SMALL, typed_policies=("A1",)))
     with pytest.raises(ValueError, match="ServerGroup"):
         evaluate(dataclasses.replace(TYPED_SMALL, typed_groups=()))
+
+
+# ---------------------------------------------------------------------------
+# Deferral cells (EvalGrid.deferral_slacks) + v2 artifact back-compat
+# ---------------------------------------------------------------------------
+
+from repro.eval import SCHEMA_V2  # noqa: E402
+
+DEFER_SMALL = dataclasses.replace(SMALL, deferral_slacks=(0, 2, 5))
+
+
+@pytest.fixture(scope="module")
+def defer_report():
+    return evaluate(DEFER_SMALL)
+
+
+def test_deferral_cells_cover_the_slack_sweep(defer_report):
+    dcells = [c for c in defer_report.cells if c.slack is not None]
+    keys = {(c.policy, c.scenario, c.slack) for c in dcells}
+    assert keys == {
+        (p, s, k)
+        for p in DEFER_SMALL.deferral_policies
+        for s in defer_report.grid["scenario_labels"]
+        for k in DEFER_SMALL.deferral_slacks
+    }
+    for c in dcells:
+        assert c.rule == "EDF"
+        assert c.noise_std == 0.0 and c.window == 0
+        assert c.p99_delay is not None and c.max_delay is not None
+        assert c.p99_delay <= c.max_delay <= c.slack
+        assert c.deadline_misses == 0
+        assert c.slo_ok
+        assert c.bound_ok            # the CR bound still applies
+
+
+def test_deferral_rigid_cells_ride_along_unchanged(defer_report, report):
+    """Adding the deferral axis must not perturb the plain grid's cells."""
+    rigid = [c for c in defer_report.cells if c.slack is None]
+    assert rigid == report.cells
+
+
+def test_deferral_slack_buys_cost_off(defer_report):
+    by_ps = {}
+    for c in defer_report.cells:
+        if c.slack is not None:
+            by_ps.setdefault((c.policy, c.scenario), []).append(c)
+    for cs in by_ps.values():
+        cs = sorted(cs, key=lambda c: c.slack)
+        assert cs[-1].mean_cost <= cs[0].mean_cost
+        # slack 0 IS the rigid engine on this scenario's traces
+        assert cs[0].p99_delay == 0
+
+
+def test_deferral_report_round_trips_v3(tmp_path, defer_report):
+    assert SCHEMA.endswith("/v3")
+    p = defer_report.save(tmp_path / "defer.json")
+    loaded = EvalReport.load(p)
+    assert loaded.cells == defer_report.cells
+    assert loaded.grid["deferral_slacks"] == [0, 2, 5]
+    assert loaded.grid["deferral_rule"] == "EDF"
+    assert loaded.bounds_ok
+
+
+def test_deferral_slo_violation_fails_the_report(defer_report):
+    broken_idx = next(i for i, c in enumerate(defer_report.cells)
+                      if c.slack is not None)
+    broken = dataclasses.replace(defer_report.cells[broken_idx], slo_ok=False)
+    cells = list(defer_report.cells)
+    cells[broken_idx] = broken
+    rep = dataclasses.replace(defer_report, cells=cells)
+    assert not rep.bounds_ok
+    assert broken in rep.violations()
+
+
+def test_v2_artifact_still_loads(tmp_path, defer_report):
+    """A checked-in v2 report (no deferral columns) must load: the v3
+    fields come back None, verdicts unchanged."""
+    d = defer_report.to_dict()
+    d["schema"] = SCHEMA_V2
+    v3_only = ("slack", "rule", "max_delay", "p99_delay",
+               "deadline_misses", "slo_ok")
+    for c in d["cells"]:
+        for k in v3_only:
+            del c[k]
+    for k in ("deferral_slacks", "deferral_rule", "deferral_policies"):
+        d["grid"].pop(k, None)
+    p = tmp_path / "v2.json"
+    p.write_text(json.dumps(d))
+    loaded = EvalReport.load(p)
+    assert loaded.schema == SCHEMA_V2
+    assert len(loaded.cells) == len(defer_report.cells)
+    for got in loaded.cells:
+        assert got.slack is None and got.slo_ok is None
+    assert loaded.bounds_ok          # missing slo_ok never fails a verdict
+
+
+def test_deferral_grid_validation():
+    with pytest.raises(ValueError, match="deferral_slacks"):
+        evaluate(dataclasses.replace(SMALL, deferral_slacks=(-1,)))
+    with pytest.raises(ValueError, match="deferral_slacks"):
+        evaluate(dataclasses.replace(SMALL, deferral_slacks=()))
+    with pytest.raises(ValueError, match="deferral_rule"):
+        evaluate(dataclasses.replace(
+            SMALL, deferral_slacks=(0,), deferral_rule="LIFO"))
+    with pytest.raises(ValueError, match="deferral_policies"):
+        evaluate(dataclasses.replace(
+            SMALL, deferral_slacks=(0,), deferral_policies=("offline",)))

@@ -20,8 +20,10 @@ from repro.scenarios import (
     DEFAULT_SCENARIOS,
     SAMPLE_TRACE_PATH,
     Scenario,
+    concat,
     generate,
     make_workload,
+    mix,
     register_scenario,
     scenario_names,
 )
@@ -29,10 +31,11 @@ from repro.scenarios import (
 N_SLOTS = 288
 BUILTIN = ("flash_crowd", "heavy_tail_bursts", "msr_diurnal", "replay",
            "sinusoidal", "step_outage")
+COMBINATORS = ("concat", "mix")
 
 
 def test_registry_has_the_builtin_bank():
-    assert scenario_names() == BUILTIN
+    assert scenario_names() == tuple(sorted(BUILTIN + COMBINATORS))
     assert {sc.name for sc in DEFAULT_SCENARIOS} == set(BUILTIN)
 
 
@@ -209,3 +212,102 @@ def test_a2_empirical_cr_respects_the_paper_bound(name):
         alpha = min(1.0, (window + 1) / float(PAPER_COSTS.delta))
         mean_cr = float(jnp.mean(cost / opt))
         assert mean_cr <= theoretical_ratio("A2", alpha) + 0.05, (name, window)
+
+
+# ---------------------------------------------------------------------------
+# Combinators: mix (weighted overlay) and concat (timeline splice)
+# ---------------------------------------------------------------------------
+
+MIX = mix(
+    Scenario("msr_diurnal", target_pmr=3.0),
+    Scenario("heavy_tail_bursts", target_pmr=8.0, mean_jobs=8.0),
+    weights=(0.7, 0.3), seed=5, target_pmr=4.0,
+)
+CONCAT = concat(
+    Scenario("sinusoidal", target_pmr=3.0),
+    Scenario("flash_crowd", target_pmr=6.0),
+    fractions=(0.75, 0.25), seed=5, target_pmr=4.0,
+)
+
+
+@pytest.mark.parametrize("sc", [MIX, CONCAT], ids=["mix", "concat"])
+def test_combinators_are_deterministic_and_prefix_stable(sc):
+    a = generate(sc, 4, N_SLOTS)
+    np.testing.assert_array_equal(a, generate(sc, 4, N_SLOTS))
+    assert a.shape == (4, N_SLOTS) and a.dtype == np.int64 and (a >= 0).all()
+    # growing the batch keeps its prefix (the CRN contract composites share)
+    np.testing.assert_array_equal(generate(sc, 8, N_SLOTS)[:4], a)
+
+
+@pytest.mark.parametrize("sc", [MIX, CONCAT], ids=["mix", "concat"])
+def test_combinators_hit_the_outer_pmr_target(sc):
+    from repro.scenarios.registry import PMR_TOL
+
+    for row in generate(sc, 3, N_SLOTS):
+        assert abs(pmr(row) - 4.0) / 4.0 <= PMR_TOL + 1e-9, pmr(row)
+        assert row.mean() == pytest.approx(32.0, rel=0.06)
+
+
+def test_mix_weights_actually_weight():
+    """An all-weight-on-one mix equals generating that component alone
+    through the composite pipeline (same child stream, weight 1)."""
+    lone = mix(Scenario("sinusoidal", target_pmr=3.0), seed=7, target_pmr=3.0)
+    pair = mix(Scenario("sinusoidal", target_pmr=3.0),
+               Scenario("flash_crowd", target_pmr=6.0),
+               weights=(1.0, 0.0), seed=7, target_pmr=3.0)
+    # not array-equal (the second child stream is still drawn), but the
+    # zero-weighted component must not contribute load: both are pure
+    # sinusoids, so the distinguishing flash-crowd spikes are absent
+    a, b = generate(lone, 2, N_SLOTS), generate(pair, 2, N_SLOTS)
+    assert pmr(a[0]) == pytest.approx(pmr(b[0]), rel=0.1)
+
+
+def test_concat_splices_the_timeline():
+    """The concat trace's segments carry their components' character: the
+    flash-crowd tail contains the composite's peak slots."""
+    (row,) = generate(CONCAT, 1, N_SLOTS)
+    split = int(round(0.75 * N_SLOTS))
+    assert row[split:].max() > row[:split].max()
+
+
+def test_combinator_validation():
+    with pytest.raises(ValueError, match="at least one component"):
+        mix()
+    with pytest.raises(ValueError, match="Scenario instances"):
+        mix("sinusoidal")  # type: ignore[arg-type]
+    with pytest.raises(ValueError, match="weights"):
+        generate(mix(Scenario("sinusoidal"), weights=(0.5, 0.5)), 1, N_SLOTS)
+    with pytest.raises(ValueError, match="fractions"):
+        generate(concat(Scenario("sinusoidal"), fractions=(0.4, 0.6)),
+                 1, N_SLOTS)
+
+
+# ---------------------------------------------------------------------------
+# The deferral bridge: clip_to + DeferralSpec queues instead of truncating
+# ---------------------------------------------------------------------------
+
+def test_make_workload_defers_instead_of_clipping():
+    """With a DeferralSpec, clip_to becomes the service cap: demand is NOT
+    truncated, over-capacity arrivals queue, and (at a feasible cap) the
+    deferred profile conserves every job the raw trace carried."""
+    from repro.core import DeferralSpec
+
+    sc = Scenario("msr_diurnal", seed=4, target_pmr=3.0, mean_jobs=32.0)
+    full = make_workload(sc, 2, N_SLOTS)
+    cap = 80                                  # feasible: well above the mean
+    assert int(np.asarray(full.demand).max()) > cap
+    wl = make_workload(sc, 2, N_SLOTS, clip_to=cap,
+                       deferral=DeferralSpec(slack=8))
+    # demand is the raw trace, the cap moved into the spec
+    np.testing.assert_array_equal(np.asarray(wl.demand),
+                                  np.asarray(full.demand))
+    assert wl.deferral.cap == cap
+    deferred = np.asarray(wl.deferral.validate().apply(wl.demand))
+    assert int(deferred.max()) <= cap
+    # conservation: clipping would have dropped this work
+    np.testing.assert_array_equal(deferred.sum(axis=-1),
+                                  np.asarray(full.demand).sum(axis=-1))
+    # an explicit tighter spec cap is respected (min wins)
+    tighter = make_workload(sc, 2, N_SLOTS, clip_to=cap,
+                            deferral=DeferralSpec(slack=8, cap=cap - 10))
+    assert tighter.deferral.cap == cap - 10
