@@ -15,14 +15,15 @@ flag
   deferral latency ``slo_ok`` true → false) — a paper guarantee or
   latency SLO newly violated.
 
-New cells, CR improvements, verdicts flipping false → true, and
-``p99_delay`` drift (reported per cell) are informational only.  Exit
+New cells, CR improvements, verdicts flipping false → true, ``p99_delay``
+drift, and per-cell ``wall_ms`` drift beyond ``--wall-tol`` (v4's runtime
+column — machine-dependent, so never gated) are informational only.  Exit
 status 1 on any regression, 0 otherwise::
 
     PYTHONPATH=src python benchmarks/bench_diff.py baseline.json new.json
 
-Loads via :class:`repro.eval.report.EvalReport`, so a v1/v2 baseline
-diffs cleanly against a v3 report (older cells just lack the newer
+Loads via :class:`repro.eval.report.EvalReport`, so a v1/v2/v3 baseline
+diffs cleanly against a v4 report (older cells just lack the newer
 columns, which the diff treats as absent rather than changed).
 """
 from __future__ import annotations
@@ -37,6 +38,10 @@ from repro.eval.report import CellResult
 
 #: default tolerance on mean-CR drift before it counts as a regression
 DEFAULT_TOL = 1e-6
+
+#: default relative wall_ms drift before a cell is even mentioned (25% —
+#: wall clocks are noisy and machine-dependent; this is informational only)
+DEFAULT_WALL_TOL = 0.25
 
 
 def cell_key(c: CellResult) -> tuple:
@@ -93,6 +98,9 @@ class BenchDiff:
     latency_drift: list[tuple[tuple, int, int]] = dataclasses.field(
         default_factory=list
     )                                                  # (key, old_p99, new_p99)
+    wall_drift: list[tuple[tuple, float, float]] = dataclasses.field(
+        default_factory=list
+    )                                                  # (key, old_ms, new_ms)
     n_common: int = 0
 
     @property
@@ -120,13 +128,22 @@ class BenchDiff:
             out.append(f"bound verdict recovered: {_fmt_key(k)}")
         for k, old, new in self.latency_drift:
             out.append(f"p99 delay drift: {_fmt_key(k)}: {old} -> {new}")
+        for k, old, new in self.wall_drift:
+            out.append(
+                f"wall_ms drift (informational): {_fmt_key(k)}: "
+                f"{old:.1f} -> {new:.1f} ({(new - old) / old:+.0%})"
+            )
         return out
 
 
 def diff_reports(
-    baseline: EvalReport, new: EvalReport, tol: float = DEFAULT_TOL
+    baseline: EvalReport,
+    new: EvalReport,
+    tol: float = DEFAULT_TOL,
+    wall_tol: float = DEFAULT_WALL_TOL,
 ) -> BenchDiff:
-    """Compare two reports; ``tol`` is the allowed mean-CR increase."""
+    """Compare two reports; ``tol`` is the allowed mean-CR increase and
+    ``wall_tol`` the relative wall_ms change worth mentioning."""
     old_cells = {cell_key(c): c for c in baseline.cells}
     new_cells = {cell_key(c): c for c in new.cells}
     if len(old_cells) != len(baseline.cells):
@@ -158,6 +175,13 @@ def diff_reports(
             and o.p99_delay != n.p99_delay
         ):
             diff.latency_drift.append((k, o.p99_delay, n.p99_delay))
+        if (
+            o.wall_ms is not None
+            and n.wall_ms is not None
+            and o.wall_ms > 0
+            and abs(n.wall_ms - o.wall_ms) / o.wall_ms > wall_tol
+        ):
+            diff.wall_drift.append((k, o.wall_ms, n.wall_ms))
     return diff
 
 
@@ -170,10 +194,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
                     help="allowed mean-CR increase per cell "
                          f"(default {DEFAULT_TOL:g})")
+    ap.add_argument("--wall-tol", type=float, default=DEFAULT_WALL_TOL,
+                    help="relative wall_ms drift worth reporting, never gated "
+                         f"(default {DEFAULT_WALL_TOL:g})")
     args = ap.parse_args(argv)
 
     diff = diff_reports(
-        EvalReport.load(args.baseline), EvalReport.load(args.new), tol=args.tol
+        EvalReport.load(args.baseline), EvalReport.load(args.new),
+        tol=args.tol, wall_tol=args.wall_tol,
     )
     for line in diff.lines():
         print(line)

@@ -6,6 +6,15 @@ repo's provisioning-quality trajectory (CI uploads it per commit).
 
     PYTHONPATH=src python benchmarks/cr_eval.py --smoke   # CI leg, ~30 s
     PYTHONPATH=src python benchmarks/cr_eval.py           # full grid
+    PYTHONPATH=src python benchmarks/cr_eval.py --profile /tmp/prof
+
+The smoke leg also runs under a live :mod:`repro.obs.telemetry` registry
+and drops two sidecar artifacts next to the report (CI uploads all three):
+``BENCH_provision.trace.json`` — a Chrome trace of the harness spans +
+compile events, viewable at https://ui.perfetto.dev — and
+``BENCH_provision.metrics.jsonl`` — the counters/gauges/histogram
+summaries, one JSON record per line.  ``--profile DIR`` additionally wraps
+the run in ``jax.profiler.trace``.
 
 Both legs hard-fail if any (policy, scenario, noise, α) cell's empirical CR
 violates its paper bound beyond the grid tolerance, or if re-running the
@@ -28,6 +37,13 @@ import sys
 
 from repro.core import ServerGroup
 from repro.eval import EvalGrid, EvalReport, evaluate
+from repro.obs import (
+    CompileWatcher,
+    Telemetry,
+    install_monitoring,
+    profile_to,
+    telemetry_session,
+)
 from repro.scenarios import Scenario
 
 #: the benchmark's heterogeneous fleet: two server generations (Albers–
@@ -79,23 +95,20 @@ def mesh_smoke() -> None:
         n_slots=144,
     )
     plain = evaluate(grid)
-    counted = hasattr(_sharded_grid, "_cache_size")
-    before = _sharded_grid._cache_size() if counted else -1
-    meshed = evaluate(dataclasses.replace(
-        grid, mesh=jax.make_mesh((len(jax.devices()),), ("data",))
-    ))
+    with CompileWatcher(fns=(_sharded_grid,)) as watch:
+        meshed = evaluate(dataclasses.replace(
+            grid, mesh=jax.make_mesh((len(jax.devices()),), ("data",))
+        ))
     if meshed.cells != plain.cells:
         raise AssertionError(
             "mesh-path eval cells diverge from the lax.scan path: the "
             "Pallas fleet engine is supposed to be bit-exact"
         )
-    if counted:
-        grew = _sharded_grid._cache_size() - before
-        if grew != 1:
-            raise AssertionError(
-                f"mesh-path eval compiled {grew} _sharded_grid program(s) "
-                "for one (policy, scenario) block — expected exactly 1"
-            )
+    if watch.added >= 0 and watch.added != 1:   # -1: private cache API gone
+        raise AssertionError(
+            f"mesh-path eval compiled {watch.added} _sharded_grid program(s) "
+            "for one (policy, scenario) block — expected exactly 1"
+        )
     print(
         f"# mesh smoke: {len(meshed.cells)} cells bit-exact through the "
         "fleet path, 1 sharded compile", file=sys.stderr,
@@ -182,6 +195,32 @@ def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True) -> EvalRepor
     return report
 
 
+def write_telemetry_artifacts(tel: Telemetry, out: pathlib.Path) -> None:
+    """Drop the Chrome trace + metrics JSONL next to the report and assert
+    both load back (the trace must be Perfetto-openable: a ``traceEvents``
+    list with at least the harness's eval spans in it)."""
+    import json
+
+    trace_path = out.with_name(out.stem + ".trace.json")
+    metrics_path = out.with_name(out.stem + ".metrics.jsonl")
+    tel.write_chrome_trace(trace_path)
+    tel.write_metrics_jsonl(metrics_path)
+    loaded = json.loads(trace_path.read_text())
+    events = loaded.get("traceEvents")
+    if not isinstance(events, list) or not any(
+        e.get("name", "").startswith("eval/") for e in events
+    ):
+        raise AssertionError(
+            f"{trace_path} is not a loadable Chrome trace with eval spans"
+        )
+    records = [json.loads(line) for line in
+               metrics_path.read_text().splitlines() if line]
+    if not any(r.get("name", "").startswith("span/eval/") for r in records):
+        raise AssertionError(f"{metrics_path} is missing the eval span metrics")
+    print(f"# wrote {trace_path} ({len(events)} events) and "
+          f"{metrics_path} ({len(records)} records)", file=sys.stderr)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -189,11 +228,17 @@ def main() -> int:
     ap.add_argument("--out", type=pathlib.Path,
                     default=pathlib.Path(__file__).parent.parent / "BENCH_provision.json",
                     help="report path (default: repo-root BENCH_provision.json)")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="write a jax.profiler trace of the run to DIR")
     args = ap.parse_args()
 
+    install_monitoring()
+    with telemetry_session() as tel, profile_to(args.profile):
+        if args.smoke:
+            mesh_smoke()
+        report = run(SMOKE_GRID if args.smoke else FULL_GRID, args.out)
     if args.smoke:
-        mesh_smoke()
-    report = run(SMOKE_GRID if args.smoke else FULL_GRID, args.out)
+        write_telemetry_artifacts(tel, args.out)
     for line in report.summary_lines():
         print(line)
     worst = report.worst(1)[0]

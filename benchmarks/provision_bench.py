@@ -9,9 +9,14 @@ Run standalone for the CI smoke leg:
 
 The smoke run uses small shapes and additionally asserts that re-pricing a
 fleet (new CostModel values, same shapes/policy) does NOT grow the engine's
-jit cache — the spec's cost fields are pytree data, not compile keys — and
-that one mesh-path (S, W, B) grid cell compiles exactly one `_sharded_grid`
-program (none on a warmed re-run).
+jit cache — the spec's cost fields are pytree data, not compile keys — that
+one mesh-path (S, W, B) grid cell compiles exactly one `_sharded_grid`
+program (none on a warmed re-run), and that the observability layer keeps
+its zero-overhead contract (`telemetry_overhead` row: a live telemetry
+registry adds 0 compiles to the warmed default path, and
+``record_decisions=True`` leaves the schedule bit-exact).
+
+``--profile DIR`` wraps the run in ``jax.profiler.trace``.
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ from repro.core import (
 )
 from repro.core.ski_rental import A1Deterministic
 from repro.kernels.provision_scan import provision_scan
+from repro.obs import CompileWatcher, profile_to, telemetry_session
 
 COSTS = CostModel(P=1.0, beta_on=3.0, beta_off=3.0)
 DELTA = int(COSTS.delta)
@@ -218,16 +224,18 @@ def mesh_grid_compile_gate(rows: list[str], n_levels=48, n_slots=168) -> None:
     and a warmed re-run must add nothing — mirroring the `_run` guard."""
     from repro.core.jax_provision import _sharded_grid
 
-    if not hasattr(_sharded_grid, "_cache_size"):  # private JAX API; skip if gone
+    watch = CompileWatcher(fns=(_sharded_grid,))
+    if not watch.available:           # private JAX API; skip if gone
         rows.append("mesh_grid_compiles,0.0,skipped=no_cache_size_api")
         return
     mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     spec = _mesh_grid_spec(n_levels, 2, 2, 2, n_slots, mesh)
-    before = _sharded_grid._cache_size()
-    jax.block_until_ready(provision(spec).cost)
-    cold = _sharded_grid._cache_size() - before
-    jax.block_until_ready(provision(spec).cost)      # warmed re-run
-    warm = _sharded_grid._cache_size() - before - cold
+    with watch:
+        jax.block_until_ready(provision(spec).cost)
+    cold = watch.added
+    with watch:
+        jax.block_until_ready(provision(spec).cost)  # warmed re-run
+    warm = watch.added
     assert cold == 1, f"mesh grid program compiled {cold} times, expected 1"
     assert warm == 0, f"warmed mesh re-run recompiled {warm} program(s)"
     rows.append(f"mesh_grid_compiles,0.0,cold={cold};warm_added={warm}")
@@ -293,18 +301,51 @@ def jit_cache_reuse(rows: list[str]) -> None:
     """
     from repro.core.jax_provision import _run
 
-    if not hasattr(_run, "_cache_size"):      # private JAX API; skip if gone
+    watch = CompileWatcher(fns=(_run,))
+    if not watch.available:                   # private JAX API; skip if gone
         rows.append("jit_cache_repricing,0.0,skipped=no_cache_size_api")
         return
     a = _trace(32, n_slots=160)
-    before = _run._cache_size()
     # vary the price point but keep ceil(max Delta) fixed (it IS a shape key)
-    for beta in (2.6, 2.75, 2.9, 3.0):
-        spec = _spec(a, 32, costs=CostModel(P=1.0, beta_on=beta, beta_off=beta))
-        jax.block_until_ready(provision(spec).cost)
-    grew = _run._cache_size() - before
+    with watch:
+        for beta in (2.6, 2.75, 2.9, 3.0):
+            spec = _spec(a, 32, costs=CostModel(P=1.0, beta_on=beta, beta_off=beta))
+            jax.block_until_ready(provision(spec).cost)
+    grew = watch.added
     assert grew <= 1, f"jit cache grew by {grew} entries across re-pricings"
     rows.append(f"jit_cache_repricing,0.0,entries_added={grew}")
+
+
+def telemetry_overhead(rows: list[str]) -> None:
+    """The observability layer's zero-overhead contract, as a smoke gate.
+
+    With a live telemetry registry installed, re-running the warmed default
+    path must add 0 compiled programs (spans are host-side; ``record`` is a
+    static jit arg that defaults off, so the default jaxpr is unchanged) —
+    and turning ``record_decisions=True`` on must leave the schedule
+    bit-exact (provenance is extra scan outputs, never a decision input).
+    """
+    from repro.core.jax_provision import _run
+
+    a = _trace(32, n_slots=160)
+    spec = _spec(a, 32)
+    base = np.asarray(jax.block_until_ready(provision(spec).x))   # warm
+    with telemetry_session():
+        with CompileWatcher(fns=(_run,)) as watch:
+            lit = np.asarray(jax.block_until_ready(provision(spec).x))
+    assert (lit == base).all(), "telemetry changed the schedule"
+    assert watch.added <= 0, (
+        f"telemetry added {watch.added} compile(s) to the warmed default path"
+    )
+    rec = provision(spec, record_decisions=True)
+    assert np.array_equal(np.asarray(rec.x), base), (
+        "record_decisions=True changed the schedule"
+    )
+    assert rec.decisions is not None
+    rows.append(
+        f"telemetry_overhead,0.0,extra_compiles={max(watch.added, 0)};"
+        "record_bitexact=1"
+    )
 
 
 def run(rows: list[str]) -> None:
@@ -318,11 +359,13 @@ def run(rows: list[str]) -> None:
     brick_simulator_throughput(rows)
     jit_cache_reuse(rows)
     mesh_grid_compile_gate(rows)
+    telemetry_overhead(rows)
 
 
 def run_smoke(rows: list[str]) -> None:
     """CI leg: small shapes, every code path, plus the jit-cache assertions
-    (re-pricing must not recompile; the mesh grid compiles exactly once)."""
+    (re-pricing must not recompile; the mesh grid compiles exactly once;
+    telemetry adds zero compiles to the disabled path)."""
     jax_provisioner_throughput(rows, sizes=(64,))
     batched_sweep_throughput(rows, n_levels=32, n_traces=4)
     heterogeneous_throughput(rows, n_levels=32)
@@ -333,15 +376,19 @@ def run_smoke(rows: list[str]) -> None:
     deferral_cost_vs_slack(rows, n_levels=32, slacks=(0, 4))
     jit_cache_reuse(rows)
     mesh_grid_compile_gate(rows)
+    telemetry_overhead(rows)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes + jit-cache assertion (CI)")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="write a jax.profiler trace of the run to DIR")
     args = ap.parse_args()
     rows: list[str] = []
-    (run_smoke if args.smoke else run)(rows)
+    with profile_to(args.profile):
+        (run_smoke if args.smoke else run)(rows)
     print("name,us_per_call,derived")
     for r in rows:
         print(r)

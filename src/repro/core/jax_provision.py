@@ -60,6 +60,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..obs import provenance as _prov
+
 E = math.e
 
 POLICIES = ("A1", "A2", "A3", "offline", "delayedoff", "AQ-det", "AQ-rand")
@@ -125,7 +127,8 @@ def _waits_from_uniforms(policy, u0, u, window, delta):
 # The per-level slot scan (all online policies)
 # ---------------------------------------------------------------------------
 
-def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None):
+def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None,
+                    record=False):
     """(T, N) bool on-matrix via one lax.scan over slots.
 
     ``delta`` is a scalar or per-level ``(N,)`` array of critical intervals;
@@ -134,6 +137,12 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
     or a traced scalar (the α-sweep vmaps over it).  ``waits``: (T, N)
     sampled thresholds for A2/A3; the entry at ``[t, l]`` is consumed iff
     level ``l`` becomes newly idle in slot ``t``.
+
+    ``record=True`` (a python-time switch: the default trace is unchanged)
+    additionally emits per-slot decision provenance and returns
+    ``(ons, codes)`` with ``codes`` (T, N) uint8 — the
+    :mod:`repro.obs.provenance` reason bitmask (demand-rise / wait-expired /
+    peek-fired / toggle-off) for every (slot, level).
     """
     T = a.shape[0]
     n = levels.shape[0]
@@ -151,6 +160,8 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
     def step(carry, t):
         r, on, wait = carry                            # (N,) f32, bool, f32
         busy = a[t] > levels
+        if record:
+            rise = busy & ~on                          # dispatcher turn-on edge
         on = on | busy                                 # dispatcher turn-on
         r = jnp.where(busy, 0.0, r)
         idle = on & ~busy
@@ -161,9 +172,18 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
         seen = (
             (fut[None, :] > levels[:, None]) & (hslots[None, :] < horizon[:, None])
         ).any(axis=1)
-        off_now = idle & (r - 1.0 >= wait) & ~seen
+        expired = idle & (r - 1.0 >= wait)
+        off_now = expired & ~seen
         on = on & ~off_now
         r = jnp.where(off_now, 0.0, r)
+        if record:
+            codes = (
+                rise.astype(jnp.uint8) * _prov.DEMAND_RISE
+                + expired.astype(jnp.uint8) * _prov.WAIT_EXPIRED
+                + (expired & seen).astype(jnp.uint8) * _prov.PEEK_FIRED
+                + off_now.astype(jnp.uint8) * _prov.TOGGLE_OFF
+            )
+            return (r, on, wait), (on, codes)
         return (r, on, wait), on
 
     init = (
@@ -171,8 +191,8 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
         a[0] > levels,                                  # x(0) = a(0)
         m_static if waits is None else jnp.zeros((n,), jnp.float32),
     )
-    (_, _, _), ons = jax.lax.scan(step, init, jnp.arange(T))
-    return ons
+    (_, _, _), out = jax.lax.scan(step, init, jnp.arange(T))
+    return out
 
 
 def _offline_levels(a, n_levels, delta):
@@ -265,9 +285,10 @@ def on_matrix_cost(a, on_matrix, costs):
 # The one engine body: (windows × traces × levels) in a single program
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy"))
+@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy",
+                                             "record"))
 def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
-         n_levels, max_h, policy):
+         n_levels, max_h, policy, record=False):
     """Shared engine body behind :func:`repro.core.provision.provision`.
 
     ``ab``/``predb``: (B, T) int32; ``windows``: (W,); ``delta``/cost
@@ -275,14 +296,29 @@ def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
     of ``x`` (W, B, T) int32 and per-level cost terms (W, B, N) float32.
     The cost model enters as pytree *data*, so re-pricing a fleet reuses
     the compiled program — only (policy, shapes) are compile keys.
+
+    ``record=True`` (static) adds ``decisions`` (W, B, T, N) uint8 — the
+    per-slot :mod:`repro.obs.provenance` reason bitmask — to the dict; the
+    default trace is byte-for-byte today's program.  ``offline`` has no slot
+    scan, hence nothing to record (rejected in ``provision``).
     """
+    if record and policy == "offline":
+        raise ValueError("record=True: offline has no slot scan to record")
     B, T = ab.shape
     levels = jnp.arange(n_levels)
 
-    def reduce(ai, ons):
+    def reduce(ai, ons, codes=None):
         out = _cost_terms(ai, ons, P_lv, beta_on_lv, beta_off_lv)
         out["x"] = ons.sum(axis=1).astype(jnp.int32)
+        if record:
+            out["decisions"] = codes
         return out
+
+    def scan(ai, pi, w, waits):
+        res = _on_matrix_scan(ai, pi, levels, delta=delta, max_h=max_h,
+                              window=w, policy=policy, waits=waits,
+                              record=record)
+        return res if record else (res, None)
 
     if policy in WINDOW_FREE:
         # window-independent policies: compute once, broadcast over the sweep
@@ -295,16 +331,14 @@ def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
 
         def one(ai, pi, u0i, ui):
             if policy == "offline":
-                ons = _offline_levels(ai, n_levels, delta)
-            else:
-                waits = (
-                    _waits_from_uniforms(policy, u0i, ui, 0, delta)
-                    if policy == "AQ-rand"
-                    else None
-                )
-                ons = _on_matrix_scan(ai, pi, levels, delta=delta, max_h=max_h,
-                                      window=0, policy=policy, waits=waits)
-            return reduce(ai, ons)
+                return reduce(ai, _offline_levels(ai, n_levels, delta))
+            waits = (
+                _waits_from_uniforms(policy, u0i, ui, 0, delta)
+                if policy == "AQ-rand"
+                else None
+            )
+            ons, codes = scan(ai, pi, 0, waits)
+            return reduce(ai, ons, codes)
 
         out = jax.vmap(one)(ab, predb, u0, u)
         return jax.tree.map(
@@ -323,20 +357,18 @@ def _run(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys, *,
                 if policy in RANDOMIZED
                 else None
             )
-            ons = _on_matrix_scan(
-                ai, pi, levels, delta=delta, max_h=max_h, window=w,
-                policy=policy, waits=waits,
-            )
-            return reduce(ai, ons)
+            ons, codes = scan(ai, pi, w, waits)
+            return reduce(ai, ons, codes)
 
         return jax.vmap(per_trace)(ab, predb, u0, u)
 
     return jax.vmap(per_window)(windows)                 # each leaf (W, B, ...)
 
 
-@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy"))
+@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy",
+                                             "record"))
 def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
-                     keys, *, n_levels, max_h, policy):
+                     keys, *, n_levels, max_h, policy, record=False):
     """:func:`_run` vmapped over a leading (S,) predicted-trace axis — the
     ``PredictionNoise.std_frac`` sweep.  Demand, windows and keys are held
     fixed across the sweep (common random numbers).  A separate jitted
@@ -347,7 +379,7 @@ def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
     def one(predb_s):
         return _run(
             ab, predb_s, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys,
-            n_levels=n_levels, max_h=max_h, policy=policy,
+            n_levels=n_levels, max_h=max_h, policy=policy, record=record,
         )
 
     return jax.vmap(one)(predb)
@@ -359,7 +391,7 @@ def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
 
 def _sharded_run(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
                  beta_off_lv, *, n_levels, max_h, policy, keys=None,
-                 use_pallas=True, group_sizes=None):
+                 use_pallas=True, group_sizes=None, record=False):
     """Level-sharded engine over the full (S, W, B) sweep grid.
 
     ``ab``: (B, T) demand; ``predb``: (S, B, T) predicted traces (S = 1
@@ -404,7 +436,7 @@ def _sharded_run(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
         beta_on_lv, beta_off_lv, keys,
         mesh=mesh, axis=axis, n_levels=n_levels, max_h=max_h,
         h_unroll=h_unroll, policy=policy, use_pallas=use_pallas,
-        group_sizes=group_sizes,
+        group_sizes=group_sizes, record=record,
     )
 
 
@@ -447,10 +479,10 @@ def _group_layout(n_levels, group_sizes, size):
 
 @functools.partial(jax.jit, static_argnames=(
     "mesh", "axis", "n_levels", "max_h", "h_unroll", "policy", "use_pallas",
-    "group_sizes"))
+    "group_sizes", "record"))
 def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
                   keys, *, mesh, axis, n_levels, max_h, h_unroll, policy,
-                  use_pallas, group_sizes=None):
+                  use_pallas, group_sizes=None, record=False):
     """One device program for the sharded (S, W, B) grid.
 
     The demand/predicted traces and the per-cell wait tables are replicated
@@ -467,6 +499,13 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
     explicitly — the kernel's dispatcher compares demand against the routed
     id, not the storage position — so group padding never shifts the demand
     split and gathered outputs compact back to level order via ``sel``.
+
+    ``record=True`` (static) adds ``decision_counts`` (S, W, B, 4, N) int32
+    to the dict: aggregate per-level reason counters in
+    :data:`repro.obs.provenance.COUNT_ORDER` row order.  The fleet path
+    records *aggregates only* — streaming (G, T, N) uint8 codes out of the
+    kernel would dwarf the on-matrix itself; docs/observability.md spells
+    out the asymmetry with the lax.scan path's full per-slot codes.
     """
     from repro.kernels.provision_scan import provision_scan_grid
 
@@ -542,23 +581,33 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
 
     def local(a_rows, p_rows, ct, cp, cthr, chor, cw, thr_l, hor_l, b_l,
               Pp, bon, boff, route_l):
+        counts = None
         if use_pallas:
-            ons = provision_scan_grid(
+            out = provision_scan_grid(
                 a_rows, p_rows, thr_l, ct, cp, cthr, chor,
                 delta=max_h, horizon=h_unroll, routes=route_l,
-                level_horizon=hor_l,
+                level_horizon=hor_l, record=record,
             )                                          # (G, T, per_shard)
+            ons, counts = out if record else (out, None)
         else:
             def per_cell(bi, pi, ti, w):
                 waits = thr_l[ti] if policy in KEYED else None
                 return _on_matrix_scan(
                     a_rows[bi], p_rows[pi], route_l, delta=b_l, max_h=max_h,
-                    window=w, policy=policy, waits=waits,
+                    window=w, policy=policy, waits=waits, record=record,
                 )
-            ons = jax.vmap(per_cell)(ct, cp, cthr, cw)
+            if record:
+                ons, codes = jax.vmap(per_cell)(ct, cp, cthr, cw)
+                counts = jnp.stack(
+                    [((codes & bit) != 0).sum(axis=1) for bit in _prov.COUNT_BITS],
+                    axis=1,
+                ).astype(jnp.int32)                    # (G, 4, per_shard)
+            else:
+                ons = jax.vmap(per_cell)(ct, cp, cthr, cw)
         # pad lanes carry ROUTE_SENTINEL and can never turn on; the mask
         # keeps x(t) robust to any lane whose routed id fell off the fleet
-        ons = ons & (route_l < n_levels)[None, None, :]
+        lane_ok = route_l < n_levels
+        ons = ons & lane_ok[None, None, :]
         x = jax.lax.psum(ons.sum(axis=-1).astype(jnp.int32), axis)
         ons = ons.reshape(S, W, B, T, per_shard)
         a_swb = jnp.broadcast_to(a_rows[None, None], (S, W, B, T))
@@ -568,8 +617,17 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
             for k, v in terms.items()
         }
         terms["x"] = x.reshape(S, W, B, T)
+        if record:
+            counts = counts * lane_ok[None, None, :].astype(jnp.int32)
+            counts = counts.reshape(S, W, B, 4, per_shard)
+            terms["decision_counts"] = jax.lax.all_gather(
+                counts, axis, axis=4, tiled=True
+            )
         return terms
 
+    out_spec = {"x": P(), "energy": P(), "on_cost": P(), "off_cost": P()}
+    if record:
+        out_spec["decision_counts"] = P()
     cell_spec = (P(),) * 5
     fn = shard_map(
         local,
@@ -577,7 +635,7 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
         in_specs=(P(), P()) + cell_spec
         + (P(None, None, axis), P(None, axis), P(axis), P(axis), P(axis),
            P(axis), P(axis)),
-        out_specs={"x": P(), "energy": P(), "on_cost": P(), "off_cost": P()},
+        out_specs=out_spec,
         check_rep=False,    # no replication rule for pallas_call yet
     )
     out = fn(ab, pred_rows, cell_trace, cell_pred, cell_thr, cell_hor, cell_w,

@@ -39,6 +39,8 @@ from jax.sharding import Mesh
 from .costs import CostModel
 from . import jax_provision as _engine
 from ..deferral import DeferralSpec
+from ..obs import provenance as _prov
+from ..obs.telemetry import get_telemetry
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -208,6 +210,15 @@ class ProvisionResult:
     delay in slots over served units; ``deadline_misses`` (...) units that
     expired while queued; ``unserved`` (...) units left at the horizon
     (0 whenever the schedule covers the deferred profile).
+
+    ``provision(spec, record_decisions=True)`` fills the provenance pair
+    (both None by default): ``decisions`` (..., T, N) uint8 per-slot reason
+    bitmask (:mod:`repro.obs.provenance` — demand-rise / wait-expired /
+    peek-fired / toggle-off), and ``decision_counts``, a dict of the four
+    aggregate per-level counters (..., N) int32 keyed by
+    ``repro.obs.provenance.COUNT_ORDER`` names.  The sharded (mesh) route
+    records the aggregate counters only — ``decisions`` stays None there
+    (see docs/observability.md).
     """
 
     x: jax.Array
@@ -221,18 +232,21 @@ class ProvisionResult:
     p99_delay: jax.Array | None = None
     deadline_misses: jax.Array | None = None
     unserved: jax.Array | None = None
+    decisions: jax.Array | None = None
+    decision_counts: dict | None = None
 
 
 jax.tree_util.register_dataclass(
     ProvisionResult,
     data_fields=["x", "cost", "energy", "toggle_cost", "level_cost",
                  "group_cost", "backlog", "max_delay", "p99_delay",
-                 "deadline_misses", "unserved"],
+                 "deadline_misses", "unserved", "decisions",
+                 "decision_counts"],
     meta_fields=[],
 )
 
 
-def provision(spec: ProvisionSpec) -> ProvisionResult:
+def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> ProvisionResult:
     """Run a :class:`ProvisionSpec` end-to-end as one jitted device program.
 
     Subsumes the deprecated ``provision_schedule`` / ``provision_sweep`` /
@@ -241,8 +255,21 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
     axis, the α-sweep is ``PolicySpec.windows``, sharding is ``mesh=``.  The
     cost model's fields flow through jit as data, so re-pricing the fleet
     does not recompile; only (policy, shapes, Δ's static scan bound) do.
+
+    ``record_decisions=True`` fills ``ProvisionResult.decisions`` /
+    ``decision_counts`` with per-slot reason codes out of the slot scan
+    (:mod:`repro.obs.provenance`); it is a *static* switch — the default-off
+    path traces exactly today's program, bit-for-bit and compile-for-compile
+    (gated in ``provision_bench.py --smoke``).  Rejected for ``offline``,
+    which is a closed form with no slot scan to record.
     """
     pol = spec.policy.validate()
+    if record_decisions and pol.name == "offline":
+        raise ValueError(
+            "record_decisions=True: 'offline' is the closed-form hindsight "
+            "optimum — it has no slot scan, so there are no per-slot "
+            "decisions to record"
+        )
     a = jnp.asarray(spec.workload.demand, jnp.int32)
     if a.ndim not in (1, 2):
         raise ValueError(f"demand must be (T,) or (B, T), got shape {a.shape}")
@@ -310,43 +337,68 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
             pol.key[None] if squeeze_b else jax.random.split(pol.key, ab.shape[0])
         )
 
-    if spec.mesh is not None:
-        # the fleet path takes the same (S, W, B) grid as the lax.scan
-        # programs: normalize predb to (S, B, T) and squeeze the result
-        # back to the spec's axis convention below
-        predb3 = predb[None] if predb.ndim == 2 else predb
-        out = _engine._sharded_run(
-            spec.mesh, spec.mesh_axis, ab, predb3, windows, delta_lv, P_lv,
-            bon_lv, boff_lv, n_levels=n_levels, max_h=max_h,
-            policy=pol.name, keys=keys, use_pallas=spec.use_pallas,
-            group_sizes=spec.costs.group_sizes,
-        )
+    tel = get_telemetry()
+    route = "mesh" if spec.mesh is not None else "scan"
+    with tel.span("provision", policy=pol.name, route=route,
+                  n_levels=n_levels, record=record_decisions):
+        if spec.mesh is not None:
+            # the fleet path takes the same (S, W, B) grid as the lax.scan
+            # programs: normalize predb to (S, B, T) and squeeze the result
+            # back to the spec's axis convention below
+            predb3 = predb[None] if predb.ndim == 2 else predb
+            out = _engine._sharded_run(
+                spec.mesh, spec.mesh_axis, ab, predb3, windows, delta_lv, P_lv,
+                bon_lv, boff_lv, n_levels=n_levels, max_h=max_h,
+                policy=pol.name, keys=keys, use_pallas=spec.use_pallas,
+                group_sizes=spec.costs.group_sizes, record=record_decisions,
+            )
 
-        def _squeeze(o):
+            def _squeeze(o):
+                if squeeze_b:
+                    o = jnp.squeeze(o, axis=2)
+                if squeeze_w:
+                    o = jnp.squeeze(o, axis=1)
+                if squeeze_s:
+                    o = jnp.squeeze(o, axis=0)
+                return o
+
+            out = jax.tree.map(_squeeze, out)
+        else:
+            # noise sweep: the engine vmapped over the (S,) predicted axis
+            # with the demand, windows and keys held fixed — common random
+            # numbers across error levels, one compiled program for the
+            # whole (S, W, B) grid
+            body = _engine._run if squeeze_s else _engine._run_noise_sweep
+            out = body(
+                ab, predb, windows, delta_lv, P_lv, bon_lv, boff_lv, keys,
+                n_levels=n_levels, max_h=max_h, policy=pol.name,
+                record=record_decisions,
+            )
+            lead = 0 if squeeze_s else 1
             if squeeze_b:
-                o = jnp.squeeze(o, axis=2)
+                out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead + 1), out)
             if squeeze_w:
-                o = jnp.squeeze(o, axis=1)
-            if squeeze_s:
-                o = jnp.squeeze(o, axis=0)
-            return o
+                out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead), out)
 
-        out = jax.tree.map(_squeeze, out)
-    else:
-        # noise sweep: the engine vmapped over the (S,) predicted axis with
-        # the demand, windows and keys held fixed — common random numbers
-        # across error levels, one compiled program for the whole (S, W, B)
-        # grid
-        body = _engine._run if squeeze_s else _engine._run_noise_sweep
-        out = body(
-            ab, predb, windows, delta_lv, P_lv, bon_lv, boff_lv, keys,
-            n_levels=n_levels, max_h=max_h, policy=pol.name,
-        )
-        lead = 0 if squeeze_s else 1
-        if squeeze_b:
-            out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead + 1), out)
-        if squeeze_w:
-            out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead), out)
+    decisions = out.pop("decisions", None)
+    counts = None
+    if record_decisions:
+        if decisions is not None:
+            # lax.scan route: full per-slot codes; the aggregate counters
+            # are one reduction away (same rows the mesh route records)
+            counts = {
+                name: ((decisions & bit) != 0).sum(axis=-2).astype(jnp.int32)
+                for name, bit in zip(_prov.COUNT_ORDER, _prov.COUNT_BITS)
+            }
+        else:
+            rows = out.pop("decision_counts")       # (..., 4, N) int32
+            counts = {
+                name: rows[..., i, :]
+                for i, name in enumerate(_prov.COUNT_ORDER)
+            }
+        offs = counts["toggle_off"]
+        if tel.enabled and not isinstance(offs, jax.core.Tracer):
+            tel.count("provision/decision_toggle_offs", float(offs.sum()))
 
     level_cost = out["energy"] + out["on_cost"] + out["off_cost"]
     queue = (
@@ -367,4 +419,6 @@ def provision(spec: ProvisionSpec) -> ProvisionResult:
         p99_delay=queue.get("p99_delay"),
         deadline_misses=queue.get("deadline_misses"),
         unserved=queue.get("unserved"),
+        decisions=decisions,
+        decision_counts=counts,
     )

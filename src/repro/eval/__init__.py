@@ -11,6 +11,7 @@ from .report import (
     SCHEMA,
     SCHEMA_V1,
     SCHEMA_V2,
+    SCHEMA_V3,
     CellResult,
     EvalReport,
 )
@@ -20,6 +21,7 @@ __all__ = [
     "SCHEMA",
     "SCHEMA_V1",
     "SCHEMA_V2",
+    "SCHEMA_V3",
     "TYPED_POLICIES",
     "CellResult",
     "EvalGrid",

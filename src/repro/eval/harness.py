@@ -50,13 +50,10 @@ from repro.core import (
     theoretical_ratio,
 )
 from repro.deferral import RULES
-from repro.core.jax_provision import (
-    KEYED,
-    _run,
-    _run_noise_sweep,
-    _sharded_grid,
-)
+from repro.core.jax_provision import KEYED
 from repro.core.traces import WEEK_SLOTS
+from repro.obs.jaxwatch import CompileWatcher
+from repro.obs.telemetry import get_telemetry
 from repro.scenarios import DEFAULT_SCENARIOS, Scenario
 
 from .report import CR_QUANTILES, CellResult, EvalReport
@@ -180,17 +177,21 @@ class EvalGrid:
         return self
 
 
-def _engine_cache_size() -> int:
-    """Total compiled-program count across the engine entrypoints — the
-    offline/scalar path (``_run``), the noise-sweep path
-    (``_run_noise_sweep``) and the sharded fleet path (``_sharded_grid``),
-    each a distinct jitted function precisely so its compiles are
-    observable here.  Returns -1 if the private JAX cache API is gone."""
-    sizes = [getattr(f, "_cache_size", None)
-             for f in (_run, _run_noise_sweep, _sharded_grid)]
-    if any(s is None for s in sizes):
-        return -1
-    return sum(s() for s in sizes)
+def _timed(label: str, fn, **span_labels):
+    """Run ``fn`` under a telemetry span with compile accounting.
+
+    Returns ``(blocked result, wall_ms, compiles_added)`` — the per-cell
+    runtime-health pair the v4 report schema serializes.  One
+    :class:`~repro.obs.jaxwatch.CompileWatcher` region per call replaces
+    the hand-rolled ``_engine_cache_size`` delta this harness used to
+    carry; ``compiles_added`` is -1 when the cache API is unobservable.
+    """
+    with get_telemetry().span(label, **span_labels):
+        t0 = time.perf_counter()
+        with CompileWatcher() as w:
+            out = jax.block_until_ready(fn())
+        wall_ms = (time.perf_counter() - t0) * 1e3
+    return out, wall_ms, w.added
 
 
 def _bound(policy: str, alpha: float) -> float | None:
@@ -272,7 +273,7 @@ def _evaluate_typed(
         opt_group = np.asarray(jax.block_until_ready(opt_group), np.float64)
         opt = opt_group.sum(axis=-1)
         for pi, policy in enumerate(grid.typed_policies):
-            cost_group = provision(ProvisionSpec(
+            spec = ProvisionSpec(
                 costs=costs,
                 workload=Workload(demand=demand),
                 policy=PolicySpec(
@@ -286,8 +287,13 @@ def _evaluate_typed(
                 mesh=grid.mesh,
                 mesh_axis=grid.mesh_axis,
                 use_pallas=grid.use_pallas,
-            )).group_cost                               # (B, d)
-            cost_group = np.asarray(jax.block_until_ready(cost_group), np.float64)
+            )
+            cost_group, wall_ms, compiles = _timed(
+                "eval/typed_cell",
+                lambda: provision(spec).group_cost,     # (B, d)
+                policy=policy, scenario=label,
+            )
+            cost_group = np.asarray(cost_group, np.float64)
             cost = cost_group.sum(axis=-1)
             cr = cost / opt
             bound, per_type_bound = _typed_bounds(policy, d)
@@ -322,6 +328,8 @@ def _evaluate_typed(
                 group_bound_ok=[
                     bool(v <= per_type_bound + grid.tol) for v in group_cr
                 ],
+                wall_ms=wall_ms,
+                compiles=compiles,
             ))
     return cells, expected
 
@@ -358,7 +366,7 @@ def _evaluate_deferral(
             )).cost                                         # (B,)
             opt = np.asarray(jax.block_until_ready(opt), np.float64)
             for pi, policy in enumerate(grid.deferral_policies):
-                res = provision(ProvisionSpec(
+                spec = ProvisionSpec(
                     costs=grid.costs,
                     workload=Workload(demand=demand, deferral=dspec),
                     policy=PolicySpec(
@@ -375,10 +383,12 @@ def _evaluate_deferral(
                     mesh=grid.mesh,
                     mesh_axis=grid.mesh_axis,
                     use_pallas=grid.use_pallas,
-                ))
-                cost = np.asarray(
-                    jax.block_until_ready(res.cost), np.float64
-                )                                           # (B,)
+                )
+                res, wall_ms, compiles = _timed(
+                    "eval/deferral_cell", lambda: provision(spec),
+                    policy=policy, scenario=label, slack=slack,
+                )
+                cost = np.asarray(res.cost, np.float64)     # (B,)
                 cr = cost / opt
                 misses = int(np.asarray(res.deadline_misses).sum())
                 unserved = int(np.asarray(res.unserved).sum())
@@ -410,6 +420,8 @@ def _evaluate_deferral(
                     slo_ok=(
                         misses == 0 and unserved == 0 and p99 <= int(slack)
                     ),
+                    wall_ms=wall_ms,
+                    compiles=compiles,
                 ))
     return cells, len(set(grid.deferral_policies))
 
@@ -442,23 +454,28 @@ def evaluate(grid: EvalGrid) -> EvalReport:
     stds = jnp.asarray(grid.noise_stds, jnp.float32)
     windows = jnp.asarray(grid.windows, jnp.int32)
 
-    entries_before = _engine_cache_size()
+    watch = CompileWatcher()
+    entries_before = watch.snapshot()
 
     cells: list[CellResult] = []
     for si, (label, demand_np) in enumerate(zip(labels, demands)):
         demand = jnp.asarray(demand_np, jnp.int32)
-        opt = provision(ProvisionSpec(
-            costs=grid.costs,
-            workload=Workload(demand=demand),
-            policy=PolicySpec("offline"),
-            n_levels=n_levels,
-        )).cost                                             # (B,)
-        opt = np.asarray(jax.block_until_ready(opt), np.float64)
+        opt, _, _ = _timed(
+            "eval/offline_baseline",
+            lambda: provision(ProvisionSpec(
+                costs=grid.costs,
+                workload=Workload(demand=demand),
+                policy=PolicySpec("offline"),
+                n_levels=n_levels,
+            )).cost,                                        # (B,)
+            scenario=label,
+        )
+        opt = np.asarray(opt, np.float64)
         noise = PredictionNoise(
             std_frac=stds, key=jax.random.fold_in(jax.random.key(grid.seed + 1), si)
         )
         for pi, policy in enumerate(grid.policies):
-            cost = provision(ProvisionSpec(
+            spec = ProvisionSpec(
                 costs=grid.costs,
                 workload=Workload(demand=demand, noise=noise),
                 policy=PolicySpec(
@@ -474,8 +491,15 @@ def evaluate(grid: EvalGrid) -> EvalReport:
                 mesh=grid.mesh,
                 mesh_axis=grid.mesh_axis,
                 use_pallas=grid.use_pallas,
-            )).cost                                         # (S, W, B)
-            cost = np.asarray(jax.block_until_ready(cost), np.float64)
+            )
+            # the whole (S, W, B) block is one device program, so its cells
+            # share the block's runtime-health pair (documented on the v4
+            # schema: block totals, not per-cell splits)
+            cost, wall_ms, compiles = _timed(
+                "eval/policy_block", lambda: provision(spec).cost,
+                policy=policy, scenario=label,
+            )                                               # (S, W, B)
+            cost = np.asarray(cost, np.float64)
             cr = cost / opt[None, None, :]
             for s, std in enumerate(grid.noise_stds):
                 for w, window in enumerate(grid.windows):
@@ -503,6 +527,8 @@ def evaluate(grid: EvalGrid) -> EvalReport:
                         ),
                         p50_cr=quantiles[CR_QUANTILES.index(0.5)],
                         cr_quantiles=quantiles,
+                        wall_ms=wall_ms,
+                        compiles=compiles,
                     ))
 
     typed_cells, typed_compiles = _evaluate_typed(
@@ -515,7 +541,7 @@ def evaluate(grid: EvalGrid) -> EvalReport:
     )
     cells.extend(deferral_cells)
 
-    entries_after = _engine_cache_size()
+    entries_after = watch.snapshot()
     entries_added = -1 if entries_before < 0 else entries_after - entries_before
     return EvalReport(
         grid={

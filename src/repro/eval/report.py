@@ -19,8 +19,18 @@ v1/v2 artifacts): ``slack``/``rule`` identify a deferral cell (slack in
 slots, queue dispatch rule), ``max_delay``/``p99_delay`` are the worst
 per-trace queueing delays, ``deadline_misses`` the total expired units
 over the batch, and ``slo_ok`` the latency-SLO verdict — no deadline
-misses and p99 delay within the granted slack.  :meth:`EvalReport.load`
-still reads v1 and v2 artifacts.
+misses and p99 delay within the granted slack.
+
+v4 adds the runtime-health columns ``wall_ms`` (wall-clock of the cell's
+provision call, host-side, ms) and ``compiles`` (jitted engine programs
+the call added, via ``repro.obs.jaxwatch.CompileWatcher``; -1 when the
+cache API is unobservable).  Both are *runtime* facts, not results: they
+are excluded from cell equality (``compare=False``) so determinism checks
+— same grid, same cells — keep holding across machines, and they are None
+on cells loaded from v1–v3 artifacts.  Cells produced by one device
+program (a shared (noise × window) sweep) report the program's totals on
+each of its cells.  :meth:`EvalReport.load` still reads v1, v2 and v3
+artifacts (pinned by ``tests/fixtures/report_v*.json``).
 """
 from __future__ import annotations
 
@@ -28,7 +38,8 @@ import dataclasses
 import json
 import pathlib
 
-SCHEMA = "repro.eval/v3"
+SCHEMA = "repro.eval/v4"
+SCHEMA_V3 = "repro.eval/v3"
 SCHEMA_V2 = "repro.eval/v2"
 SCHEMA_V1 = "repro.eval/v1"
 
@@ -65,6 +76,11 @@ class CellResult:
     SLO verdict ``slo_ok``: True iff no unit missed its deadline and the
     p99 queueing delay stayed within the granted slack.  All None on
     rigid cells.
+
+    ``wall_ms``/``compiles`` (v4) are runtime health, not results —
+    ``compare=False`` keeps them out of ``==`` so two runs of the same grid
+    still produce *equal* cells (the determinism and mesh-vs-plain gates
+    compare whole cell lists).  None on cells from pre-v4 artifacts.
     """
 
     policy: str
@@ -91,6 +107,8 @@ class CellResult:
     p99_delay: int | None = None
     deadline_misses: int | None = None
     slo_ok: bool | None = None
+    wall_ms: float | None = dataclasses.field(default=None, compare=False)
+    compiles: int | None = dataclasses.field(default=None, compare=False)
 
 
 @dataclasses.dataclass
@@ -165,13 +183,14 @@ class EvalReport:
 
     @classmethod
     def from_dict(cls, d: dict) -> "EvalReport":
-        # v1/v2 artifacts load as-is: the newer fields are all defaulted,
+        # v1-v3 artifacts load as-is: the newer fields are all defaulted,
         # so an older cell dict simply leaves them None (back-compat
-        # contract)
-        if d.get("schema") not in (SCHEMA, SCHEMA_V2, SCHEMA_V1):
+        # contract, pinned by tests/fixtures/report_v*.json)
+        if d.get("schema") not in (SCHEMA, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
             raise ValueError(
                 f"report schema {d.get('schema')!r} != expected {SCHEMA!r} "
-                f"(or the readable {SCHEMA_V2!r} / {SCHEMA_V1!r})"
+                f"(or the readable {SCHEMA_V3!r} / {SCHEMA_V2!r} / "
+                f"{SCHEMA_V1!r})"
             )
         return cls(
             grid=d["grid"],

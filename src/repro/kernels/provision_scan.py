@@ -72,7 +72,8 @@ def _grid_scan_kernel(
     h_ref,                            # (1, BN) f32 per-level peek horizon (cell block)
     r_ref,                            # (1, BN) int32 routing ids (level block)
     o_ref,                            # (1, T, BN) int32 on-matrix block
-    *, T: int, bn: int, horizon: int, time_varying: bool,
+    *rest,                            # record=True: (1, 4, BN) int32 counts block
+    T: int, bn: int, horizon: int, time_varying: bool, record: bool = False,
 ):
     g = pl.program_id(0)
     levels = r_ref[pl.ds(0, 1), :]    # routed level ids for this lane block
@@ -81,8 +82,16 @@ def _grid_scan_kernel(
     h_row = h_ref[pl.ds(0, 1), :]
 
     def body(t, carry):
-        r, on, wait = carry                         # (1, BN) f32, bool, f32
+        if record:
+            r, on, wait, c_rise, c_wait, c_peek, c_off = carry
+        else:
+            r, on, wait = carry                     # (1, BN) f32, bool, f32
         busy = a_ref[b, t] > levels
+        if record:
+            # dispatcher turn-on edge; t=0 is the free initial state
+            # x(0)=a(0) (the carry starts all-off only as an encoding), so
+            # it is not a rise — matching the lax.scan route's init
+            rise = busy & ~on & (t > 0)
         on = on | busy                              # dispatcher turn-on
         r = jnp.where(busy, 0.0, r)
         idle = on & ~busy
@@ -92,10 +101,17 @@ def _grid_scan_kernel(
         seen = jnp.zeros_like(busy)
         for h in range(horizon):                    # static unroll, <= max Delta
             seen = seen | ((p_ref[p, t + 1 + h] > levels) & (float(h) < h_row))
-        off_now = idle & (r - 1.0 >= wait) & ~seen
+        expired = idle & (r - 1.0 >= wait)
+        off_now = expired & ~seen
         on = on & ~off_now
         r = jnp.where(off_now, 0.0, r)
         o_ref[0, pl.ds(t, 1), :] = on.astype(jnp.int32)
+        if record:
+            return (r, on, wait,
+                    c_rise + rise.astype(jnp.int32),
+                    c_wait + expired.astype(jnp.int32),
+                    c_peek + (expired & seen).astype(jnp.int32),
+                    c_off + off_now.astype(jnp.int32))
         return (r, on, wait)
 
     init = (
@@ -103,7 +119,13 @@ def _grid_scan_kernel(
         jnp.zeros((1, bn), jnp.bool_),              # x(0) = a(0): busy turns it on
         jnp.zeros((1, bn), jnp.float32) if time_varying else m_ref[0, pl.ds(0, 1), :],
     )
-    jax.lax.fori_loop(0, T, body, init)
+    if record:
+        init = init + tuple(jnp.zeros((1, bn), jnp.int32) for _ in range(4))
+    final = jax.lax.fori_loop(0, T, body, init)
+    if record:
+        c_ref = rest[0]
+        for i, cnt in enumerate(final[3:]):         # provenance.COUNT_ORDER rows
+            c_ref[0, pl.ds(i, 1), :] = cnt
 
 
 def provision_scan_grid(
@@ -122,6 +144,7 @@ def provision_scan_grid(
     level_horizon: jax.Array | None = None,  # (H, N) per-level peek reach rows
     block_levels: int = DEFAULT_BN,
     interpret: bool | None = None,
+    record: bool = False,
 ) -> jax.Array:
     """(G, T, N) bool on-matrix: one (noise, window, trace) cell per row.
 
@@ -132,6 +155,13 @@ def provision_scan_grid(
     ``routes[j]`` — defaulting to the contiguous ``base_level + j`` — so a
     group-aligned typed layout can interleave pad lanes freely; block
     padding always uses the never-on :data:`PAD_ROUTE` sentinel.
+
+    ``record=True`` returns ``(ons, counts)`` with ``counts`` (G, 4, N)
+    int32 — aggregate per-lane decision counters accumulated in the scan
+    carry, rows in :data:`repro.obs.provenance.COUNT_ORDER` order
+    (demand-rise, wait-expired, peek-fired, toggle-off).  Aggregates, not
+    per-slot codes: a (G, T, N) uint8 provenance stream would double the
+    kernel's HBM traffic, so full codes stay a lax.scan-path feature.
     """
     traces = jnp.asarray(traces, jnp.int32)
     predicted = jnp.asarray(predicted, jnp.int32)
@@ -167,8 +197,14 @@ def provision_scan_grid(
         interpret = jax.default_backend() != "tpu"
 
     kernel = functools.partial(
-        _grid_scan_kernel, T=T, bn=bn, horizon=horizon, time_varying=time_varying
+        _grid_scan_kernel, T=T, bn=bn, horizon=horizon,
+        time_varying=time_varying, record=record,
     )
+    out_specs = pl.BlockSpec((1, T, bn), lambda g, j, *p: (g, 0, j))
+    out_shape = jax.ShapeDtypeStruct((G, T, n_padded), jnp.int32)
+    if record:
+        out_specs = [out_specs, pl.BlockSpec((1, 4, bn), lambda g, j, *p: (g, 0, j))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((G, 4, n_padded), jnp.int32)]
     # index maps receive the scalar-prefetch refs: p[2]/p[3] are the
     # cell -> (threshold row, horizon row) maps, so each program's VMEM
     # blocks are exactly its own cell's tables; the routes row is blocked
@@ -181,17 +217,20 @@ def provision_scan_grid(
             pl.BlockSpec((1, bn), lambda g, j, *p: (p[3][g], j)),
             pl.BlockSpec((1, bn), lambda g, j, *p: (0, j)),
         ],
-        out_specs=pl.BlockSpec((1, T, bn), lambda g, j, *p: (g, 0, j)),
+        out_specs=out_specs,
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((G, T, n_padded), jnp.int32),
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")
         ),
         interpret=interpret,
     )(*cells, a_pad, p_pad, m3d, h2d, r2d)
+    if record:
+        ons, counts = out
+        return ons[:, :, :n].astype(bool), counts[:, :, :n]
     return out[:, :, :n].astype(bool)
 
 

@@ -1,0 +1,63 @@
+"""repro.obs — telemetry, compile accounting, and decision provenance.
+
+Three small modules, no engine imports at package load:
+
+* :mod:`repro.obs.telemetry` — counters/gauges/histograms + ``span()``
+  timers with Chrome-trace and JSON-lines exports; no-op by default.
+* :mod:`repro.obs.jaxwatch` — :class:`CompileWatcher` (the one jit-cache
+  delta implementation), ``jax.monitoring`` forwarding, ``--profile`` hook.
+* :mod:`repro.obs.provenance` — per-slot decision reason-code bitmask
+  (demand-rise / wait-expired / peek-fired / toggle-off) and the
+  schedule-reconstruction helpers that make the codes checkable.
+
+See docs/observability.md for the full tour and the zero-overhead contract.
+"""
+from .provenance import (
+    COUNT_BITS,
+    COUNT_ORDER,
+    DEMAND_RISE,
+    PEEK_FIRED,
+    REASON_NAMES,
+    TOGGLE_OFF,
+    WAIT_EXPIRED,
+    decision_counts,
+    explain_slot,
+    reconstruct_schedule,
+    toggles_from_decisions,
+)
+from .jaxwatch import (
+    CompileWatcher,
+    engine_cache_size,
+    install_monitoring,
+    profile_to,
+)
+from .telemetry import (
+    NullTelemetry,
+    Telemetry,
+    get_telemetry,
+    set_telemetry,
+    telemetry_session,
+)
+
+__all__ = [
+    "COUNT_BITS",
+    "COUNT_ORDER",
+    "CompileWatcher",
+    "DEMAND_RISE",
+    "NullTelemetry",
+    "PEEK_FIRED",
+    "REASON_NAMES",
+    "TOGGLE_OFF",
+    "Telemetry",
+    "WAIT_EXPIRED",
+    "decision_counts",
+    "engine_cache_size",
+    "explain_slot",
+    "get_telemetry",
+    "install_monitoring",
+    "profile_to",
+    "reconstruct_schedule",
+    "set_telemetry",
+    "telemetry_session",
+    "toggles_from_decisions",
+]

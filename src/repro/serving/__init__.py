@@ -7,9 +7,11 @@ from .autoscaler import (
 )
 from .cluster import ClusterReport, make_window_max_predictor, run_cluster
 from .engine import GenerationResult, InferenceEngine
+from .metrics import PlanMetrics
 
 __all__ = [
     "FleetProvisioner",
+    "PlanMetrics",
     "ReplicaAutoscaler",
     "ScalerReport",
     "replica_cost_model",

@@ -280,6 +280,11 @@ class FleetProvisioner:
         self.deferral = deferral
         self._history = np.zeros(0, np.int64)
         self.last_plan = None
+        from .metrics import PlanMetrics
+
+        #: rolling advance() health: plan-latency p50/p99, toggle churn,
+        #: backlog depth — export with ``self.metrics.prometheus_text()``
+        self.metrics = PlanMetrics()
 
     def _spec(self, demand, predicted=None, windows=None):
         import dataclasses as _dc
@@ -339,7 +344,17 @@ class FleetProvisioner:
         This is deliberately plan-ahead, not the streaming kernel: earlier
         slots may be re-decided as context grows, which is exactly what an
         operator wants from a rolling capacity plan.
+
+        Every step records into ``self.metrics``
+        (:class:`~repro.serving.metrics.PlanMetrics`): the re-plan wall
+        latency, the chunk's replica toggles (including the seam from the
+        previous chunk), and the deferral backlog depth after the chunk —
+        ``self.metrics.prometheus_text()`` serves them.
         """
+        import time
+
+        from repro.obs.telemetry import get_telemetry
+
         chunk = np.asarray(demand_chunk, np.int64)
         if chunk.ndim != 1:
             raise ValueError(
@@ -348,12 +363,29 @@ class FleetProvisioner:
             )
         if chunk.size == 0:
             raise ValueError("advance() needs at least one demand slot")
+        prev_last = (
+            None if self.last_plan is None
+            else int(np.asarray(self.last_plan.x)[-1])
+        )
         self._history = np.concatenate([self._history, chunk])
         slack = 0 if self.deferral is None else self.deferral.bound()
         context = 3 * self.costs.delta_slots() + slack
         window = self._history[-(chunk.size + context):]
-        self.last_plan = self.plan(window)
-        return np.asarray(self.last_plan.x)[-chunk.size:]
+        with get_telemetry().span("serving/advance", chunk=chunk.size):
+            t0 = time.perf_counter()
+            self.last_plan = self.plan(window)
+            x = np.asarray(self.last_plan.x)
+            latency_ms = (time.perf_counter() - t0) * 1e3
+        xc = x[-chunk.size:]
+        toggles = int(np.abs(np.diff(xc)).sum())
+        if prev_last is not None:
+            toggles += abs(int(xc[0]) - prev_last)      # seam between chunks
+        backlog = (
+            0 if self.last_plan.backlog is None
+            else int(np.asarray(self.last_plan.backlog)[-1])
+        )
+        self.metrics.observe_plan(latency_ms, toggles, backlog)
+        return xc
 
     def _as_i32(self, demand):
         import jax.numpy as jnp

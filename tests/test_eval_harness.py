@@ -381,8 +381,8 @@ def test_deferral_slack_buys_cost_off(defer_report):
         assert cs[0].p99_delay == 0
 
 
-def test_deferral_report_round_trips_v3(tmp_path, defer_report):
-    assert SCHEMA.endswith("/v3")
+def test_deferral_report_round_trips(tmp_path, defer_report):
+    assert SCHEMA.endswith("/v4")
     p = defer_report.save(tmp_path / "defer.json")
     loaded = EvalReport.load(p)
     assert loaded.cells == defer_report.cells

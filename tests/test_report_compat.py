@@ -1,0 +1,109 @@
+"""Schema back-compat: checked-in v1/v2/v3 report artifacts must keep
+loading under the v4 reader, with every newer column defaulted to None.
+
+The fixture files in ``tests/fixtures/`` are frozen copies of what older
+code actually wrote — regenerating them from current code would defeat the
+point (the reader must accept *old* bytes, not new bytes with an old
+schema string)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.eval import SCHEMA, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, EvalReport
+from repro.eval.report import CellResult
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+
+#: columns each schema version introduced, newest first
+V4_COLUMNS = ("wall_ms", "compiles")
+V3_COLUMNS = ("slack", "rule", "max_delay", "p99_delay",
+              "deadline_misses", "slo_ok")
+V2_COLUMNS = ("p50_cr", "cr_quantiles", "group_names", "group_mean_cr",
+              "group_bound", "group_bound_ok")
+
+
+@pytest.mark.parametrize("name, schema", [
+    ("report_v1.json", SCHEMA_V1),
+    ("report_v2.json", SCHEMA_V2),
+    ("report_v3.json", SCHEMA_V3),
+])
+def test_old_fixture_loads_with_new_columns_none(name, schema):
+    rep = EvalReport.load(FIXTURES / name)
+    assert rep.schema == schema
+    assert rep.cells
+    for c in rep.cells:
+        for col in V4_COLUMNS:
+            assert getattr(c, col) is None, f"{name}: {col} should be None"
+    if schema == SCHEMA_V1:
+        for c in rep.cells:
+            for col in V2_COLUMNS + V3_COLUMNS:
+                assert getattr(c, col) is None
+    if schema == SCHEMA_V2:
+        for c in rep.cells:
+            for col in V3_COLUMNS:
+                assert getattr(c, col) is None
+
+
+def test_v3_fixture_keeps_typed_and_deferral_columns():
+    rep = EvalReport.load(FIXTURES / "report_v3.json")
+    typed = [c for c in rep.cells if c.group_mean_cr is not None]
+    defer = [c for c in rep.cells if c.slack is not None]
+    assert typed and defer
+    assert typed[0].group_names == ["efficient", "legacy"]
+    assert defer[0].rule == "EDF" and defer[0].slo_ok is True
+
+
+def test_loaded_old_report_round_trips_preserving_schema(tmp_path):
+    rep = EvalReport.load(FIXTURES / "report_v2.json")
+    path = rep.save(tmp_path / "again.json")
+    again = EvalReport.load(path)
+    assert again.schema == SCHEMA_V2
+    assert again.cells == rep.cells
+
+
+def test_runtime_columns_are_excluded_from_cell_equality():
+    """wall_ms/compiles are runtime facts (compare=False): two runs of the
+    same grid on different machines must still produce *equal* cells."""
+    rep = EvalReport.load(FIXTURES / "report_v1.json")
+    base = rep.cells[0]
+    timed = dataclasses.replace(base, wall_ms=123.4, compiles=1)
+    assert timed == base
+    assert timed.wall_ms == 123.4 and base.wall_ms is None
+
+
+def test_current_schema_is_v4_and_unknown_schema_rejected(tmp_path):
+    assert SCHEMA.endswith("/v4")
+    doc = json.loads((FIXTURES / "report_v1.json").read_text())
+    doc["schema"] = "repro.eval/v999"
+    with pytest.raises(ValueError, match="v999"):
+        EvalReport.from_dict(doc)
+
+
+def test_fixtures_are_frozen_old_bytes():
+    """The fixtures must not quietly grow v4 columns (someone regenerating
+    them from current code) — the raw JSON is the contract."""
+    for name in ("report_v1.json", "report_v2.json", "report_v3.json"):
+        doc = json.loads((FIXTURES / name).read_text())
+        for cell in doc["cells"]:
+            assert "wall_ms" not in cell and "compiles" not in cell, (
+                f"{name} contains v4 columns — fixtures must stay old bytes"
+            )
+    v1 = json.loads((FIXTURES / "report_v1.json").read_text())
+    for cell in v1["cells"]:
+        assert "slack" not in cell and "p50_cr" not in cell
+
+
+def test_fixture_field_sets_match_dataclass():
+    """Every fixture key must still be a CellResult field (else loading
+    would crash with an unexpected-kwarg TypeError — this pins the rename
+    hazard explicitly)."""
+    fields = {f.name for f in dataclasses.fields(CellResult)}
+    for name in ("report_v1.json", "report_v2.json", "report_v3.json"):
+        doc = json.loads((FIXTURES / name).read_text())
+        for cell in doc["cells"]:
+            unknown = set(cell) - fields
+            assert not unknown, f"{name}: unknown cell keys {unknown}"
