@@ -27,6 +27,14 @@ cells with per-type CR verdicts, gated against the Albers–Quedenfeld 2d
 ``DEFERRAL_SLACKS``: deferral cells run the defer-then-provision path and
 are gated on the latency-SLO verdict (``slo_ok`` — zero deadline misses,
 p99 queueing delay within the granted slack) on top of the CR bound.
+
+Both legs also record the v5 ``streaming`` section
+(:func:`streaming_latency`): the ``FleetProvisioner.advance()`` stepper
+driven at T_chunk ∈ {1, 64, 1024}, its plan-latency p50/p99 from the
+``PlanMetrics`` substrate, and a hard gate that the warmed loop adds zero
+jit traces (the O(1)-state stepper's steady-state claim).  The latency
+columns are machine facts — ``bench_diff.py`` diffs them informationally,
+never gated.
 """
 from __future__ import annotations
 
@@ -58,6 +66,11 @@ TYPED_GROUPS = (
 #: the deferral-slack sweep (slots): 0 is the rigid fixed point (bit-exact
 #: with no deferral at all), the rest trace the cost-vs-slack curve
 DEFERRAL_SLACKS = (0, 2, 6, 12)
+
+#: the serving-loop chunk sizes the streaming section measures — one slot
+#: at a time (the latency floor), a typical scrape interval, and a bulk
+#: backfill chunk
+STREAM_CHUNKS = (1, 64, 1024)
 
 SMOKE_GRID = EvalGrid(
     noise_stds=(0.0, 0.2),
@@ -115,8 +128,58 @@ def mesh_smoke() -> None:
     )
 
 
-def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True) -> EvalReport:
+def streaming_latency(smoke: bool) -> list:
+    """The v5 ``streaming`` section: drive ``FleetProvisioner.advance()``
+    at each ``STREAM_CHUNKS`` size over one demand stream, record the
+    stepper's plan-latency p50/p99 through the ``PlanMetrics`` substrate,
+    and gate the zero-steady-state-recompile claim — after the warmup call
+    owns the chunk bucket's trace, the measured loop must add no jit
+    entries at all."""
+    import numpy as np
+
+    from repro.core.costs import PAPER_COSTS
+    from repro.eval.report import StreamingRow
+    from repro.serving import stepper
+    from repro.serving.autoscaler import FleetProvisioner
+    from repro.serving.metrics import PlanMetrics
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for t_chunk in STREAM_CHUNKS:
+        chunks = min(32, max(4, (256 if smoke else 8192) // t_chunk))
+        demand = rng.integers(0, 48, size=((chunks + 1) * t_chunk,))
+        prov = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=64)
+        prov.advance(demand[:t_chunk])      # warmup owns the bucket's trace
+        prov.metrics = PlanMetrics()
+        with CompileWatcher(fns=(stepper.stepper_chunk,)) as watch:
+            for i in range(1, chunks + 1):
+                prov.advance(demand[i * t_chunk:(i + 1) * t_chunk])
+        if watch.added > 0:
+            raise AssertionError(
+                f"streaming loop at t_chunk={t_chunk} recompiled "
+                f"{watch.added} stepper program(s) after warmup — steady "
+                "state must be zero"
+            )
+        rows.append(StreamingRow(
+            policy="A1", t_chunk=t_chunk, chunks=chunks,
+            slots=chunks * t_chunk, compiles=watch.added,
+            p50_ms=prov.metrics.latency_quantile(0.5),
+            p99_ms=prov.metrics.latency_quantile(0.99),
+        ))
+    print(
+        "# streaming: " + "; ".join(
+            f"t_chunk={r.t_chunk} p50={r.p50_ms:.2f}ms p99={r.p99_ms:.2f}ms "
+            f"compiles={r.compiles}" for r in rows
+        ),
+        file=sys.stderr,
+    )
+    return rows
+
+
+def run(grid: EvalGrid, out: pathlib.Path, check_warm: bool = True,
+        streaming: list | None = None) -> EvalReport:
     report = evaluate(grid)
+    report.streaming = streaming
     try:
         if check_warm:
             # the grid again, same shapes: every cell must hit the jit cache
@@ -236,7 +299,9 @@ def main() -> int:
     with telemetry_session() as tel, profile_to(args.profile):
         if args.smoke:
             mesh_smoke()
-        report = run(SMOKE_GRID if args.smoke else FULL_GRID, args.out)
+        stream_rows = streaming_latency(smoke=args.smoke)
+        report = run(SMOKE_GRID if args.smoke else FULL_GRID, args.out,
+                     streaming=stream_rows)
     if args.smoke:
         write_telemetry_artifacts(tel, args.out)
     for line in report.summary_lines():

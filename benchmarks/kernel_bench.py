@@ -1,7 +1,28 @@
 """Kernel microbenchmarks (interpret-mode correctness timing on CPU; the
-useful derived number is the achieved-vs-roofline arithmetic on TPU specs)."""
+useful derived number is the achieved-vs-roofline arithmetic on TPU specs).
+
+Runs as part of ``benchmarks/run.py`` or standalone::
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py           # all sections
+    PYTHONPATH=src python benchmarks/kernel_bench.py --smoke   # long-trace
+                                                               # section only,
+                                                               # CI sizes
+
+The long-trace section (:func:`provision_stream_long`) is the
+production-length axis of the perf trajectory: the chunked double-buffered
+streaming kernel against the monolithic prefetch-all grid kernel on an
+overlapping size (bit-exact, asserted), then streaming-only rows at
+T = 10^6 slots and a 10^4-lane fleet — sizes where the monolithic layout's
+O(B·T) scalar prefetch is unrepresentable.  Each row carries the
+per-slot decision latency and both layouts' working-set estimates, so the
+memory win is explicit in BENCH.  ``--smoke`` shrinks T/N for CI; the keys
+are stable either way and ``bench_diff.py`` treats all wall-clock columns
+as informational, never gated.
+"""
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
@@ -184,9 +205,100 @@ def interpret_correctness(rows: list[str]) -> None:
     rows.append(f"flash_interpret_256,{us:.1f},max_err={err:.2e}")
 
 
-def run(rows: list[str]) -> None:
+def provision_stream_long(rows: list[str], *, full: bool = False) -> None:
+    """Production-length traces through the chunked streaming kernel.
+
+    One row per (T, N, layout): ``us_per_call`` plus ``decisions_per_s``,
+    per-slot latency ``slot_ns`` and the working-set estimates
+    ``mem_stream_bytes`` (2 trace tiles x double buffer + per-level carry)
+    vs ``mem_monolithic_bytes`` (the prefetch-all layout's whole-trace
+    residency) — O(T_chunk) against O(T).  The overlapping size runs both
+    kernels and asserts bit-identical replica counts before timing.
+    """
+    from repro.kernels.provision_scan import (
+        provision_scan_grid,
+        provision_scan_stream,
+    )
+
+    t_chunk = 4096
+    T_cmp = 65_536 if full else 8_192
+    T_long = 1_000_000 if full else 65_536
+    N_wide = 10_000 if full else 2_048
+    N = 128
+    delta, horizon = 6, 2
+    mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    rng = np.random.default_rng(7)
+    z = jnp.zeros((1,), jnp.int32)
+
+    def mem(T, n, tc):
+        # demand + predicted rows (int32): tiles x double buffer streaming,
+        # whole-trace residency monolithic; carry is per-level either way
+        return 2 * 2 * tc * 4 + 3 * n * 4, 2 * T * 4
+
+    def stream_fn(a, thr, tc):
+        return jax.jit(lambda a: provision_scan_stream(
+            a, a, thr, z, z, z, z, horizon=horizon, t_chunk=tc)[0])
+
+    # --- overlapping size: monolithic vs streaming, bit-exact then timed
+    a = jnp.asarray(rng.integers(0, N, size=(1, T_cmp)), jnp.int32)
+    thr = jnp.full((1, 1, N), float(delta) - 1.0, jnp.float32)
+    mono = jax.jit(lambda a: provision_scan_grid(
+        a, a, thr, z, z, z, z, delta=delta, horizon=horizon))
+    strm = stream_fn(a, thr, t_chunk)
+    x_mono = np.asarray(mono(a)).sum(-1)
+    x_strm = np.asarray(strm(a))
+    assert (x_strm == x_mono).all(), "streaming kernel != monolithic grid"
+    m_s, m_m = mem(T_cmp, N, t_chunk)
+    for tag, fn, m in ((f"mono_{mode}", mono, m_m),
+                       (f"stream_{mode}", strm, m_s)):
+        us = _bench(lambda: fn(a))
+        rows.append(
+            f"provision_long_{tag}_t{T_cmp}n{N},{us:.1f},"
+            f"decisions_per_s={T_cmp * N / (us / 1e6):.3e};"
+            f"slot_ns={us * 1e3 / T_cmp:.1f};trace_bytes={m}"
+        )
+
+    # --- streaming-only sizes the monolithic layout cannot hold
+    for tag, T, n in ((f"stream_{mode}_long", T_long, N),
+                      (f"stream_{mode}_wide", 8_192, N_wide)):
+        a = jnp.asarray(rng.integers(0, n, size=(1, T)), jnp.int32)
+        thr = jnp.full((1, 1, n), float(delta) - 1.0, jnp.float32)
+        fn = stream_fn(a, thr, t_chunk)
+        us = _bench(lambda: fn(a), iters=1)
+        m_s, m_m = mem(T, n, t_chunk)
+        rows.append(
+            f"provision_long_{tag}_t{T}n{n},{us:.1f},"
+            f"decisions_per_s={T * n / (us / 1e6):.3e};"
+            f"slot_ns={us * 1e3 / T:.1f};"
+            f"mem_stream_bytes={m_s};mem_monolithic_bytes={m_m}"
+        )
+
+
+def run(rows: list[str], *, long_full: bool = False) -> None:
     flash_roofline(rows)
     decode_roofline(rows)
     interpret_correctness(rows)
     provision_grid_vs_lax_scan(rows)
     provision_grid_routed(rows)
+    provision_stream_long(rows, full=long_full)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="long-trace section only, CI-sized T/N")
+    args = ap.parse_args(argv)
+    rows: list[str] = []
+    if args.smoke:
+        provision_stream_long(rows, full=False)
+    else:
+        run(rows, long_full=True)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    print(f"# {len(rows)} benchmark rows", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,7 @@ from .provision import (
     ProvisionSpec,
     Workload,
     provision,
+    provision_stream,
 )
 from .offline import a0_cost, a0_schedule, optimal_cost, optimal_schedule_constructed
 from .online import SimResult, simulate
@@ -80,6 +81,7 @@ __all__ = [
     "ProvisionSpec",
     "Workload",
     "provision",
+    "provision_stream",
     "on_matrix_cost",
     "provision_cost",
     "provision_schedule",

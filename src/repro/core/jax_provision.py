@@ -127,6 +127,30 @@ def _waits_from_uniforms(policy, u0, u, window, delta):
 # The per-level slot scan (all online policies)
 # ---------------------------------------------------------------------------
 
+def _slot_update(r, on, wait, busy, seen, wait_draw):
+    """One slot of the per-level ski-rental engine (shared by the monolithic
+    and the chunked scan bodies — byte-identical op order, so the streaming
+    path is bit-exact against :func:`_on_matrix_scan` by construction).
+
+    ``r``/``on``/``wait``: (N,) idle run length, on bit, wait threshold;
+    ``busy``: dispatcher compare for this slot; ``seen``: peek verdict;
+    ``wait_draw``: this slot's sampled thresholds (None for deterministic
+    policies, whose ``wait`` is the static threshold).  Returns the updated
+    state plus the ``expired``/``off_now`` decision bits (provenance).
+    """
+    on = on | busy                                 # dispatcher turn-on
+    r = jnp.where(busy, 0.0, r)
+    idle = on & ~busy
+    if wait_draw is not None:
+        wait = jnp.where(idle & (r == 0.0), wait_draw, wait)
+    r = jnp.where(idle, r + 1.0, r)
+    expired = idle & (r - 1.0 >= wait)
+    off_now = expired & ~seen
+    on = on & ~off_now
+    r = jnp.where(off_now, 0.0, r)
+    return (r, on, wait), expired, off_now
+
+
 def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None,
                     record=False):
     """(T, N) bool on-matrix via one lax.scan over slots.
@@ -162,20 +186,13 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
         busy = a[t] > levels
         if record:
             rise = busy & ~on                          # dispatcher turn-on edge
-        on = on | busy                                 # dispatcher turn-on
-        r = jnp.where(busy, 0.0, r)
-        idle = on & ~busy
-        if waits is not None:
-            wait = jnp.where(idle & (r == 0.0), waits[t], wait)
-        r = jnp.where(idle, r + 1.0, r)
         fut = jax.lax.dynamic_slice(pad, (t + 1,), (max_h,))
         seen = (
             (fut[None, :] > levels[:, None]) & (hslots[None, :] < horizon[:, None])
         ).any(axis=1)
-        expired = idle & (r - 1.0 >= wait)
-        off_now = expired & ~seen
-        on = on & ~off_now
-        r = jnp.where(off_now, 0.0, r)
+        (r, on, wait), expired, off_now = _slot_update(
+            r, on, wait, busy, seen, None if waits is None else waits[t]
+        )
         if record:
             codes = (
                 rise.astype(jnp.uint8) * _prov.DEMAND_RISE
@@ -193,6 +210,116 @@ def _on_matrix_scan(a, pred, levels, *, delta, max_h, window, policy, waits=None
     )
     (_, _, _), out = jax.lax.scan(step, init, jnp.arange(T))
     return out
+
+
+def _stream_cell(a, pred, levels, *, delta, max_h, window, policy, waits=None,
+                 t_chunk, record=False, lane_ok=None):
+    """Chunked slot scan over one (trace, window) cell with explicit carry.
+
+    The streaming twin of :func:`_on_matrix_scan`: instead of materializing
+    the (T, N) on-matrix, slots run in ``t_chunk`` tiles under an outer
+    ``lax.scan`` whose carry is the O(N) engine state (idle run, on bits,
+    wait thresholds) plus int32 accumulators — so only x(t) and per-level
+    totals ever leave the scan and the working set is O(t_chunk · N)
+    regardless of T.  The slot body is the shared :func:`_slot_update`, so
+    the state trajectory is bit-identical to the monolithic scan.
+
+    Toggle accounting uses the virtual-boundary convention: the "previous"
+    state at t = 0 is the busy mask itself, which makes ``up`` absorb
+    ``_cost_terms``' ``first_on`` and makes the t = 0 ``down`` vanish; the
+    forced x(T) = a(T) final off is added here from the end-of-trace carry.
+    The resulting integer totals equal :func:`_cost_terms` of the monolithic
+    on-matrix exactly.
+
+    Returns ``(x, terms, on_final)``: ``x`` (T,) int32, ``terms`` a dict of
+    (N,) int32 totals ``run``/``up``/``down`` (plus the four
+    :data:`repro.obs.provenance.COUNT_ORDER` counters when ``record``), and
+    ``on_final`` the (N,) end-of-trace on bits (the sharded path recomputes
+    its own routed final-off from these).  ``lane_ok``: optional (N,) bool
+    storage-lane mask (the sharded layout's pad lanes) applied to x and
+    every accumulator, mirroring the Pallas kernels' lane masking.
+    """
+    T = a.shape[0]
+    n = levels.shape[0]
+    b = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
+    w = jnp.asarray(window, jnp.float32)
+    if policy in NO_PEEK:
+        horizon = jnp.zeros((n,), jnp.float32)
+        m_static = b
+    else:
+        horizon = jnp.minimum(w + 1.0, b)
+        m_static = jnp.maximum(0.0, b - w - 1.0)
+    hslots = jnp.arange(max_h, dtype=jnp.float32)
+    ok = jnp.ones((n,), bool) if lane_ok is None else lane_ok
+
+    n_chunks = -(-T // t_chunk)
+    T_pad = n_chunks * t_chunk
+    a_pad = jnp.concatenate([a, jnp.zeros((T_pad - T,), a.dtype)])
+    p_pad = jnp.concatenate([pred, jnp.zeros((T_pad - T + max_h,), pred.dtype)])
+    w_pad = (
+        None if waits is None
+        else jnp.concatenate([waits, jnp.zeros((T_pad - T, n), waits.dtype)])
+    )
+    n_acc = 7 if record else 3
+    init = (
+        (
+            jnp.zeros((n,), jnp.float32),                       # idle run r
+            jnp.zeros((n,), bool),          # on (slot 0's |busy seeds x(0)=a(0))
+            m_static if waits is None else jnp.zeros((n,), jnp.float32),
+        ),
+        jnp.zeros((n_acc, n), jnp.int32),
+    )
+
+    def chunk(carry, c):
+        state, accs = carry
+        t0 = c * t_chunk
+        a_c = jax.lax.dynamic_slice(a_pad, (t0,), (t_chunk,))
+        p_c = jax.lax.dynamic_slice(p_pad, (t0,), (t_chunk + max_h,))
+        w_c = (
+            None if w_pad is None
+            else jax.lax.dynamic_slice(w_pad, (t0, 0), (t_chunk, n))
+        )
+
+        def slot(carry2, tl):
+            (r, on, wait), accs = carry2
+            t = t0 + tl
+            valid = t < T                       # pad tail freezes everything
+            busy = a_c[tl] > levels
+            prev_eff = jnp.where(t == 0, busy, on)    # virtual x(0)=a(0) edge
+            rise = busy & ~prev_eff
+            fut = jax.lax.dynamic_slice(p_c, (tl + 1,), (max_h,))
+            seen = (
+                (fut[None, :] > levels[:, None])
+                & (hslots[None, :] < horizon[:, None])
+            ).any(axis=1)
+            (r2, on2, wait2), expired, off_now = _slot_update(
+                r, on, wait, busy, seen, None if w_c is None else w_c[tl]
+            )
+            x_t = jnp.where(valid, (on2 & ok).sum().astype(jnp.int32), 0)
+            rows = [on2 & ok, (on2 & ~prev_eff) & ok, (prev_eff & ~on2) & ok]
+            if record:
+                rows += [
+                    rise & ok, expired & ok, (expired & seen) & ok, off_now & ok,
+                ]
+            inc = jnp.stack([x.astype(jnp.int32) for x in rows])
+            accs = jnp.where(valid, accs + inc, accs)
+            r2 = jnp.where(valid, r2, r)
+            on2 = jnp.where(valid, on2, on)
+            wait2 = jnp.where(valid, wait2, wait)
+            return ((r2, on2, wait2), accs), x_t
+
+        (state, accs), x_c = jax.lax.scan(slot, (state, accs),
+                                          jnp.arange(t_chunk))
+        return (state, accs), x_c
+
+    ((_, on_f, _), accs), xs = jax.lax.scan(chunk, init, jnp.arange(n_chunks))
+    x = xs.reshape(T_pad)[:T]
+    final_off = ((on_f & ok) & ~(a[T - 1] > levels)).astype(jnp.int32)
+    terms = {"run": accs[0], "up": accs[1], "down": accs[2] + final_off}
+    if record:
+        for k, name in enumerate(_prov.COUNT_ORDER):
+            terms[name] = accs[3 + k]
+    return x, terms, on_f
 
 
 def _offline_levels(a, n_levels, delta):
@@ -380,6 +507,109 @@ def _run_noise_sweep(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
         return _run(
             ab, predb_s, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys,
             n_levels=n_levels, max_h=max_h, policy=policy, record=record,
+        )
+
+    return jax.vmap(one)(predb)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy",
+                                             "t_chunk", "record"))
+def _run_stream(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys,
+                *, n_levels, max_h, policy, t_chunk, record=False):
+    """Streaming twin of :func:`_run`: same (W, B) sweep structure, same CRN
+    wait tables, but every cell runs through the chunked
+    :func:`_stream_cell` — O(B · t_chunk · N) working set instead of the
+    monolithic scan's O(B · T · N) on-matrix, so the scan route accepts
+    production-length traces.  Bit-exact against :func:`_run` on x and every
+    cost leaf (shared :func:`_slot_update` body, shared wait-draw
+    transformation).
+
+    Differences from :func:`_run`, by design: ``offline`` is rejected (it is
+    closed-form over the whole trace — use :func:`provision`), and
+    ``record=True`` yields ``decision_counts`` (W, B, 4, N) aggregates — the
+    fleet-path convention — because per-slot (T, N) codes are exactly the
+    O(T · N) buffer the streaming layout exists to avoid.  The randomized
+    policies still draw their (T, N) uniform tables up front (the CRN
+    contract pins draws to absolute slots); deterministic policies carry
+    O(N) only.
+    """
+    if policy == "offline":
+        raise ValueError(
+            "offline is closed-form over the full trace; the streaming engine "
+            "is online-only — use provision() for offline"
+        )
+    B, T = ab.shape
+    levels = jnp.arange(n_levels)
+
+    def one_cell(ai, pi, w, waits):
+        x, t_, _ = _stream_cell(
+            ai, pi, levels, delta=delta, max_h=max_h, window=w, policy=policy,
+            waits=waits, t_chunk=t_chunk, record=record,
+        )
+        out = {
+            "energy": P_lv * t_["run"],
+            "on_cost": beta_on_lv * t_["up"],
+            "off_cost": beta_off_lv * t_["down"],
+            "x": x,
+        }
+        if record:
+            out["decision_counts"] = jnp.stack(
+                [t_[name] for name in _prov.COUNT_ORDER]
+            )                                                    # (4, N)
+        return out
+
+    if policy in WINDOW_FREE:
+        if policy == "AQ-rand":
+            u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)
+        else:
+            u0 = u = jnp.zeros((B, 0, 0))
+
+        def one(ai, pi, u0i, ui):
+            waits = (
+                _waits_from_uniforms(policy, u0i, ui, 0, delta)
+                if policy == "AQ-rand"
+                else None
+            )
+            return one_cell(ai, pi, 0, waits)
+
+        out = jax.vmap(one)(ab, predb, u0, u)
+        return jax.tree.map(
+            lambda o: jnp.broadcast_to(o[None], (windows.shape[0],) + o.shape), out
+        )
+
+    if policy in RANDOMIZED:
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)   # (B, T, N)
+    else:
+        u0 = u = jnp.zeros((B, 0, 0))
+
+    def per_window(w):
+        def per_trace(ai, pi, u0i, ui):
+            waits = (
+                _waits_from_uniforms(policy, u0i, ui, w, delta)
+                if policy in RANDOMIZED
+                else None
+            )
+            return one_cell(ai, pi, w, waits)
+
+        return jax.vmap(per_trace)(ab, predb, u0, u)
+
+    return jax.vmap(per_window)(windows)                 # each leaf (W, B, ...)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "max_h", "policy",
+                                             "t_chunk", "record"))
+def _run_stream_noise(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
+                      keys, *, n_levels, max_h, policy, t_chunk, record=False):
+    """:func:`_run_stream` vmapped over a leading (S,) predicted-trace axis
+    (the noise sweep), mirroring :func:`_run_noise_sweep` — a separate
+    jitted entrypoint so the streaming sweep path's compiles land in a
+    countable cache too."""
+
+    def one(predb_s):
+        return _run_stream(
+            ab, predb_s, windows, delta, P_lv, beta_on_lv, beta_off_lv, keys,
+            n_levels=n_levels, max_h=max_h, policy=policy, t_chunk=t_chunk,
+            record=record,
         )
 
     return jax.vmap(one)(predb)
@@ -642,6 +872,200 @@ def _sharded_grid(ab, predb, windows, delta, P_lv, beta_on_lv, beta_off_lv,
              thresholds, horizon_wl, b, P_pad, bon_pad, boff_pad, route)
     # compact the gathered storage layout back to level order (a no-op
     # slice for ungrouped fleets, where sel is contiguous)
+    return {
+        k: (v if k == "x" else v[..., sel]) for k, v in out.items()
+    }
+
+
+def _sharded_stream(mesh, axis, ab, predb, windows, delta, P_lv, beta_on_lv,
+                    beta_off_lv, *, n_levels, max_h, policy, keys=None,
+                    use_pallas=True, group_sizes=None, t_chunk=None,
+                    record=False):
+    """Streaming twin of :func:`_sharded_run`: the level-sharded (S, W, B)
+    grid evaluated through the chunked kernels — the HBM-resident
+    double-buffered :func:`repro.kernels.provision_scan.provision_scan_stream`
+    on the Pallas route, :func:`_stream_cell` on the lax.scan route — so the
+    fleet path accepts production-length traces with an O(t_chunk + levels)
+    per-cell working set.  Same wait tables, cell maps and layout as the
+    monolithic grid (bit-exact on x and every cost leaf); per-slot decision
+    codes are never materialized (``record`` yields aggregate counters, the
+    existing fleet-path convention).
+    """
+    from repro.kernels.provision_scan import DEFAULT_T_CHUNK
+
+    _check_policy(policy)
+    if policy == "offline":
+        raise ValueError(
+            "sharded path supports online policies (offline has no slot scan); "
+            f"valid policies are {tuple(p for p in POLICIES if p != 'offline')}"
+        )
+    if policy in KEYED and keys is None:
+        _require_key(policy, None)
+    windows = jnp.asarray(windows, jnp.int32)
+    if policy in NO_PEEK:
+        h_unroll = 0
+    else:
+        try:
+            w_max = int(windows.max())
+        except jax.errors.ConcretizationTypeError:
+            w_max = max_h                       # masked peek bound (see above)
+        h_unroll = int(min(w_max + 1, max_h))
+    if t_chunk is None:
+        t_chunk = DEFAULT_T_CHUNK
+    t_chunk = int(min(t_chunk, max(int(ab.shape[-1]), 1)))
+    return _sharded_stream_grid(
+        jnp.asarray(ab), jnp.asarray(predb), windows, delta, P_lv,
+        beta_on_lv, beta_off_lv, keys,
+        mesh=mesh, axis=axis, n_levels=n_levels, max_h=max_h,
+        h_unroll=h_unroll, policy=policy, use_pallas=use_pallas,
+        group_sizes=group_sizes, t_chunk=t_chunk, record=record,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mesh", "axis", "n_levels", "max_h", "h_unroll", "policy", "use_pallas",
+    "group_sizes", "t_chunk", "record"))
+def _sharded_stream_grid(ab, predb, windows, delta, P_lv, beta_on_lv,
+                         beta_off_lv, keys, *, mesh, axis, n_levels, max_h,
+                         h_unroll, policy, use_pallas, group_sizes=None,
+                         t_chunk, record=False):
+    """One device program for the streaming sharded grid.
+
+    Identical sweep/layout/threshold construction to :func:`_sharded_grid`
+    — same CRN draws, same group-aligned routed lanes — but each shard
+    reduces its level block through the streaming kernels, which return
+    x(t), per-lane accumulators and the end-of-trace carry instead of the
+    (G, T, per_shard) on-matrix.  The forced x(T) = a(T) final off is
+    applied here from the carry (the kernel contract leaves it to the
+    caller, who alone knows the trace really ends at T).
+    """
+    from repro.kernels.provision_scan import provision_scan_stream
+
+    S, B, T = predb.shape
+    W = windows.shape[0]
+    size = mesh.shape[axis]
+    route_np, sel_np, n_layout = _group_layout(n_levels, group_sizes, size)
+    per_shard = n_layout // size
+    route = jnp.asarray(route_np)
+    sel = jnp.asarray(sel_np)
+
+    def pad_lv(v, fill):
+        v = jnp.broadcast_to(jnp.asarray(v, jnp.float32), (n_levels,))
+        return jnp.full((n_layout,), fill, jnp.float32).at[sel].set(v)
+
+    b_real = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n_levels,))
+    b = pad_lv(delta, 1.0)
+    wf = windows.astype(jnp.float32)
+    if policy in RANDOMIZED:
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)  # (B, T, N)
+        waits = jax.vmap(lambda w: jax.vmap(
+            lambda u0i, ui: _waits_from_uniforms(policy, u0i, ui, w, b_real)
+        )(u0, u))(wf)                                        # (W, B, T, N)
+        thresholds = (
+            jnp.zeros((W, B, T, n_layout), jnp.float32)
+            .at[..., sel].set(waits)
+            .reshape(W * B, T, n_layout)
+        )
+    elif policy == "AQ-rand":
+        u0, u = jax.vmap(lambda k: _uniforms(k, T, n_levels))(keys)
+        waits = jax.vmap(
+            lambda u0i, ui: _waits_from_uniforms(policy, u0i, ui, 0, b_real)
+        )(u0, u)                                             # (B, T, N)
+        thresholds = (
+            jnp.zeros((B, T, n_layout), jnp.float32).at[..., sel].set(waits)
+        )
+    elif policy in ("delayedoff", "AQ-det"):
+        thresholds = jnp.broadcast_to(b, (W, n_layout))[:, None, :]  # timer Δ_l
+    else:                                                    # A1 per window
+        thresholds = jnp.maximum(0.0, b[None, :] - wf[:, None] - 1.0)[:, None, :]
+    if policy in NO_PEEK:
+        horizon_wl = jnp.zeros((W, n_layout), jnp.float32)
+    else:
+        horizon_wl = jnp.minimum(wf[:, None] + 1.0, b[None, :])
+    P_pad = pad_lv(P_lv, 0.0)
+    bon_pad = pad_lv(beta_on_lv, 0.0)
+    boff_pad = pad_lv(beta_off_lv, 0.0)
+
+    s_ix, w_ix, b_ix = jnp.meshgrid(
+        jnp.arange(S), jnp.arange(W), jnp.arange(B), indexing="ij"
+    )
+    cell_trace = b_ix.reshape(-1).astype(jnp.int32)
+    cell_pred = (s_ix * B + b_ix).reshape(-1).astype(jnp.int32)
+    if policy in RANDOMIZED:
+        cell_thr = (w_ix * B + b_ix).reshape(-1).astype(jnp.int32)
+    elif policy == "AQ-rand":
+        cell_thr = b_ix.reshape(-1).astype(jnp.int32)
+    else:
+        cell_thr = w_ix.reshape(-1).astype(jnp.int32)
+    cell_hor = w_ix.reshape(-1).astype(jnp.int32)
+    cell_w = windows[w_ix.reshape(-1)]
+    pred_rows = predb.reshape(S * B, T)
+
+    def local(a_rows, p_rows, ct, cp, cthr, chor, cw, thr_l, hor_l, b_l,
+              Pp, bon, boff, route_l):
+        lane_ok = route_l < n_levels
+        if use_pallas:
+            x_g, accs, carry = provision_scan_stream(
+                a_rows, p_rows, thr_l, ct, cp, cthr, chor,
+                horizon=h_unroll, t_chunk=t_chunk, n_levels=n_levels,
+                routes=route_l, level_horizon=hor_l, record=record,
+            )                            # x (G, T); accs/carry lanes (G, per_shard)
+            # forced final off: the kernel's down stops at the virtual
+            # boundary; close the trace against the routed busy compare
+            a_last = a_rows[ct, T - 1]                               # (G,)
+            final_off = (
+                carry["on"] & lane_ok[None, :]
+                & ~(a_last[:, None] > route_l[None, :])
+            ).astype(jnp.int32)
+            accs = dict(accs)
+            accs["down"] = accs["down"] + final_off
+        else:
+            def per_cell(bi, pi, ti, w):
+                waits = thr_l[ti] if policy in KEYED else None
+                x, t_, _ = _stream_cell(
+                    a_rows[bi], p_rows[pi], route_l, delta=b_l, max_h=max_h,
+                    window=w, policy=policy, waits=waits, t_chunk=t_chunk,
+                    record=record, lane_ok=lane_ok,
+                )
+                return x, t_
+            x_g, accs = jax.vmap(per_cell)(ct, cp, cthr, cw)
+        x = jax.lax.psum(x_g, axis)                              # (G, T)
+        terms = {
+            "energy": Pp * accs["run"],
+            "on_cost": bon * accs["up"],
+            "off_cost": boff * accs["down"],
+        }
+        terms = {
+            k: jax.lax.all_gather(
+                v.reshape(S, W, B, per_shard), axis, axis=3, tiled=True
+            )
+            for k, v in terms.items()
+        }
+        terms["x"] = x.reshape(S, W, B, T)
+        if record:
+            counts = jnp.stack(
+                [accs[name] for name in _prov.COUNT_ORDER], axis=1
+            )                                                # (G, 4, per_shard)
+            terms["decision_counts"] = jax.lax.all_gather(
+                counts.reshape(S, W, B, 4, per_shard), axis, axis=4, tiled=True
+            )
+        return terms
+
+    out_spec = {"x": P(), "energy": P(), "on_cost": P(), "off_cost": P()}
+    if record:
+        out_spec["decision_counts"] = P()
+    cell_spec = (P(),) * 5
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P()) + cell_spec
+        + (P(None, None, axis), P(None, axis), P(axis), P(axis), P(axis),
+           P(axis), P(axis)),
+        out_specs=out_spec,
+        check_rep=False,
+    )
+    out = fn(ab, pred_rows, cell_trace, cell_pred, cell_thr, cell_hor, cell_w,
+             thresholds, horizon_wl, b, P_pad, bon_pad, boff_pad, route)
     return {
         k: (v if k == "x" else v[..., sel]) for k, v in out.items()
     }

@@ -246,30 +246,16 @@ jax.tree_util.register_dataclass(
 )
 
 
-def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> ProvisionResult:
-    """Run a :class:`ProvisionSpec` end-to-end as one jitted device program.
+def _prepare(spec: ProvisionSpec, pol: PolicySpec) -> dict:
+    """Normalize a validated spec into engine-shaped inputs (shared by
+    :func:`provision` and :func:`provision_stream`).
 
-    Subsumes the deprecated ``provision_schedule`` / ``provision_sweep`` /
-    ``provision_sweep_costs`` / ``provision_cost`` /
-    ``provision_schedule_sharded`` surface: batching is the demand's leading
-    axis, the α-sweep is ``PolicySpec.windows``, sharding is ``mesh=``.  The
-    cost model's fields flow through jit as data, so re-pricing the fleet
-    does not recompile; only (policy, shapes, Δ's static scan bound) do.
-
-    ``record_decisions=True`` fills ``ProvisionResult.decisions`` /
-    ``decision_counts`` with per-slot reason codes out of the slot scan
-    (:mod:`repro.obs.provenance`); it is a *static* switch — the default-off
-    path traces exactly today's program, bit-for-bit and compile-for-compile
-    (gated in ``provision_bench.py --smoke``).  Rejected for ``offline``,
-    which is a closed form with no slot scan to record.
+    Applies deferral water-filling, resolves the predicted trace / noise
+    sweep, infers ``n_levels``, broadcasts the cost fields per level and
+    derives the squeeze conventions.  Returns a dict of everything the
+    engine bodies consume plus the true ``arrivals`` (queue metrics are
+    always measured on those, not on the deferred profile).
     """
-    pol = spec.policy.validate()
-    if record_decisions and pol.name == "offline":
-        raise ValueError(
-            "record_decisions=True: 'offline' is the closed-form hindsight "
-            "optimum — it has no slot scan, so there are no per-slot "
-            "decisions to record"
-        )
     a = jnp.asarray(spec.workload.demand, jnp.int32)
     if a.ndim not in (1, 2):
         raise ValueError(f"demand must be (T,) or (B, T), got shape {a.shape}")
@@ -278,7 +264,7 @@ def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> Provisi
     if defer is not None:
         # defer-then-provision: the engine (predictions, noise, n_levels
         # inference, the offline baseline) runs on the water-filled service
-        # profile; queue metrics below are measured on the true arrivals
+        # profile; queue metrics are measured on the true arrivals
         a = defer.validate().apply(a)
     squeeze_b = a.ndim == 1
     ab = a[None] if squeeze_b else a
@@ -322,7 +308,6 @@ def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> Provisi
     delta_lv = jnp.broadcast_to(
         jnp.asarray(spec.costs.delta, jnp.float32), (n_levels,)
     )
-    max_h = spec.costs.delta_slots()
 
     squeeze_w = pol.windows is None
     windows = (
@@ -336,6 +321,51 @@ def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> Provisi
         keys = (
             pol.key[None] if squeeze_b else jax.random.split(pol.key, ab.shape[0])
         )
+    return dict(
+        arrivals=arrivals, defer=defer, ab=ab, predb=predb,
+        squeeze_b=squeeze_b, squeeze_w=squeeze_w, squeeze_s=squeeze_s,
+        windows=windows, keys=keys, n_levels=n_levels,
+        P_lv=P_lv, bon_lv=bon_lv, boff_lv=boff_lv, delta_lv=delta_lv,
+        max_h=spec.costs.delta_slots(),
+    )
+
+
+def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> ProvisionResult:
+    """Run a :class:`ProvisionSpec` end-to-end as one jitted device program.
+
+    Subsumes the deprecated ``provision_schedule`` / ``provision_sweep`` /
+    ``provision_sweep_costs`` / ``provision_cost`` /
+    ``provision_schedule_sharded`` surface: batching is the demand's leading
+    axis, the α-sweep is ``PolicySpec.windows``, sharding is ``mesh=``.  The
+    cost model's fields flow through jit as data, so re-pricing the fleet
+    does not recompile; only (policy, shapes, Δ's static scan bound) do.
+
+    ``record_decisions=True`` fills ``ProvisionResult.decisions`` /
+    ``decision_counts`` with per-slot reason codes out of the slot scan
+    (:mod:`repro.obs.provenance`); it is a *static* switch — the default-off
+    path traces exactly today's program, bit-for-bit and compile-for-compile
+    (gated in ``provision_bench.py --smoke``).  Rejected for ``offline``,
+    which is a closed form with no slot scan to record.
+    """
+    pol = spec.policy.validate()
+    if record_decisions and pol.name == "offline":
+        raise ValueError(
+            "record_decisions=True: 'offline' is the closed-form hindsight "
+            "optimum — it has no slot scan, so there are no per-slot "
+            "decisions to record"
+        )
+    pr = _prepare(spec, pol)
+    arrivals, defer = pr["arrivals"], pr["defer"]
+    ab, predb = pr["ab"], pr["predb"]
+    squeeze_b, squeeze_w, squeeze_s = (
+        pr["squeeze_b"], pr["squeeze_w"], pr["squeeze_s"]
+    )
+    windows, keys, n_levels, max_h = (
+        pr["windows"], pr["keys"], pr["n_levels"], pr["max_h"]
+    )
+    P_lv, bon_lv, boff_lv, delta_lv = (
+        pr["P_lv"], pr["bon_lv"], pr["boff_lv"], pr["delta_lv"]
+    )
 
     tel = get_telemetry()
     route = "mesh" if spec.mesh is not None else "scan"
@@ -420,5 +450,137 @@ def provision(spec: ProvisionSpec, *, record_decisions: bool = False) -> Provisi
         deadline_misses=queue.get("deadline_misses"),
         unserved=queue.get("unserved"),
         decisions=decisions,
+        decision_counts=counts,
+    )
+
+
+def provision_stream(
+    spec: ProvisionSpec,
+    *,
+    t_chunk: int | None = None,
+    record_decisions: bool = False,
+) -> ProvisionResult:
+    """:func:`provision` for production-length traces: same spec, same
+    result, O(t_chunk · levels) working set per cell instead of the
+    monolithic scan's O(T · levels) on-matrix.
+
+    Both engine routes stream the trace in ``t_chunk``-slot tiles with an
+    explicit carry — the lax.scan route through the chunked
+    ``_run_stream`` bodies, the ``mesh=`` route through the HBM-resident
+    double-buffered Pallas kernel
+    (:func:`repro.kernels.provision_scan.provision_scan_stream`).  Results
+    are **bit-exact** against :func:`provision` on every field for every
+    online policy: the carry preserves the engine state across tiles, the
+    peek reads into the next tile so chunking never truncates the window,
+    and the randomized policies consume the same absolute-slot wait draws
+    (CRN parity; their (T, N) uniform tables are the one O(T) allocation
+    the streaming path keeps — docs/provisioning_engine.md "Streaming &
+    long traces").
+
+    Two deliberate differences: ``offline`` is rejected (the hindsight
+    optimum is a closed form over the whole trace — there is nothing to
+    stream), and ``record_decisions=True`` fills ``decision_counts`` only
+    (aggregate per-level counters, the fleet-path convention) — per-slot
+    ``decisions`` codes are exactly the O(T · N) buffer streaming exists to
+    avoid.  ``t_chunk`` defaults to
+    :data:`repro.kernels.provision_scan.DEFAULT_T_CHUNK` and is clamped to
+    the trace length; it is a compile key but never changes results.
+    """
+    from repro.kernels.provision_scan import DEFAULT_T_CHUNK
+
+    pol = spec.policy.validate()
+    if pol.name == "offline":
+        raise ValueError(
+            "provision_stream is online-only: 'offline' is the closed-form "
+            "hindsight optimum over the whole trace — use provision()"
+        )
+    pr = _prepare(spec, pol)
+    arrivals, defer = pr["arrivals"], pr["defer"]
+    ab, predb = pr["ab"], pr["predb"]
+    squeeze_b, squeeze_w, squeeze_s = (
+        pr["squeeze_b"], pr["squeeze_w"], pr["squeeze_s"]
+    )
+    windows, keys, n_levels, max_h = (
+        pr["windows"], pr["keys"], pr["n_levels"], pr["max_h"]
+    )
+    P_lv, bon_lv, boff_lv, delta_lv = (
+        pr["P_lv"], pr["bon_lv"], pr["boff_lv"], pr["delta_lv"]
+    )
+    T = int(ab.shape[-1])
+    if t_chunk is None:
+        t_chunk = DEFAULT_T_CHUNK
+    t_chunk = int(min(max(int(t_chunk), 1), max(T, 1)))
+
+    tel = get_telemetry()
+    route = "mesh" if spec.mesh is not None else "scan"
+    with tel.span("provision_stream", policy=pol.name, route=route,
+                  n_levels=n_levels, t_chunk=t_chunk,
+                  record=record_decisions):
+        if spec.mesh is not None:
+            predb3 = predb[None] if predb.ndim == 2 else predb
+            out = _engine._sharded_stream(
+                spec.mesh, spec.mesh_axis, ab, predb3, windows, delta_lv, P_lv,
+                bon_lv, boff_lv, n_levels=n_levels, max_h=max_h,
+                policy=pol.name, keys=keys, use_pallas=spec.use_pallas,
+                group_sizes=spec.costs.group_sizes, t_chunk=t_chunk,
+                record=record_decisions,
+            )
+
+            def _squeeze(o):
+                if squeeze_b:
+                    o = jnp.squeeze(o, axis=2)
+                if squeeze_w:
+                    o = jnp.squeeze(o, axis=1)
+                if squeeze_s:
+                    o = jnp.squeeze(o, axis=0)
+                return o
+
+            out = jax.tree.map(_squeeze, out)
+        else:
+            body = (
+                _engine._run_stream if squeeze_s else _engine._run_stream_noise
+            )
+            out = body(
+                ab, predb, windows, delta_lv, P_lv, bon_lv, boff_lv, keys,
+                n_levels=n_levels, max_h=max_h, policy=pol.name,
+                t_chunk=t_chunk, record=record_decisions,
+            )
+            lead = 0 if squeeze_s else 1
+            if squeeze_b:
+                out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead + 1), out)
+            if squeeze_w:
+                out = jax.tree.map(lambda o: jnp.squeeze(o, axis=lead), out)
+
+    counts = None
+    if record_decisions:
+        rows = out.pop("decision_counts")           # (..., 4, N) int32
+        counts = {
+            name: rows[..., i, :]
+            for i, name in enumerate(_prov.COUNT_ORDER)
+        }
+        offs = counts["toggle_off"]
+        if tel.enabled and not isinstance(offs, jax.core.Tracer):
+            tel.count("provision/decision_toggle_offs", float(offs.sum()))
+
+    level_cost = out["energy"] + out["on_cost"] + out["off_cost"]
+    queue = (
+        {} if defer is None else defer.metrics(arrivals, out["x"])
+    )
+    return ProvisionResult(
+        x=out["x"],
+        cost=level_cost.sum(axis=-1),
+        energy=out["energy"].sum(axis=-1),
+        toggle_cost=(out["on_cost"] + out["off_cost"]).sum(axis=-1),
+        level_cost=level_cost,
+        group_cost=(
+            None if spec.costs.group_sizes is None
+            else spec.costs.group_reduce(level_cost)
+        ),
+        backlog=queue.get("backlog"),
+        max_delay=queue.get("max_delay"),
+        p99_delay=queue.get("p99_delay"),
+        deadline_misses=queue.get("deadline_misses"),
+        unserved=queue.get("unserved"),
+        decisions=None,
         decision_counts=counts,
     )

@@ -6,14 +6,34 @@ into the water-filled service profile the provisioning engine runs on
 queue — backlog, queueing delay, deadline misses — under a dispatch rule.
 :class:`DeferralSpec` is the user-facing model attached to
 ``Workload(deferral=...)``; see ``docs/deferral.md``.
+
+The streaming serving path (``FleetProvisioner.advance``) uses the
+carry-based twins — :func:`defer_stream` (the honest *causal* deferral
+rule, O(slack) state) and :func:`queue_stream` /
+:func:`queue_stream_finalize` (the same age-bucket queue with the carry
+crossing call boundaries) — both chunk-size invariant by construction.
 """
-from .queue_scan import defer_demand, due_envelope, queue_scan
+from .queue_scan import (
+    defer_demand,
+    defer_stream,
+    defer_stream_init,
+    due_envelope,
+    queue_scan,
+    queue_stream,
+    queue_stream_finalize,
+    queue_stream_init,
+)
 from .spec import RULES, DeferralSpec
 
 __all__ = [
     "DeferralSpec",
     "RULES",
     "defer_demand",
+    "defer_stream",
+    "defer_stream_init",
     "due_envelope",
     "queue_scan",
+    "queue_stream",
+    "queue_stream_finalize",
+    "queue_stream_init",
 ]

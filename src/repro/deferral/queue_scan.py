@@ -134,6 +134,179 @@ def defer_demand(
     return out.astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Streaming (carry-based) twins: O(slack) state, chunk-size invariant
+# ---------------------------------------------------------------------------
+
+def defer_stream_init(slack: int) -> dict:
+    """Fresh carry for :func:`defer_stream`: ``awin[j]`` = cumulative
+    arrivals through ``j + 1`` slots ago (all zero before the trace) and
+    ``served`` = total work served so far."""
+    K = int(slack)
+    return {
+        "awin": jnp.zeros((max(K, 1),), jnp.int32),
+        "served": jnp.zeros((), jnp.int32),
+    }
+
+
+def defer_stream(a, state, *, slack: int, cap: int | None = None, valid=None):
+    """Causal streaming deferral: one chunk of arrivals → service profile.
+
+    The stepper's online twin of :func:`defer_demand`.  The batch arriving
+    at ``u`` is due by ``u + slack``, so by slot ``t`` the work due within
+    ``k`` more slots is ``A(t − slack + k)`` — *cumulative arrivals only*,
+    no future terms — and the slot serves the smallest rate that clears
+    every known deadline::
+
+        c(t) = clip(min(A(t) − S, max_{k ≤ slack} ⌈(A(t−slack+k) − S)/(k+1)⌉),
+                    0, cap)
+
+    The carry is the ``slack``-deep cumulative-arrival window plus the
+    served total — O(slack) state, so the profile is *chunk-size
+    invariant*: any split of the arrival stream into ``defer_stream`` calls
+    yields identical output (property-gated in tests/test_streaming.py).
+    Uncapped, every deadline is met (the ``k = 0`` term forces all due work
+    out), and ``slack = 0`` returns the arrivals bit-exactly.
+
+    This is deliberately *not* :func:`defer_demand`, which implements the
+    hindsight OA rule: its density max ranges over the full remaining
+    horizon, so it pre-spreads bursts it has not seen yet (anticipative
+    even uncapped — e.g. arrivals ``[3, 0, 300]`` with ``slack = 2`` serve
+    3 units at ``t = 0`` under OA but only 1 causally).  Batch evaluation
+    keeps the OA profile; live serving gets this honest causal rule
+    (docs/deferral.md).
+
+    ``a``: (Tc,) int32 chunk of arrivals; ``valid``: optional (Tc,) bool —
+    masked slots serve nothing and freeze the carry (the stepper's pow2 pad
+    tail).  Returns ``(deferred (Tc,) int32, new_state)``.
+    """
+    K = int(slack)
+    a = jnp.asarray(a, jnp.int32)
+    Tc = a.shape[0]
+    v = jnp.ones((Tc,), bool) if valid is None else jnp.asarray(valid, bool)
+    if K == 0:
+        out = jnp.where(v, a, 0)
+        new = {
+            "awin": state["awin"],
+            "served": state["served"] + out.sum(),
+        }
+        return out, new
+    k = jnp.arange(K + 1, dtype=jnp.int32)
+
+    def step(carry, inp):
+        awin, S = carry
+        a_t, v_t = inp
+        A_t = awin[0] + a_t                    # cumulative arrivals through t
+        lvals = jnp.concatenate([awin[::-1], A_t[None]])   # A(t-K) .. A(t)
+        need = (jnp.maximum(lvals - S, 0) + k) // (k + 1)  # integer ceil
+        c = jnp.minimum(need.max(), A_t - S)
+        if cap is not None:
+            c = jnp.minimum(c, jnp.int32(cap))
+        c = jnp.maximum(c, 0)
+        c = jnp.where(v_t, c, 0)
+        awin = jnp.where(v_t, jnp.concatenate([A_t[None], awin[:-1]]), awin)
+        return (awin, S + c), c
+
+    (awin, S), out = jax.lax.scan(
+        step, (state["awin"], state["served"]), (a, v)
+    )
+    return out.astype(jnp.int32), {"awin": awin, "served": S}
+
+
+def queue_stream_init(max_slack: int) -> dict:
+    """Fresh carry for :func:`queue_stream`: empty age buckets, zero miss
+    counter, zero served-by-age histogram."""
+    nb = int(max_slack) + 2
+    return {
+        "w": jnp.zeros((nb,), jnp.int32),
+        "miss": jnp.zeros((), jnp.int32),
+        "hist": jnp.zeros((nb,), jnp.int32),
+    }
+
+
+def queue_stream(a, x, state, *, rule: str = "EDF", max_slack: int, valid=None):
+    """One chunk of the deferral queue, carry in age buckets.
+
+    The streaming twin of :func:`queue_scan` for *scalar* slack: identical
+    per-slot dynamics (age → expire-count → admit → sorted prefix-sum
+    waterfill), but the ``(w, miss, hist)`` state crosses call boundaries,
+    so a mid-flight backlog split by a chunk boundary is continued exactly
+    (chunk-size invariance, property-gated).  The end-of-horizon
+    correction — counting leftovers whose deadline lands exactly at the
+    final slot — is **not** applied here (the trace has not ended); call
+    :func:`queue_stream_finalize` when it has.
+
+    ``a``/``x``: (Tc,) int32 arrivals and capacity; ``valid``: optional
+    (Tc,) bool pad mask (masked slots freeze the carry and repeat the
+    previous backlog).  Returns ``(backlog (Tc,) int32, new_state)``.
+    """
+    K = int(max_slack)
+    nb = K + 2
+    a = jnp.asarray(a, jnp.int32)
+    x = jnp.asarray(x, jnp.int32)
+    Tc = a.shape[0]
+    v = jnp.ones((Tc,), bool) if valid is None else jnp.asarray(valid, bool)
+    ages = jnp.arange(nb, dtype=jnp.int32)
+    rem = jnp.concatenate(
+        [jnp.int32(K) - ages[: K + 1], jnp.full((1,), -1, jnp.int32)]
+    )
+    # EDF/FIFO keys depend only on ages under scalar slack, so the serve
+    # order is one host-side lexsort; SPT/LPT re-key per slot (bucket sizes)
+    static_order = rule in ("EDF", "FIFO")
+    if static_order:
+        prim, sec = _priority(rule, None, rem, rem >= 0, ages, nb)
+        order0 = jnp.lexsort((sec, prim))
+
+    def step(carry, inp):
+        w, miss, hist = carry
+        a_t, x_t, v_t = inp
+        miss2 = miss + w[K]            # last chance was the previous slot
+        w_new = jnp.concatenate([a_t[None], w[:-1]]).at[nb - 1].add(w[nb - 1])
+        if static_order:
+            order = order0
+        else:
+            p, s = _priority(rule, w_new, rem, rem >= 0, ages, nb)
+            order = jnp.lexsort((s, p))
+        ws = w_new[order]
+        ahead = jnp.cumsum(ws) - ws
+        served_sorted = jnp.clip(x_t - ahead, 0, ws)
+        served = jnp.zeros_like(w_new).at[order].set(served_sorted)
+        w_after = w_new - served
+        w_out = jnp.where(v_t, w_after, w)
+        miss_out = jnp.where(v_t, miss2, miss)
+        hist_out = jnp.where(v_t, hist + served, hist)
+        return (w_out, miss_out, hist_out), w_out.sum()
+
+    (w, miss, hist), backlog = jax.lax.scan(
+        step, (state["w"], state["miss"], state["hist"]), (a, x, v)
+    )
+    return backlog, {"w": w, "miss": miss, "hist": hist}
+
+
+def queue_stream_finalize(state, *, max_slack: int) -> dict:
+    """Close the horizon on a :func:`queue_stream` carry: apply
+    :func:`queue_scan`'s end-of-trace correction (units due exactly at the
+    final slot plus merged-late leftovers count as misses) and derive the
+    delay metrics from the served-by-age histogram.  Returns the same
+    metric names as :func:`queue_scan` minus the per-slot ``backlog``.
+    """
+    K = int(max_slack)
+    nb = K + 2
+    hist = state["hist"]
+    ages = jnp.arange(nb, dtype=jnp.int32)
+    miss = state["miss"] + state["w"][K] + state["w"][nb - 1]
+    total = hist.sum()
+    cum = jnp.cumsum(hist)
+    p99 = jnp.argmax(cum >= jnp.ceil(0.99 * total)).astype(jnp.int32)
+    return {
+        "served_by_age": hist,
+        "deadline_misses": miss,
+        "unserved": state["w"].sum(),
+        "max_delay": jnp.maximum(jnp.max(jnp.where(hist > 0, ages, -1)), 0),
+        "p99_delay": p99,
+    }
+
+
 def _priority(rule: str, w, rem, live, ages, n_buckets):
     """(primary, secondary) sort keys, smaller served first.
 

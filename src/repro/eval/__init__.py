@@ -12,8 +12,10 @@ from .report import (
     SCHEMA_V1,
     SCHEMA_V2,
     SCHEMA_V3,
+    SCHEMA_V4,
     CellResult,
     EvalReport,
+    StreamingRow,
 )
 
 __all__ = [
@@ -22,9 +24,11 @@ __all__ = [
     "SCHEMA_V1",
     "SCHEMA_V2",
     "SCHEMA_V3",
+    "SCHEMA_V4",
     "TYPED_POLICIES",
     "CellResult",
     "EvalGrid",
     "EvalReport",
+    "StreamingRow",
     "evaluate",
 ]

@@ -29,8 +29,17 @@ are excluded from cell equality (``compare=False``) so determinism checks
 — same grid, same cells — keep holding across machines, and they are None
 on cells loaded from v1–v3 artifacts.  Cells produced by one device
 program (a shared (noise × window) sweep) report the program's totals on
-each of its cells.  :meth:`EvalReport.load` still reads v1, v2 and v3
-artifacts (pinned by ``tests/fixtures/report_v*.json``).
+each of its cells.
+
+v5 adds the report-level ``streaming`` section: one :class:`StreamingRow`
+per serving chunk size, recording the ``FleetProvisioner.advance()``
+stepper's plan-latency p50/p99 and the number of jit traces the whole
+chunked loop needed (the steady-state-zero-recompiles claim, gated) at
+T_chunk ∈ {1, 64, 1024}.  The latency columns are wall-clock facts
+(``compare=False``, diffed informationally by ``bench_diff.py`` — never
+gated); ``compiles``/``chunks``/``slots`` are results.  ``streaming`` is
+None on artifacts loaded from v1–v4.  :meth:`EvalReport.load` still reads
+every older version (pinned by ``tests/fixtures/report_v*.json``).
 """
 from __future__ import annotations
 
@@ -38,7 +47,8 @@ import dataclasses
 import json
 import pathlib
 
-SCHEMA = "repro.eval/v4"
+SCHEMA = "repro.eval/v5"
+SCHEMA_V4 = "repro.eval/v4"
 SCHEMA_V3 = "repro.eval/v3"
 SCHEMA_V2 = "repro.eval/v2"
 SCHEMA_V1 = "repro.eval/v1"
@@ -111,6 +121,25 @@ class CellResult:
     compiles: int | None = dataclasses.field(default=None, compare=False)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamingRow:
+    """One serving-loop measurement: ``FleetProvisioner.advance()`` driven
+    at a fixed ``t_chunk`` for ``chunks`` chunks (``slots`` demand slots
+    total, after a warmup chunk).  ``p50_ms``/``p99_ms`` are the stepper's
+    per-call plan latencies from :class:`repro.serving.metrics.PlanMetrics`
+    — wall-clock facts, excluded from equality and never gated.
+    ``compiles`` counts jit traces the measured loop added: 0 is the
+    steady-state claim (the warmup call owns the bucket's trace)."""
+
+    policy: str
+    t_chunk: int
+    chunks: int
+    slots: int
+    compiles: int
+    p50_ms: float | None = dataclasses.field(default=None, compare=False)
+    p99_ms: float | None = dataclasses.field(default=None, compare=False)
+
+
 @dataclasses.dataclass
 class EvalReport:
     """The full grid's results plus enough metadata to reproduce them."""
@@ -122,6 +151,7 @@ class EvalReport:
     expected_compiles: int
     elapsed_s: float
     schema: str = SCHEMA
+    streaming: list[StreamingRow] | None = None
 
     @property
     def bounds_ok(self) -> bool:
@@ -165,7 +195,7 @@ class EvalReport:
         return sorted(self.cells, key=slack)[:n]
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "schema": self.schema,
             "grid": self.grid,
             "backend": self.backend,
@@ -175,6 +205,9 @@ class EvalReport:
             "bounds_ok": self.bounds_ok,
             "cells": [dataclasses.asdict(c) for c in self.cells],
         }
+        if self.streaming is not None:
+            d["streaming"] = [dataclasses.asdict(r) for r in self.streaming]
+        return d
 
     def save(self, path: str | pathlib.Path) -> pathlib.Path:
         path = pathlib.Path(path)
@@ -183,14 +216,14 @@ class EvalReport:
 
     @classmethod
     def from_dict(cls, d: dict) -> "EvalReport":
-        # v1-v3 artifacts load as-is: the newer fields are all defaulted,
+        # v1-v4 artifacts load as-is: the newer fields are all defaulted,
         # so an older cell dict simply leaves them None (back-compat
         # contract, pinned by tests/fixtures/report_v*.json)
-        if d.get("schema") not in (SCHEMA, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1):
+        readable = (SCHEMA, SCHEMA_V4, SCHEMA_V3, SCHEMA_V2, SCHEMA_V1)
+        if d.get("schema") not in readable:
             raise ValueError(
                 f"report schema {d.get('schema')!r} != expected {SCHEMA!r} "
-                f"(or the readable {SCHEMA_V3!r} / {SCHEMA_V2!r} / "
-                f"{SCHEMA_V1!r})"
+                f"(or the readable {', '.join(map(repr, readable[1:]))})"
             )
         return cls(
             grid=d["grid"],
@@ -200,6 +233,10 @@ class EvalReport:
             expected_compiles=d["expected_compiles"],
             elapsed_s=d["elapsed_s"],
             schema=d["schema"],
+            streaming=(
+                None if d.get("streaming") is None
+                else [StreamingRow(**r) for r in d["streaming"]]
+            ),
         )
 
     @classmethod
@@ -230,4 +267,15 @@ class EvalReport:
                     f"{'slo_ok' if c.slo_ok else 'SLO_VIOLATED'}]"
                 )
             lines.append(line)
+        if self.streaming:
+            lines.append(
+                "streaming: policy,t_chunk,chunks,slots,p50_ms,p99_ms,compiles"
+            )
+            for r in self.streaming:
+                p50 = "-" if r.p50_ms is None else f"{r.p50_ms:.3f}"
+                p99 = "-" if r.p99_ms is None else f"{r.p99_ms:.3f}"
+                lines.append(
+                    f"streaming: {r.policy},{r.t_chunk},{r.chunks},{r.slots},"
+                    f"{p50},{p99},{r.compiles}"
+                )
         return lines

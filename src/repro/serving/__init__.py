@@ -1,4 +1,9 @@
-"""Serving: per-replica engines + the paper's autoscaler + cluster simulation."""
+"""Serving: per-replica engines + the paper's autoscaler + cluster simulation.
+
+``FleetProvisioner.advance()`` streams: the O(1)-state incremental stepper
+behind it (engine carry, pow2 chunk buckets, slot-indexed PRNG) lives in
+:mod:`repro.serving.stepper` and is exported here for direct use.
+"""
 from .autoscaler import (
     FleetProvisioner,
     ReplicaAutoscaler,
@@ -8,13 +13,18 @@ from .autoscaler import (
 from .cluster import ClusterReport, make_window_max_predictor, run_cluster
 from .engine import GenerationResult, InferenceEngine
 from .metrics import PlanMetrics
+from .stepper import StepperState, pow2_bucket, stepper_chunk, stepper_init
 
 __all__ = [
     "FleetProvisioner",
     "PlanMetrics",
     "ReplicaAutoscaler",
     "ScalerReport",
+    "StepperState",
+    "pow2_bucket",
     "replica_cost_model",
+    "stepper_chunk",
+    "stepper_init",
     "ClusterReport",
     "make_window_max_predictor",
     "run_cluster",

@@ -280,6 +280,10 @@ class FleetProvisioner:
         self.deferral = deferral
         self._history = np.zeros(0, np.int64)
         self.last_plan = None
+        #: the advance() stepper's carry (:class:`repro.serving.stepper.
+        #: StepperState`); None until the first advance() call
+        self.state = None
+        self._prev_x = None
         from .metrics import PlanMetrics
 
         #: rolling advance() health: plan-latency p50/p99, toggle churn,
@@ -332,28 +336,51 @@ class FleetProvisioner:
         return np.asarray(provision(self._spec(demand, windows=windows)).cost)
 
     def advance(self, demand_chunk) -> np.ndarray:
-        """Absorb the next chunk of per-slot demand; return its replica plan.
+        """Commit the next chunk of per-slot demand; return its replica plan.
 
-        A planning-window stepper for operating loops: each call appends
-        ``demand_chunk`` (shape ``(T_chunk,)``) to the planner's demand
-        history, re-plans over a trailing window wide enough to warm the
-        chunk's decisions (a few Δ of context plus the deferral slack
-        bound, so ski-rental clocks and queued backlog carry in), stores
-        the full :class:`ProvisionResult` on ``self.last_plan``, and
-        returns the ``(T_chunk,)`` slice of ``x`` covering the new slots.
-        This is deliberately plan-ahead, not the streaming kernel: earlier
-        slots may be re-decided as context grows, which is exactly what an
-        operator wants from a rolling capacity plan.
+        A *true incremental stepper*: the per-level engine state
+        (ski-rental clocks, on bits, residual waits), the causal deferral
+        window and the queue's age buckets persist on ``self.state``
+        (:class:`~repro.serving.stepper.StepperState`), so each call costs
+        O(chunk · replicas) regardless of how long the fleet has been
+        running — no history is re-planned, and every returned slot is
+        final (*commit-as-returned*; the no-peek policies are exactly
+        chunk-size invariant, the peeking ones read the window within the
+        chunk only — docs/provisioning_engine.md "Streaming & long
+        traces").  Chunks are padded to power-of-two buckets
+        (:func:`~repro.serving.stepper.pow2_bucket`) with the tail masked
+        as jit data, so steady-state serving does **zero** recompiles
+        across any mix of chunk sizes inside a warmed bucket.
 
-        Every step records into ``self.metrics``
-        (:class:`~repro.serving.metrics.PlanMetrics`): the re-plan wall
-        latency, the chunk's replica toggles (including the seam from the
-        previous chunk), and the deferral backlog depth after the chunk —
-        ``self.metrics.prometheus_text()`` serves them.
+        Deferral follows the causal :func:`repro.deferral.defer_stream`
+        rule (an honest online semantics — the batch planner's OA
+        water-filling is anticipative; see docs/deferral.md) and requires
+        scalar slack.  Randomized policies draw waits from the
+        slot-indexed stream ``fold_in(key, global_slot)`` — reproducible
+        and chunk-size invariant, but a different stream than ``plan()``'s
+        per-trace tables.
+
+        ``self.last_plan`` carries the chunk's view as a
+        :class:`~repro.core.ProvisionResult`: ``x``/``backlog`` cover the
+        chunk, the cost fields are chunk-local (toggle edges against the
+        carried state; no forced final-off — the trace has not ended),
+        and the queue scalars (``deadline_misses``/``unserved``/delay
+        quantiles) are *cumulative since the first call*.  Every step
+        records plan latency, toggles (including the seam from the
+        previous chunk) and backlog depth into ``self.metrics``.
         """
         import time
 
+        import jax.numpy as jnp
+
+        from repro.core import ProvisionResult
+        from repro.deferral import (
+            defer_stream,
+            queue_stream,
+            queue_stream_finalize,
+        )
         from repro.obs.telemetry import get_telemetry
+        from .stepper import pow2_bucket, stepper_chunk, stepper_init
 
         chunk = np.asarray(demand_chunk, np.int64)
         if chunk.ndim != 1:
@@ -363,29 +390,117 @@ class FleetProvisioner:
             )
         if chunk.size == 0:
             raise ValueError("advance() needs at least one demand slot")
-        prev_last = (
-            None if self.last_plan is None
-            else int(np.asarray(self.last_plan.x)[-1])
+        if self.policy.name == "offline":
+            raise ValueError(
+                "advance() steps online policies; 'offline' needs the whole "
+                "trace in hindsight — use plan()"
+            )
+        if self.policy.windows is not None:
+            raise ValueError(
+                "the planner's PolicySpec carries a windows= sweep; advance() "
+                "steps a single window — use plan_sweep()/sweep_costs(), or "
+                "drop windows from the PolicySpec"
+            )
+        if self.deferral is not None and np.ndim(self.deferral.slack) != 0:
+            raise ValueError(
+                "advance() streams with scalar slack only (a per-slot slack "
+                "vector is tied to one fixed horizon) — use plan()"
+            )
+        arrivals = self._as_i32(chunk)
+        n = chunk.size
+        max_h = self.costs.delta_slots()
+        delta_lv = jnp.broadcast_to(
+            jnp.asarray(self.costs.delta, jnp.float32), (self.max_replicas,)
+        )
+        if self.state is None:
+            self.state = stepper_init(
+                self.max_replicas, delta_lv, policy=self.policy.name,
+                window=self.policy.window, deferral=self.deferral,
+            )
+        st = self.state
+        t_pad = pow2_bucket(n)
+        pad = np.zeros(t_pad, np.int32)
+        valid = np.arange(t_pad) < n
+
+        with get_telemetry().span("serving/advance", chunk=n, t_pad=t_pad,
+                                  t0=st.t):
+            t_wall = time.perf_counter()
+            if self.deferral is None:
+                served, defer_c = arrivals, None
+            else:
+                apad = jnp.asarray(
+                    np.concatenate([np.asarray(arrivals), pad[n:]]))
+                served_pad, defer_c = defer_stream(
+                    apad, st.defer, slack=self.deferral.bound(),
+                    cap=self.deferral.cap, valid=jnp.asarray(valid),
+                )
+                served = served_pad[:n]
+            a_pad = jnp.asarray(
+                np.concatenate([np.asarray(served, np.int32), pad[n:]]))
+            x_pad, (r, on, wait), totals = stepper_chunk(
+                a_pad, jnp.int32(n), jnp.int32(st.t), self.policy.key,
+                st.r, st.on, st.wait, delta_lv,
+                policy=self.policy.name, n_levels=self.max_replicas,
+                max_h=max_h, window=self.policy.window, t_pad=t_pad,
+            )
+            x = np.asarray(x_pad)[:n]
+            queue_c, backlog, qsnap = None, None, {}
+            if self.deferral is not None:
+                xq = jnp.asarray(np.concatenate([x.astype(np.int32), pad[n:]]))
+                backlog_pad, queue_c = queue_stream(
+                    apad, xq, st.queue, rule=self.deferral.rule,
+                    max_slack=self.deferral.bound(), valid=jnp.asarray(valid),
+                )
+                backlog = jnp.asarray(backlog_pad)[:n]
+                qsnap = queue_stream_finalize(
+                    queue_c, max_slack=self.deferral.bound())
+            latency_ms = (time.perf_counter() - t_wall) * 1e3
+
+        self.state = dataclasses.replace(
+            st, t=st.t + n, r=r, on=on, wait=wait,
+            defer=defer_c, queue=queue_c,
         )
         self._history = np.concatenate([self._history, chunk])
-        slack = 0 if self.deferral is None else self.deferral.bound()
-        context = 3 * self.costs.delta_slots() + slack
-        window = self._history[-(chunk.size + context):]
-        with get_telemetry().span("serving/advance", chunk=chunk.size):
-            t0 = time.perf_counter()
-            self.last_plan = self.plan(window)
-            x = np.asarray(self.last_plan.x)
-            latency_ms = (time.perf_counter() - t0) * 1e3
-        xc = x[-chunk.size:]
-        toggles = int(np.abs(np.diff(xc)).sum())
-        if prev_last is not None:
-            toggles += abs(int(xc[0]) - prev_last)      # seam between chunks
-        backlog = (
-            0 if self.last_plan.backlog is None
-            else int(np.asarray(self.last_plan.backlog)[-1])
+        P_lv, bon_lv, boff_lv = self.costs.per_level(self.max_replicas)
+        level_cost = (
+            P_lv * totals["run"] + bon_lv * totals["up"]
+            + boff_lv * totals["down"]
         )
-        self.metrics.observe_plan(latency_ms, toggles, backlog)
-        return xc
+        self.last_plan = ProvisionResult(
+            x=jnp.asarray(x),
+            cost=level_cost.sum(),
+            energy=(P_lv * totals["run"]).sum(),
+            toggle_cost=(
+                bon_lv * totals["up"] + boff_lv * totals["down"]
+            ).sum(),
+            level_cost=level_cost,
+            group_cost=(
+                None if self.costs.group_sizes is None
+                else self.costs.group_reduce(level_cost)
+            ),
+            backlog=backlog,
+            max_delay=qsnap.get("max_delay"),
+            p99_delay=qsnap.get("p99_delay"),
+            deadline_misses=qsnap.get("deadline_misses"),
+            unserved=qsnap.get("unserved"),
+        )
+        toggles = int(np.abs(np.diff(x)).sum())
+        if self._prev_x is not None:
+            toggles += abs(int(x[0]) - self._prev_x)    # seam between chunks
+        self._prev_x = int(x[-1])
+        self.metrics.observe_plan(
+            latency_ms, toggles,
+            0 if backlog is None else int(np.asarray(backlog)[-1]),
+        )
+        return x
+
+    def reset(self) -> None:
+        """Drop the advance() carry and history — the next call starts a
+        fresh trace (compiled steps stay warm; state is data)."""
+        self.state = None
+        self._prev_x = None
+        self._history = np.zeros(0, np.int64)
+        self.last_plan = None
 
     def _as_i32(self, demand):
         import jax.numpy as jnp

@@ -3,11 +3,11 @@
 :class:`PlanMetrics` is the operational counterpart of the eval report's
 runtime columns: every :meth:`FleetProvisioner.advance()
 <repro.serving.autoscaler.FleetProvisioner.advance>` step records how long
-the re-plan took, how many replica toggles the new plan carries over the
+the stepper took, how many replica toggles the new plan carries over the
 chunk, and the queue backlog depth — the three signals an operator
-watches on a rolling capacity planner (plan latency must stay inside the
-slot, toggle churn is the paper's cost being spent, backlog depth is the
-deferral queue's health).
+watches on a streaming capacity planner (plan latency must stay inside
+the slot, toggle churn is the paper's cost being spent, backlog depth is
+the deferral queue's health).
 
 Exports: Python-side accessors (``latency_quantile(0.99)``, ``.toggles``,
 ``.backlog_depth``) plus :meth:`PlanMetrics.prometheus_text` — the
@@ -76,7 +76,7 @@ class PlanMetrics:
         """
         lat = self.plan_latencies_ms
         lines = [
-            f"# HELP {prefix}_plan_latency_ms Wall time of one advance() re-plan.",
+            f"# HELP {prefix}_plan_latency_ms Wall time of one advance() step.",
             f"# TYPE {prefix}_plan_latency_ms summary",
         ]
         for q in _QUANTILES:

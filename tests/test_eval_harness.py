@@ -382,7 +382,7 @@ def test_deferral_slack_buys_cost_off(defer_report):
 
 
 def test_deferral_report_round_trips(tmp_path, defer_report):
-    assert SCHEMA.endswith("/v4")
+    assert SCHEMA.endswith("/v5")
     p = defer_report.save(tmp_path / "defer.json")
     loaded = EvalReport.load(p)
     assert loaded.cells == defer_report.cells

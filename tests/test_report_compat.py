@@ -1,5 +1,5 @@
-"""Schema back-compat: checked-in v1/v2/v3 report artifacts must keep
-loading under the v4 reader, with every newer column defaulted to None.
+"""Schema back-compat: checked-in v1/v2/v3/v4 report artifacts must keep
+loading under the v5 reader, with every newer column defaulted to None.
 
 The fixture files in ``tests/fixtures/`` are frozen copies of what older
 code actually wrote — regenerating them from current code would defeat the
@@ -13,12 +13,24 @@ import pathlib
 
 import pytest
 
-from repro.eval import SCHEMA, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, EvalReport
+from repro.eval import (
+    SCHEMA,
+    SCHEMA_V1,
+    SCHEMA_V2,
+    SCHEMA_V3,
+    SCHEMA_V4,
+    EvalReport,
+    StreamingRow,
+)
 from repro.eval.report import CellResult
 
 FIXTURES = pathlib.Path(__file__).parent / "fixtures"
 
-#: columns each schema version introduced, newest first
+OLD_FIXTURES = ("report_v1.json", "report_v2.json", "report_v3.json",
+                "report_v4.json")
+
+#: columns each schema version introduced, newest first (v5's addition is
+#: the report-level ``streaming`` section, not a cell column)
 V4_COLUMNS = ("wall_ms", "compiles")
 V3_COLUMNS = ("slack", "rule", "max_delay", "p99_delay",
               "deadline_misses", "slo_ok")
@@ -30,14 +42,17 @@ V2_COLUMNS = ("p50_cr", "cr_quantiles", "group_names", "group_mean_cr",
     ("report_v1.json", SCHEMA_V1),
     ("report_v2.json", SCHEMA_V2),
     ("report_v3.json", SCHEMA_V3),
+    ("report_v4.json", SCHEMA_V4),
 ])
 def test_old_fixture_loads_with_new_columns_none(name, schema):
     rep = EvalReport.load(FIXTURES / name)
     assert rep.schema == schema
     assert rep.cells
-    for c in rep.cells:
-        for col in V4_COLUMNS:
-            assert getattr(c, col) is None, f"{name}: {col} should be None"
+    assert rep.streaming is None, f"{name}: v5 streaming should default None"
+    if schema != SCHEMA_V4:
+        for c in rep.cells:
+            for col in V4_COLUMNS:
+                assert getattr(c, col) is None, f"{name}: {col} should be None"
     if schema == SCHEMA_V1:
         for c in rep.cells:
             for col in V2_COLUMNS + V3_COLUMNS:
@@ -55,6 +70,12 @@ def test_v3_fixture_keeps_typed_and_deferral_columns():
     assert typed and defer
     assert typed[0].group_names == ["efficient", "legacy"]
     assert defer[0].rule == "EDF" and defer[0].slo_ok is True
+
+
+def test_v4_fixture_keeps_runtime_columns():
+    rep = EvalReport.load(FIXTURES / "report_v4.json")
+    assert any(c.wall_ms is not None for c in rep.cells)
+    assert any(c.compiles is not None for c in rep.cells)
 
 
 def test_loaded_old_report_round_trips_preserving_schema(tmp_path):
@@ -75,8 +96,28 @@ def test_runtime_columns_are_excluded_from_cell_equality():
     assert timed.wall_ms == 123.4 and base.wall_ms is None
 
 
-def test_current_schema_is_v4_and_unknown_schema_rejected(tmp_path):
-    assert SCHEMA.endswith("/v4")
+def test_streaming_rows_round_trip_and_latency_not_compared(tmp_path):
+    """The v5 streaming section serializes, reloads, and its wall-clock
+    latency columns stay out of equality (the compiles claim is a result
+    and IS compared)."""
+    rep = EvalReport.load(FIXTURES / "report_v4.json")
+    rep.schema = SCHEMA
+    rep.streaming = [
+        StreamingRow(policy="A1", t_chunk=64, chunks=16, slots=1024,
+                     compiles=0, p50_ms=1.25, p99_ms=3.5),
+    ]
+    again = EvalReport.load(rep.save(tmp_path / "v5.json"))
+    assert again.schema == SCHEMA
+    assert again.streaming == rep.streaming
+    refit = dataclasses.replace(again.streaming[0], p50_ms=99.0, p99_ms=99.0)
+    assert refit == rep.streaming[0]
+    assert dataclasses.replace(refit, compiles=3) != rep.streaming[0]
+    assert any(line.startswith("streaming:")
+               for line in again.summary_lines())
+
+
+def test_current_schema_is_v5_and_unknown_schema_rejected(tmp_path):
+    assert SCHEMA.endswith("/v5")
     doc = json.loads((FIXTURES / "report_v1.json").read_text())
     doc["schema"] = "repro.eval/v999"
     with pytest.raises(ValueError, match="v999"):
@@ -84,14 +125,19 @@ def test_current_schema_is_v4_and_unknown_schema_rejected(tmp_path):
 
 
 def test_fixtures_are_frozen_old_bytes():
-    """The fixtures must not quietly grow v4 columns (someone regenerating
-    them from current code) — the raw JSON is the contract."""
-    for name in ("report_v1.json", "report_v2.json", "report_v3.json"):
+    """The fixtures must not quietly grow newer columns (someone
+    regenerating them from current code) — the raw JSON is the contract."""
+    for name in OLD_FIXTURES:
         doc = json.loads((FIXTURES / name).read_text())
-        for cell in doc["cells"]:
-            assert "wall_ms" not in cell and "compiles" not in cell, (
-                f"{name} contains v4 columns — fixtures must stay old bytes"
-            )
+        assert "streaming" not in doc, (
+            f"{name} contains the v5 streaming section — fixtures must "
+            "stay old bytes"
+        )
+        if name != "report_v4.json":
+            for cell in doc["cells"]:
+                assert "wall_ms" not in cell and "compiles" not in cell, (
+                    f"{name} contains v4 columns — fixtures must stay old bytes"
+                )
     v1 = json.loads((FIXTURES / "report_v1.json").read_text())
     for cell in v1["cells"]:
         assert "slack" not in cell and "p50_cr" not in cell
@@ -102,7 +148,7 @@ def test_fixture_field_sets_match_dataclass():
     would crash with an unexpected-kwarg TypeError — this pins the rename
     hazard explicitly)."""
     fields = {f.name for f in dataclasses.fields(CellResult)}
-    for name in ("report_v1.json", "report_v2.json", "report_v3.json"):
+    for name in OLD_FIXTURES:
         doc = json.loads((FIXTURES / name).read_text())
         for cell in doc["cells"]:
             unknown = set(cell) - fields

@@ -1,0 +1,328 @@
+"""The streaming engine's contracts, end to end.
+
+Three layers, one invariant each:
+
+* ``provision_stream`` (batch planning on arbitrarily long traces) is
+  **bit-exact** against monolithic ``provision`` at every chunk size —
+  across policies, deferral slacks and typed fleets, because both routes
+  run the identical per-slot update (``_slot_update``) on the identical
+  CRN wait tables and only the tiling differs.
+* the kernel carry (``provision_scan_stream``) chains across calls: two
+  half-trace calls with the carry threaded equal one whole-trace call.
+* ``FleetProvisioner.advance()`` (the O(1)-state serving stepper) is
+  chunk-size **invariant** for the no-peek policies, matches ``plan()``
+  when handed the whole trace at once, and replays one compiled program
+  across any chunk-size mix inside a warmed pow2 bucket (the
+  zero-steady-state-recompile gate).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    CostModel,
+    PolicySpec,
+    ProvisionSpec,
+    ServerGroup,
+    Workload,
+    provision,
+    provision_stream,
+)
+from repro.core.costs import PAPER_COSTS  # noqa: E402
+from repro.deferral import (  # noqa: E402
+    DeferralSpec,
+    defer_demand,
+    defer_stream,
+    defer_stream_init,
+    queue_scan,
+    queue_stream,
+    queue_stream_finalize,
+    queue_stream_init,
+)
+from repro.serving import (  # noqa: E402
+    FleetProvisioner,
+    pow2_bucket,
+    stepper,
+)
+
+T = 96
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.fixture(scope="module")
+def demand():
+    rng = np.random.default_rng(5)
+    return jnp.asarray(rng.integers(0, 18, size=(T,)), jnp.int32)
+
+
+def _assert_same(r0, r1, *, record=False):
+    """Every populated ProvisionResult field bit-identical."""
+    assert (np.asarray(r0.x) == np.asarray(r1.x)).all()
+    for f in ("cost", "energy", "toggle_cost", "level_cost", "group_cost",
+              "backlog", "max_delay", "p99_delay", "deadline_misses",
+              "unserved"):
+        v0, v1 = getattr(r0, f), getattr(r1, f)
+        assert (v0 is None) == (v1 is None), f
+        if v0 is not None:
+            assert (np.asarray(v0) == np.asarray(v1)).all(), f
+    if record:
+        assert r1.decisions is None      # streaming records aggregates only
+        for k in r0.decision_counts:
+            assert (np.asarray(r0.decision_counts[k])
+                    == np.asarray(r1.decision_counts[k])).all(), k
+
+
+# --------------------------------------------------------------- batch route
+@pytest.mark.parametrize("policy", ["A1", "A2", "A3", "delayedoff",
+                                    "AQ-det", "AQ-rand"])
+def test_provision_stream_bitexact_across_policies_and_slacks(policy, demand):
+    """The tentpole exactness matrix: every online policy × rigid/deferred
+    × chunk sizes that split waits mid-flight (t_chunk=1 splits *every*
+    pending wait across a boundary; 13 is coprime to everything)."""
+    for slack in (None, 3):
+        d = None if slack is None else DeferralSpec(slack=slack)
+        spec = ProvisionSpec(
+            costs=PAPER_COSTS,
+            workload=Workload(demand=demand, deferral=d),
+            policy=PolicySpec(name=policy, window=2, key=KEY),
+            n_levels=18,
+        )
+        ref = provision(spec)
+        for tc in (1, 13, T):
+            _assert_same(ref, provision_stream(spec, t_chunk=tc))
+
+
+def test_provision_stream_typed_fleet_with_record(demand):
+    costs = CostModel.from_groups(
+        ServerGroup("small", 8, P=1.0, beta_on=2.0, beta_off=2.0),
+        ServerGroup("big", 10, P=2.5, beta_on=4.0, beta_off=4.0),
+    )
+    spec = ProvisionSpec(
+        costs=costs,
+        workload=Workload(demand=demand),
+        policy=PolicySpec(name="AQ-rand", key=KEY),
+    )
+    ref = provision(spec, record_decisions=True)
+    got = provision_stream(spec, t_chunk=17, record_decisions=True)
+    _assert_same(ref, got, record=True)
+    assert got.group_cost.shape == (2,)
+
+
+def test_provision_stream_mesh_route_matches(demand):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    spec = ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=demand, deferral=DeferralSpec(slack=2)),
+        policy=PolicySpec(name="A1", windows=jnp.arange(2)),
+        n_levels=18,
+        mesh=mesh,
+    )
+    _assert_same(provision(spec), provision_stream(spec, t_chunk=23))
+
+
+def test_provision_stream_rejects_offline(demand):
+    spec = ProvisionSpec(
+        costs=PAPER_COSTS,
+        workload=Workload(demand=demand),
+        policy=PolicySpec(name="offline"),
+        n_levels=18,
+    )
+    with pytest.raises(ValueError, match="online-only"):
+        provision_stream(spec)
+
+
+# ------------------------------------------------------------- kernel carry
+def test_kernel_stream_carry_chains_across_calls(demand):
+    """Two half-trace kernel calls with the carry threaded == one call."""
+    from repro.kernels.provision_scan import provision_scan_stream
+
+    n = 18
+    ab = demand[None, :]
+    thr = jnp.full((1, 1, n), 4.0, jnp.float32)
+    z = jnp.zeros((1,), jnp.int32)
+    x_full, _, _ = provision_scan_stream(
+        ab, ab, thr, z, z, z, z, horizon=2, t_chunk=16, n_levels=n)
+    cut = 41                            # mid-chunk AND mid-wait boundary
+    xa, _, carry = provision_scan_stream(
+        ab[:, :cut], ab[:, :cut], thr, z, z, z, z,
+        horizon=2, t_chunk=16, n_levels=n)
+    xb, _, _ = provision_scan_stream(
+        ab[:, cut:], ab[:, cut:], thr, z, z, z, z,
+        horizon=2, t_chunk=16, n_levels=n, carry=carry)
+    got = np.concatenate([np.asarray(xa), np.asarray(xb)], axis=1)
+    # the second call cannot see demand before its own range: the peek at
+    # the first call's tail reads quiet, so only the carried state (not
+    # the x values near the seam's peek window) must agree exactly
+    assert (got == np.asarray(x_full)).all()
+
+
+def test_interpret_env_override_and_telemetry_gauge(monkeypatch):
+    from repro.kernels.provision_scan import _resolve_interpret
+    from repro.obs.telemetry import telemetry_session
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    with telemetry_session() as tel:
+        assert _resolve_interpret(None) is True
+        assert tel.gauge_value("kernels/pallas_interpret") == 1.0
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    with telemetry_session() as tel:
+        assert _resolve_interpret(None) is False
+        assert tel.gauge_value("kernels/pallas_interpret") == 0.0
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "sideways")
+    with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
+        _resolve_interpret(None)
+    # an explicit argument wins over the env var
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert _resolve_interpret(True) is True
+
+
+# ----------------------------------------------------------- deferral carry
+def test_defer_stream_chunk_invariant_and_causal(demand):
+    a = demand
+    for K in (1, 4):
+        full, _ = defer_stream(a, defer_stream_init(K), slack=K)
+        st = defer_stream_init(K)
+        outs = []
+        for lo, hi in ((0, 1), (1, 40), (40, T)):
+            o, st = defer_stream(a[lo:hi], st, slack=K)
+            outs.append(np.asarray(o))
+        assert (np.concatenate(outs) == np.asarray(full)).all()
+        A, S = np.cumsum(np.asarray(a)), np.cumsum(np.asarray(full))
+        assert (S <= A).all()                  # causal: never serves early
+        assert (S[K:] >= A[:T - K]).all()      # every deadline met
+    # the documented divergence from the batch rule: OA water-filling is
+    # anticipative (it sees the t=2 burst at t=0), the stream rule is not
+    burst = jnp.asarray([3, 0, 300], jnp.int32)
+    oa = np.asarray(defer_demand(burst, 2))
+    causal, _ = defer_stream(burst, defer_stream_init(2), slack=2)
+    assert oa[0] == 3 and int(causal[0]) < 3
+
+
+def test_queue_stream_matches_queue_scan_chunked(demand):
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, 18, size=(T,)), jnp.int32)
+    for rule in ("EDF", "SPT"):
+        K = 5
+        ref = queue_scan(demand, x, K, rule=rule, max_slack=K)
+        st = queue_stream_init(K)
+        outs = []
+        for lo, hi in ((0, 7), (7, 55), (55, T)):
+            o, st = queue_stream(demand[lo:hi], x[lo:hi], st,
+                                 rule=rule, max_slack=K)
+            outs.append(np.asarray(o))
+        assert (np.concatenate(outs) == np.asarray(ref["backlog"])).all()
+        fin = queue_stream_finalize(st, max_slack=K)
+        for k in ("served_by_age", "deadline_misses", "unserved",
+                  "max_delay", "p99_delay"):
+            assert (np.asarray(fin[k]) == np.asarray(ref[k])).all(), (rule, k)
+
+
+# ----------------------------------------------------------------- stepper
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 7, 8, 9, 64, 65, 1000)] == \
+        [8, 8, 8, 16, 64, 128, 1024]
+
+
+def test_advance_one_shot_matches_plan(demand):
+    a = np.asarray(demand)
+    for policy, w in (("A1", 0), ("A1", 3), ("delayedoff", 0), ("AQ-det", 0)):
+        prov = FleetProvisioner(PAPER_COSTS, policy=policy, window=w,
+                                max_replicas=18)
+        got = prov.advance(a)
+        ref = FleetProvisioner(PAPER_COSTS, policy=policy, window=w,
+                               max_replicas=18).plan(a)
+        assert (got == np.asarray(ref.x)).all(), (policy, w)
+
+
+def test_advance_chunk_invariant_no_peek_splits_pending_waits(demand):
+    """delayedoff holds each idle level for Δ = 6 slots, so slot-by-slot
+    advancing splits every pending wait across a chunk boundary — the
+    carried (r, on, wait) state must make the schedule identical."""
+    a = np.asarray(demand)
+    for policy in ("delayedoff", "AQ-rand"):
+        key = KEY if policy == "AQ-rand" else None
+        full = FleetProvisioner(PAPER_COSTS, policy=policy, max_replicas=18,
+                                key=key).advance(a)
+        for sizes in ((1,) * T, (5, 3, 88), (41, 55)):
+            prov = FleetProvisioner(PAPER_COSTS, policy=policy,
+                                    max_replicas=18, key=key)
+            pos, outs = 0, []
+            for s in sizes:
+                outs.append(prov.advance(a[pos:pos + s]))
+                pos += s
+            assert (np.concatenate(outs) == full).all(), (policy, sizes)
+
+
+def test_advance_chunk_cost_plus_final_off_matches_plan(demand):
+    """The stepper's chunk-local cost omits only the forced end-of-trace
+    off toggles (the trace has not ended); adding them reproduces plan()'s
+    total exactly."""
+    a = np.asarray(demand)
+    prov = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=18)
+    prov.advance(a)
+    ref = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=18).plan(a)
+    final_off = int((np.asarray(prov.state.on)
+                     & ~(a[-1] > np.arange(18))).sum())
+    got = float(prov.last_plan.cost) + PAPER_COSTS.beta_off * final_off
+    assert got == pytest.approx(float(ref.cost))
+
+
+def test_advance_zero_recompiles_in_warmed_bucket(demand):
+    """The satellite gate: after one warmup call, three *different* chunk
+    sizes inside the same pow2 bucket add zero jit traces."""
+    a = np.asarray(demand)
+    prov = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=18)
+    prov.advance(a[:8])                             # warmup owns bucket 8
+    before = stepper.stepper_chunk._cache_size()
+    prov.advance(a[8:13])                           # 5 -> bucket 8
+    prov.advance(a[13:16])                          # 3 -> bucket 8
+    prov.advance(a[16:24])                          # 8 -> bucket 8
+    assert stepper.stepper_chunk._cache_size() == before
+    assert prov.metrics.plans == 4
+
+
+def test_advance_deferral_mid_flight_backlog_chunk_invariant():
+    """A burst pushes work into the queue; chunk boundaries cut straight
+    through the live backlog and the schedule must not notice."""
+    rng = np.random.default_rng(13)
+    a = rng.integers(0, 6, size=(T,))
+    a[30:34] = 40                                   # burst >> fleet absorbs
+    spec = DeferralSpec(slack=4)
+    full_p = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=24,
+                              deferral=spec)
+    full = full_p.advance(a)
+    assert int(np.asarray(full_p.last_plan.backlog).max()) > 0
+    for sizes in ((31, 2, 63), (1,) * T):
+        prov = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=24,
+                                deferral=spec)
+        pos, outs = 0, []
+        for s in sizes:
+            outs.append(prov.advance(a[pos:pos + s]))
+            pos += s
+        assert (np.concatenate(outs) == full).all(), sizes
+        assert int(prov.last_plan.deadline_misses) == 0
+        assert (np.asarray(prov.last_plan.backlog)
+                == np.asarray(full_p.last_plan.backlog)[pos - sizes[-1]:pos]).all()
+
+
+def test_advance_rejections_and_reset(demand):
+    a = np.asarray(demand)
+    with pytest.raises(ValueError, match="hindsight"):
+        FleetProvisioner(PAPER_COSTS, policy="offline",
+                         max_replicas=18).advance(a[:8])
+    with pytest.raises(ValueError, match="scalar slack"):
+        FleetProvisioner(
+            PAPER_COSTS, policy="A1", max_replicas=64,
+            deferral=DeferralSpec(slack=np.ones(T, np.int32), max_slack=4),
+        ).advance(a[:8])
+    prov = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=18)
+    first = prov.advance(a[:16])
+    prov.reset()
+    assert prov.state is None and prov._history.size == 0
+    assert (prov.advance(a[:16]) == first).all()    # fresh trace, same plan
