@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ref import decode_attention_ref, flash_attention_ref
+from repro.kernels.ref import flash_attention_ref
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

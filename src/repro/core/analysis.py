@@ -14,7 +14,6 @@ from .ski_rental import (
     A1Deterministic,
     A2Randomized,
     A3Randomized,
-    OfflinePolicy,
     theoretical_ratio,
 )
 

@@ -26,8 +26,9 @@ from .costs import CostModel
 E = math.e
 
 
+# host-side reference-model result, never crosses into jit
 @dataclasses.dataclass
-class FluidResult:
+class FluidResult:  # repro-lint: disable=RPL005
     cost: float
     energy: float
     toggle_cost: float

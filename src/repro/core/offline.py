@@ -15,7 +15,7 @@ Two independent implementations, cross-checked in tests:
 from __future__ import annotations
 
 from .costs import CostModel, schedule_cost
-from .events import ARRIVAL, DEPARTURE, BrickTrace
+from .events import BrickTrace
 from .segments import SegmentType, critical_segments
 from .stepfn import StepFn, from_breakpoints
 

@@ -36,11 +36,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from .costs import CostModel
-from . import jax_provision as _engine
 from ..deferral import DeferralSpec
 from ..obs import provenance as _prov
 from ..obs.telemetry import get_telemetry
+from . import jax_provision as _engine
+from .costs import CostModel
 
 
 @dataclasses.dataclass(frozen=True, eq=False)

@@ -45,7 +45,6 @@ def critical_times(trace: BrickTrace) -> list[float]:
         exists, the next departure epoch; if neither exists, the horizon T.
     """
     events = trace.events
-    times = [e.time for e in events]
     T = trace.horizon
 
     # Prefix values: a right after event i.

@@ -92,7 +92,7 @@ def brick_trace_from_fluid(
     recent jobs depart (consistent with LIFO semantics).  Event epochs are
     spread inside the slot so that no two coincide.
     """
-    from .events import BrickTrace, Job
+    from .events import Job
 
     rng = rng or np.random.default_rng(0)
     a = np.asarray(a, dtype=np.int64)

@@ -49,9 +49,9 @@ from repro.core import (
     provision,
     theoretical_ratio,
 )
-from repro.deferral import RULES
 from repro.core.jax_provision import KEYED
 from repro.core.traces import WEEK_SLOTS
+from repro.deferral import RULES
 from repro.obs.jaxwatch import CompileWatcher
 from repro.obs.telemetry import get_telemetry
 from repro.scenarios import DEFAULT_SCENARIOS, Scenario

@@ -24,8 +24,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
-
 from repro.configs import SHAPES, get_config, list_archs, runnable_cells
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step, lower_step

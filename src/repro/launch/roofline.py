@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config

@@ -57,7 +57,8 @@ def main() -> int:
 
         cfg = get_config(args.arch, reduced=True).replace(remat="none")
         params = init_params(cfg, jax.random.key(0))
-        factory = lambda: InferenceEngine(cfg, params, max_batch=1, max_seq=96)
+        def factory():
+            return InferenceEngine(cfg, params, max_batch=1, max_seq=96)
 
     rep = run_cluster(
         trace, costs, policy=args.policy, alpha=args.alpha,

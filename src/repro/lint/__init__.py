@@ -1,0 +1,40 @@
+"""repro.lint — JAX/Pallas-aware static analysis + runtime sanitizer.
+
+Static side (``python -m repro.lint src/ --strict``): six repo-specific AST
+rules (RPL001–RPL006) that mechanically enforce the engine's implementation
+invariants — PRNG key hygiene, static-vs-data jit arguments, no host
+branches or host calls under trace, pytree registration, CompileWatcher
+ownership of compile accounting.  Runtime side
+(:func:`repro.lint.sanitize.tracer_sanitizer`): one gated recompile/leak
+check replacing the hand-rolled jit-cache gates in tests and benchmarks.
+
+See ``docs/static_analysis.md`` for the rule ↔ invariant table and
+suppression syntax (``# repro-lint: disable=RPL003``).
+"""
+from .analyzer import (
+    EXCLUDED_DIRS,
+    LintResult,
+    iter_python_files,
+    lint_file,
+    lint_paths,
+)
+from .findings import Finding, diff_summaries, summarize
+from .rules import RULES, STATIC_ALLOWLIST, Rule
+from .sanitize import RecompileError, UnobservableCacheError, tracer_sanitizer
+
+__all__ = [
+    "EXCLUDED_DIRS",
+    "Finding",
+    "LintResult",
+    "RULES",
+    "RecompileError",
+    "Rule",
+    "STATIC_ALLOWLIST",
+    "UnobservableCacheError",
+    "diff_summaries",
+    "iter_python_files",
+    "lint_file",
+    "lint_paths",
+    "summarize",
+    "tracer_sanitizer",
+]

@@ -1,0 +1,279 @@
+"""Per-module analysis context shared by every lint rule.
+
+One parse per file: :class:`ModuleContext` resolves import aliases to dotted
+module paths (``jrandom.uniform`` -> ``jax.random.uniform`` under ``import
+jax.random as jrandom``), discovers the module's *traced regions* — functions
+decorated with ``jax.jit`` (bare or via ``functools.partial``) and Pallas
+kernel bodies handed to ``pl.pallas_call`` — with their ``static_argnames``,
+and indexes ``# repro-lint: disable=...`` suppression comments by line.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Iterator
+
+#: names that alias ``jax.jit`` once resolved through the import map
+JIT_CALLABLES = {"jax.jit", "jax.experimental.pjit.pjit"}
+PARTIAL_CALLABLES = {"functools.partial"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*|all)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedRegion:
+    """One function whose body executes under trace: a jitted function or a
+    Pallas kernel body.  ``static_names`` are its ``static_argnames`` (for
+    kernels: empty — every ref is runtime state)."""
+
+    node: ast.FunctionDef
+    kind: str                     # "jit" | "kernel"
+    static_names: frozenset[str]
+    decorator_line: int
+
+
+class ModuleContext:
+    """Everything rules need to know about one parsed module."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        self.import_map = _collect_imports(tree)
+        (
+            self.suppressions,
+            self.standalone_lines,
+            self.file_suppressions,
+            self.unknown_suppressions,
+        ) = _collect_suppressions(source)
+        self.traced_regions = _collect_traced_regions(tree, self)
+
+    # -- name resolution ----------------------------------------------------
+    def dotted(self, node: ast.AST) -> str | None:
+        """Resolve ``a.b.c`` through the import map to a dotted path, or
+        None when the base is not a known import binding."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.import_map.get(node.id)
+        if base is None:
+            return None
+        parts.append(base)
+        return ".".join(reversed(parts))
+
+    def is_suppressed(self, rule: str, line: int) -> bool:
+        """True when ``rule`` is disabled at ``line`` — by a trailing
+        comment on the line itself, a standalone suppression comment on the
+        line above, or a file-level ``disable-file``."""
+        if rule in self.file_suppressions or "all" in self.file_suppressions:
+            return True
+        here = self.suppressions.get(line, ())
+        if rule in here or "all" in here:
+            return True
+        if line - 1 in self.standalone_lines:
+            above = self.suppressions.get(line - 1, ())
+            if rule in above or "all" in above:
+                return True
+        return False
+
+
+def _collect_imports(tree: ast.Module) -> dict[str, str]:
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                out[local] = alias.name if alias.asname else alias.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            mod = ("." * node.level) + (node.module or "")
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                local = alias.asname or alias.name
+                out[local] = f"{mod}.{alias.name}" if mod else alias.name
+    return out
+
+
+def _collect_suppressions(
+    source: str,
+) -> tuple[dict[int, set[str]], set[int], set[str], list[tuple[int, str]]]:
+    """Map line -> suppressed rule ids, the lines whose suppression comment
+    stands alone (those scope to the *next* line too), file-level
+    suppressions, and ``(line, id)`` pairs whose id is not a known rule
+    (reported under ``--strict``)."""
+    from .rules import RULES  # late import: rules.py imports this module
+
+    by_line: dict[int, set[str]] = {}
+    file_level: set[str] = set()
+    unknown: list[tuple[int, str]] = []
+    standalone: set[int] = set()
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        tokens = []
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        kind, ids_raw = m.group(1), m.group(2)
+        ids = {s.strip() for s in ids_raw.split(",")}
+        for rid in ids:
+            if rid != "all" and rid not in RULES:
+                unknown.append((tok.start[0], rid))
+        if kind == "disable-file":
+            file_level |= ids
+        else:
+            line = tok.start[0]
+            by_line.setdefault(line, set()).update(ids)
+            if tok.line[: tok.start[1]].strip() == "":
+                standalone.add(line)
+    return by_line, standalone, file_level, unknown
+
+
+def _static_names_from_call(
+    call: ast.Call, fn_args: list[str]
+) -> frozenset[str]:
+    """Extract static argument names from a ``partial(jax.jit, ...)`` or
+    ``jax.jit(...)`` call: ``static_argnames`` literals plus
+    ``static_argnums`` indices mapped onto the function signature."""
+    names: set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names |= set(_str_elements(kw.value))
+        elif kw.arg == "static_argnums":
+            for idx in _int_elements(kw.value):
+                if 0 <= idx < len(fn_args):
+                    names.add(fn_args[idx])
+    return frozenset(names)
+
+
+def _str_elements(node: ast.AST) -> Iterator[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                yield elt.value
+
+
+def _int_elements(node: ast.AST) -> Iterator[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List)):
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                yield elt.value
+
+
+def _fn_arg_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return [x.arg for x in a.posonlyargs + a.args]
+
+
+def _collect_traced_regions(
+    tree: ast.Module, ctx: ModuleContext
+) -> list[TracedRegion]:
+    regions: list[TracedRegion] = []
+    #: kernel fn name -> (call line, partial-bound kwarg names, n positional
+    #: partial binds).  Partial-bound arguments are *static* at trace time —
+    #: only the remaining (ref) parameters are traced state.
+    kernel_sites: dict[str, tuple[int, frozenset[str], int]] = {}
+
+    # pass 0: local bindings `kernel = functools.partial(_fn, …)` / `k = _fn`,
+    # kept per line so `pl.pallas_call(kernel, …)` resolves to the *nearest
+    # preceding* binding of that name
+    bindings: dict[str, list[tuple[int, ast.expr]]] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            bindings.setdefault(node.targets[0].id, []).append(
+                (node.lineno, node.value)
+            )
+
+    def _resolve(cand: ast.expr, at_line: int) -> ast.expr:
+        if isinstance(cand, ast.Name):
+            best = None
+            for line, value in bindings.get(cand.id, ()):
+                if line <= at_line and (best is None or line > best[0]):
+                    best = (line, value)
+            if best is not None and not isinstance(best[1], ast.Name):
+                return best[1]
+        return cand
+
+    # pass 1: kernels handed to a pallas_call anywhere in the module —
+    # directly, through functools.partial(kernel_fn, ...), or via a local
+    # binding from pass 0
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = ctx.dotted(node.func)
+        if callee is None or not callee.endswith("pallas_call"):
+            continue
+        cands = list(node.args[:1]) + [
+            kw.value for kw in node.keywords if kw.arg in ("kernel", "f")
+        ]
+        for cand in cands:
+            cand = _resolve(cand, node.lineno)
+            bound_kw: frozenset[str] = frozenset()
+            n_pos = 0
+            if (
+                isinstance(cand, ast.Call)
+                and ctx.dotted(cand.func) in PARTIAL_CALLABLES
+                and cand.args
+            ):
+                bound_kw = frozenset(
+                    kw.arg for kw in cand.keywords if kw.arg is not None
+                )
+                n_pos = len(cand.args) - 1
+                cand = cand.args[0]
+            if isinstance(cand, ast.Name):
+                kernel_sites[cand.id] = (node.lineno, bound_kw, n_pos)
+
+    # pass 2: function defs — jit decorators and kernel-name matches
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted = None
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            dotted = ctx.dotted(target)
+            if dotted in JIT_CALLABLES:
+                static = (
+                    _static_names_from_call(dec, _fn_arg_names(node))
+                    if isinstance(dec, ast.Call)
+                    else frozenset()
+                )
+                jitted = TracedRegion(node, "jit", static, dec.lineno)
+            elif (
+                isinstance(dec, ast.Call)
+                and dotted in PARTIAL_CALLABLES
+                and dec.args
+                and ctx.dotted(dec.args[0]) in JIT_CALLABLES
+            ):
+                jitted = TracedRegion(
+                    node,
+                    "jit",
+                    _static_names_from_call(dec, _fn_arg_names(node)),
+                    dec.lineno,
+                )
+        if jitted is not None:
+            regions.append(jitted)
+        elif node.name in kernel_sites:
+            _line, bound_kw, n_pos = kernel_sites[node.name]
+            params = _fn_arg_names(node)
+            static = frozenset(params[:n_pos]) | bound_kw
+            regions.append(
+                TracedRegion(node, "kernel", static, node.lineno)
+            )
+    return regions

@@ -1,0 +1,541 @@
+"""The repo-specific rules: RPL001–RPL006.
+
+Each rule mechanically checks one implementation invariant the runtime test
+suite otherwise only catches after the fact (see ``docs/static_analysis.md``
+for the rule ↔ invariant table):
+
+- **RPL001** — PRNG key reuse: the same key expression consumed by two
+  ``jax.random.*`` sampler calls with no intervening ``split``/``fold_in``.
+- **RPL002** — host control flow (``if``/``while``/``assert``) on values
+  derived from the *traced* (non-static) arguments of a jitted function —
+  the ``ConcretizationTypeError`` class of bug.
+- **RPL003** — ``static_argnames`` outside the declared allowlist of
+  genuinely static names; cost-model/workload fields must flow as jit
+  *data* (the no-recompile contract).
+- **RPL004** — host-library calls (``numpy``, ``time``, ``datetime``,
+  stdlib ``random``) inside jitted or Pallas-kernel bodies.
+- **RPL005** — array-carrying dataclasses missing
+  ``jax.tree_util.register_dataclass`` wiring.
+- **RPL006** — direct ``_cache_size`` pokes outside ``obs/jaxwatch.py``
+  (compile accounting goes through ``CompileWatcher``).
+
+Rules are flow-light by design: linear statement order with branch forks,
+no inter-procedural analysis.  Heuristic misses are acceptable; false
+positives on ``src/repro`` at HEAD are not (the CI job runs ``--strict``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Iterator
+
+from .context import ModuleContext, TracedRegion
+
+RawFinding = tuple[int, int, str]  # (line, col, message)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    check: Callable[[ModuleContext], Iterator[RawFinding]]
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+#: jax.random functions that *derive* keys rather than consume them
+_KEY_DERIVERS = {
+    "split", "fold_in", "PRNGKey", "key", "key_data", "wrap_key_data",
+    "clone", "key_impl",
+}
+
+
+def _key_expr_id(node: ast.AST) -> str | None:
+    """A stable identifier for a key expression: a bare name (``key``) or a
+    dotted chain of names (``self.key``).  Anything else — calls, subscripts
+    — produces a fresh key per evaluation and is not tracked."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _jax_random_attr(call: ast.Call, ctx: ModuleContext) -> str | None:
+    """The ``jax.random`` function name a call resolves to, else None."""
+    dotted = ctx.dotted(call.func)
+    if dotted is None:
+        return None
+    if dotted.startswith("jax.random."):
+        return dotted.removeprefix("jax.random.")
+    return None
+
+
+def _key_events(stmt: ast.stmt, ctx: ModuleContext) -> list[tuple]:
+    """(line, col, kind, ident) events within one statement, source order.
+    ``kind`` is 'consume' (key fed to a sampler), 'derive' (split/fold_in —
+    reuse of the *source* key is fine) or 'assign'."""
+    events: list[tuple] = []
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Call):
+            attr = _jax_random_attr(node, ctx)
+            if attr is None:
+                continue
+            key_arg = node.args[0] if node.args else None
+            for kw in node.keywords:
+                if kw.arg == "key":
+                    key_arg = kw.value
+            ident = _key_expr_id(key_arg) if key_arg is not None else None
+            if ident is not None:
+                kind = "derive" if attr in _KEY_DERIVERS else "consume"
+                events.append((node.lineno, node.col_offset, kind, ident))
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                               ast.NamedExpr, ast.For)):
+            targets: list[ast.AST]
+            if isinstance(node, ast.Assign):
+                targets = list(node.targets)
+            elif isinstance(node, ast.For):
+                targets = [node.target]
+            else:
+                targets = [node.target]
+            for tgt in targets:
+                for leaf in ast.walk(tgt):
+                    ident = _key_expr_id(leaf)
+                    if ident is not None and isinstance(
+                        leaf, (ast.Name, ast.Attribute)
+                    ):
+                        events.append(
+                            (leaf.lineno, leaf.col_offset, "assign", ident)
+                        )
+    return sorted(events, key=lambda e: (e[0], e[1]))
+
+
+def _scan_key_block(
+    stmts: list[ast.stmt],
+    counts: dict[str, int],
+    ctx: ModuleContext,
+    out: list[RawFinding],
+) -> dict[str, int]:
+    """Linear scan with branch forks: ``counts`` maps key ident -> consumes
+    since last (re)assignment.  Branches fork the state and merge by max —
+    one consume per exclusive branch is fine, a consume before *and* inside
+    a branch is not."""
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            _scan_key_scope(stmt, ctx, out)
+            continue
+        if isinstance(stmt, ast.If):
+            _events_into(stmt.test, counts, ctx, out)
+            merged = _fork(stmt.body, stmt.orelse, counts, ctx, out)
+            counts.clear()
+            counts.update(merged)
+            continue
+        if isinstance(stmt, (ast.Try,)):
+            branches = [stmt.body] + [h.body for h in stmt.handlers]
+            states = [
+                _scan_key_block(list(b), dict(counts), ctx, out)
+                for b in branches
+            ]
+            merged = {}
+            for st in states:
+                for k, v in st.items():
+                    merged[k] = max(merged.get(k, 0), v)
+            counts.clear()
+            counts.update(merged)
+            _scan_key_block(list(stmt.finalbody), counts, ctx, out)
+            continue
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While, ast.With,
+                             ast.AsyncWith)):
+            _events_into(stmt, counts, ctx, out, shallow=True)
+            body = list(getattr(stmt, "body", []))
+            _scan_key_block(body, counts, ctx, out)
+            _scan_key_block(list(getattr(stmt, "orelse", [])), counts, ctx, out)
+            continue
+        _events_into(stmt, counts, ctx, out)
+    return counts
+
+
+def _fork(body, orelse, counts, ctx, out) -> dict[str, int]:
+    a = _scan_key_block(list(body), dict(counts), ctx, out)
+    b = _scan_key_block(list(orelse), dict(counts), ctx, out)
+    merged: dict[str, int] = {}
+    for st in (a, b):
+        for k, v in st.items():
+            merged[k] = max(merged.get(k, 0), v)
+    return merged
+
+
+def _events_into(node, counts, ctx, out, *, shallow=False) -> None:
+    """Apply the key events of one statement (or header, for compound
+    statements with ``shallow=True``) to ``counts``, emitting findings."""
+    if shallow:
+        # only the statement header (iter/test/items), not the nested body
+        header = ast.Expr(
+            value=getattr(node, "iter", None)
+            or getattr(node, "test", None)
+            or ast.Constant(value=None)
+        )
+        events = _key_events(header, ctx) if header.value is not None else []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            for leaf in ast.walk(node.target):
+                ident = _key_expr_id(leaf)
+                if ident is not None:
+                    events.append((leaf.lineno, leaf.col_offset, "assign", ident))
+    else:
+        events = _key_events(node, ctx)
+    for line, col, kind, ident in events:
+        if kind == "assign":
+            counts[ident] = 0
+        elif kind == "derive":
+            counts.setdefault(ident, 0)
+        else:  # consume
+            n = counts.get(ident, 0) + 1
+            counts[ident] = n
+            if n > 1:
+                out.append((
+                    line, col,
+                    f"PRNG key `{ident}` consumed by more than one "
+                    "jax.random call without an intervening split/fold_in "
+                    "— identical streams alias",
+                ))
+
+
+def _scan_key_scope(scope, ctx: ModuleContext, out: list[RawFinding]) -> None:
+    _scan_key_block(list(scope.body), {}, ctx, out)
+
+
+def check_rpl001(ctx: ModuleContext) -> Iterator[RawFinding]:
+    out: list[RawFinding] = []
+    _scan_key_block(list(ctx.tree.body), {}, ctx, out)
+    yield from out
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — host control flow on traced values
+# ---------------------------------------------------------------------------
+
+#: attributes that are concrete at trace time even on a tracer
+_TRACE_SAFE_ATTRS = {
+    "shape", "ndim", "dtype", "size", "aval", "itemsize", "sharding",
+    "weak_type",
+}
+_TRACE_SAFE_CALLS = {"len", "isinstance", "type", "id"}
+
+
+def _tainted_value_uses(
+    expr: ast.AST, tainted: set[str]
+) -> list[tuple[int, int, str]]:
+    """Name nodes in ``expr`` that read a tainted binding as a *value* —
+    excluding shape/dtype-style metadata access, ``len()``, and
+    ``is``/``is not`` identity tests (all concrete under trace)."""
+    exempt: set[int] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in _TRACE_SAFE_ATTRS:
+            for leaf in ast.walk(node.value):
+                exempt.add(id(leaf))
+        elif isinstance(node, ast.Call):
+            fname = node.func.id if isinstance(node.func, ast.Name) else None
+            if fname in _TRACE_SAFE_CALLS:
+                for arg in node.args:
+                    for leaf in ast.walk(arg):
+                        exempt.add(id(leaf))
+        elif isinstance(node, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+        ):
+            for sub in [node.left] + list(node.comparators):
+                for leaf in ast.walk(sub):
+                    exempt.add(id(leaf))
+    uses = []
+    for node in ast.walk(expr):
+        if (
+            isinstance(node, ast.Name)
+            and isinstance(node.ctx, ast.Load)
+            and node.id in tainted
+            and id(node) not in exempt
+        ):
+            uses.append((node.lineno, node.col_offset, node.id))
+    return uses
+
+
+def _region_param_names(region: TracedRegion) -> set[str]:
+    """Traced parameter names: the region's own args plus those of nested
+    defs (vmapped/scanned inner bodies), minus static names and ``self``."""
+    names: set[str] = set()
+    for node in ast.walk(region.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            a = node.args
+            for arg in a.posonlyargs + a.args + a.kwonlyargs:
+                names.add(arg.arg)
+            if a.vararg:
+                names.add(a.vararg.arg)
+            if a.kwarg:
+                names.add(a.kwarg.arg)
+    return names - set(region.static_names) - {"self", "cls"}
+
+
+def check_rpl002(ctx: ModuleContext) -> Iterator[RawFinding]:
+    for region in ctx.traced_regions:
+        tainted = set(_region_param_names(region))
+        # one linear pass in source order: assignments propagate taint,
+        # control-flow tests on tainted values are findings
+        stmts = sorted(
+            (n for n in ast.walk(region.node) if isinstance(n, ast.stmt)),
+            key=lambda n: (n.lineno, n.col_offset),
+        )
+        kind = "Pallas kernel" if region.kind == "kernel" else "jitted function"
+        for stmt in stmts:
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = stmt.value
+                if value is None:
+                    continue
+                rhs_tainted = bool(_tainted_value_uses(value, tainted))
+                targets = (
+                    stmt.targets if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                for tgt in targets:
+                    for leaf in ast.walk(tgt):
+                        if isinstance(leaf, ast.Name):
+                            if rhs_tainted:
+                                tainted.add(leaf.id)
+                            else:
+                                tainted.discard(leaf.id)
+            test = None
+            label = None
+            if isinstance(stmt, (ast.If, ast.While)):
+                test, label = stmt.test, type(stmt).__name__.lower()
+            elif isinstance(stmt, ast.Assert):
+                test, label = stmt.test, "assert"
+            if test is None:
+                continue
+            for line, col, name in _tainted_value_uses(test, tainted):
+                yield (
+                    line, col,
+                    f"host `{label}` on `{name}`, which derives from a "
+                    f"traced argument of {kind} `{region.node.name}` — "
+                    "this raises ConcretizationTypeError under jit (use "
+                    "lax.cond/lax.select, or declare the argument in "
+                    "static_argnames)",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — static_argnames allowlist
+# ---------------------------------------------------------------------------
+
+#: The declared set of genuinely static jit argument names in this repo.
+#: Everything here is a *compile-shape* fact: policy identity, level/horizon
+#: counts, kernel block sizes, mesh topology, dispatch-rule strings.  Cost
+#: and workload values (P/beta_on/beta_off/delta/slack/prices/demand) must
+#: NEVER appear — they flow as pytree data so re-pricing and re-slacking
+#: reuse the compiled program (the PR 2 / PR 7 no-recompile contracts).
+STATIC_ALLOWLIST = frozenset({
+    # engine shape/identity keys
+    "n_levels", "max_h", "policy", "record", "t_chunk", "t_pad", "n_valid_max",
+    # mesh/fleet topology
+    "mesh", "axis", "h_unroll", "use_pallas", "group_sizes",
+    # deferral/queue static bounds
+    "cap", "rule", "max_slack",
+    # serving stepper
+    "window",
+    # attention kernel block shapes
+    "causal", "block_q", "block_k",
+})
+
+#: names that are definitely data — a hit here gets the sharper message
+_KNOWN_DATA_FIELDS = frozenset({
+    "P", "beta_on", "beta_off", "P_lv", "beta_on_lv", "beta_off_lv",
+    "delta", "delta_lv", "slack", "prices", "price", "demand", "a", "ab",
+    "predicted", "predb", "keys", "key", "windows",
+})
+
+
+def check_rpl003(ctx: ModuleContext) -> Iterator[RawFinding]:
+    for region in ctx.traced_regions:
+        if region.kind != "jit":
+            # kernel partial-binds are Python closure values, not jit
+            # static_argnames — nothing to allowlist
+            continue
+        for name in sorted(region.static_names):
+            if name in STATIC_ALLOWLIST:
+                continue
+            if name in _KNOWN_DATA_FIELDS:
+                why = (
+                    "is a cost/workload field and must flow as jit data — "
+                    "making it static recompiles per value and breaks the "
+                    "no-recompile contract"
+                )
+            else:
+                why = (
+                    "is not in repro.lint.rules.STATIC_ALLOWLIST — if it is "
+                    "genuinely static (a shape/identity compile key), add "
+                    "it to the allowlist; if it is data, drop it from "
+                    "static_argnames"
+                )
+            yield (
+                region.decorator_line, 0,
+                f"static_argnames entry `{name}` on `{region.node.name}` "
+                f"{why}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — host calls inside traced bodies
+# ---------------------------------------------------------------------------
+
+#: numpy attributes that are legitimate at trace time (dtype constructors
+#: and dtype queries produce concrete metadata, not host arrays)
+_NP_TRACE_OK = frozenset({
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "dtype", "iinfo",
+    "finfo", "promote_types", "result_type",
+})
+
+_HOST_CLOCK_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.process_time",
+    "time.time_ns", "time.perf_counter_ns", "time.monotonic_ns",
+    "datetime.datetime.now", "datetime.datetime.today",
+    "datetime.datetime.utcnow", "datetime.date.today",
+}
+
+
+def check_rpl004(ctx: ModuleContext) -> Iterator[RawFinding]:
+    for region in ctx.traced_regions:
+        kind = "Pallas kernel" if region.kind == "kernel" else "jitted function"
+        for node in ast.walk(region.node):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.dotted(node.func)
+            if dotted is None:
+                continue
+            msg = None
+            if dotted.startswith("numpy."):
+                attr = dotted.removeprefix("numpy.")
+                if attr.split(".")[0] not in _NP_TRACE_OK:
+                    msg = (
+                        f"host numpy call `{attr}` inside {kind} "
+                        f"`{region.node.name}` executes at trace time on "
+                        "the host — use jax.numpy so it traces"
+                    )
+            elif dotted in _HOST_CLOCK_CALLS:
+                msg = (
+                    f"host clock call `{dotted}` inside {kind} "
+                    f"`{region.node.name}` is baked in at trace time and "
+                    "frozen into the compiled program"
+                )
+            elif dotted.startswith("random."):
+                msg = (
+                    f"stdlib `{dotted}` inside {kind} `{region.node.name}` "
+                    "draws host randomness at trace time — use jax.random "
+                    "with an explicit key"
+                )
+            if msg is not None:
+                yield (node.lineno, node.col_offset, msg)
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — unregistered array-carrying dataclasses
+# ---------------------------------------------------------------------------
+
+_REGISTER_CALLS = {
+    "jax.tree_util.register_dataclass",
+    "jax.tree_util.register_pytree_node",
+    "jax.tree_util.register_pytree_node_class",
+    "jax.tree_util.register_static",
+}
+
+
+def _is_dataclass_decorated(node: ast.ClassDef, ctx: ModuleContext) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if ctx.dotted(target) in ("dataclasses.dataclass", "dataclass"):
+            return True
+    return False
+
+
+def _has_array_field(node: ast.ClassDef) -> bool:
+    for stmt in node.body:
+        if isinstance(stmt, ast.AnnAssign):
+            ann = ast.unparse(stmt.annotation)
+            if "Array" in ann or "ndarray" in ann:
+                return True
+    return False
+
+
+def check_rpl005(ctx: ModuleContext) -> Iterator[RawFinding]:
+    registered: set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and ctx.dotted(node.func) in _REGISTER_CALLS:
+            for cand in node.args[:1] + [
+                kw.value for kw in node.keywords if kw.arg == "nodetype"
+            ]:
+                if isinstance(cand, ast.Name):
+                    registered.add(cand.id)
+        elif isinstance(node, ast.ClassDef):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if ctx.dotted(target) in _REGISTER_CALLS:
+                    registered.add(node.name)
+    for node in ast.walk(ctx.tree):
+        if (
+            isinstance(node, ast.ClassDef)
+            and _is_dataclass_decorated(node, ctx)
+            and _has_array_field(node)
+            and node.name not in registered
+        ):
+            yield (
+                node.lineno, node.col_offset,
+                f"dataclass `{node.name}` carries jax.Array fields but has "
+                "no jax.tree_util.register_dataclass wiring — it will not "
+                "flow through jit/vmap as a pytree (register it, or "
+                "suppress if it is deliberately host-only)",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RPL006 — _cache_size outside obs/jaxwatch.py
+# ---------------------------------------------------------------------------
+
+_CACHE_SIZE_HOME = ("obs/jaxwatch.py", "obs\\jaxwatch.py")
+
+
+def check_rpl006(ctx: ModuleContext) -> Iterator[RawFinding]:
+    if ctx.path.endswith(_CACHE_SIZE_HOME):
+        return
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "_cache_size":
+            yield (
+                node.lineno, node.col_offset,
+                "direct `_cache_size` access outside obs/jaxwatch.py — "
+                "compile accounting goes through "
+                "repro.obs.CompileWatcher (or "
+                "repro.lint.sanitize.tracer_sanitizer), which owns the "
+                "degradation path when the private JAX API changes",
+            )
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+RULES: dict[str, Rule] = {
+    r.id: r
+    for r in (
+        Rule("RPL001", "PRNG key reuse without split/fold_in", check_rpl001),
+        Rule("RPL002", "host control flow on traced values", check_rpl002),
+        Rule("RPL003", "static_argnames outside the declared allowlist",
+             check_rpl003),
+        Rule("RPL004", "host library calls inside traced bodies",
+             check_rpl004),
+        Rule("RPL005", "array dataclass missing pytree registration",
+             check_rpl005),
+        Rule("RPL006", "_cache_size access outside obs/jaxwatch.py",
+             check_rpl006),
+    )
+}

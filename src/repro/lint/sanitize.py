@@ -1,0 +1,81 @@
+"""Runtime sanitizer: one gated implementation of the compile/leak checks.
+
+:func:`tracer_sanitizer` wraps a region in the two runtime invariants the
+static rules cannot prove from source alone:
+
+- **no unexpected recompiles** — a :class:`~repro.obs.jaxwatch.CompileWatcher`
+  over the engine's countable jitted entrypoints (or any explicit ``fns``)
+  hard-fails with :class:`RecompileError` when the region adds more compiled
+  programs than ``max_compiles`` allows (``exact_compiles`` pins the count
+  exactly — the "cold compile == 1" form of the gate);
+- **no tracer leaks** — ``jax.checking_leaks()`` makes any jit trace in the
+  region raise on tracers escaping into closures (``check_leaks=False``
+  opts a region out, e.g. deliberately-cached warmup code).
+
+This replaces the hand-rolled compile gates that used to sit in
+``tests/test_deferral.py``, ``tests/test_streaming.py`` and the benchmark
+CLIs; the pytest fixture of the same name (``tests/conftest.py``) adds
+skip-when-unobservable semantics on top.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+
+from repro.obs.jaxwatch import CompileWatcher
+
+
+class RecompileError(AssertionError):
+    """The sanitized region compiled more (or other than) it declared."""
+
+
+class UnobservableCacheError(RuntimeError):
+    """JAX's private jit-cache API is gone, so the recompile gate cannot
+    run (raised only under ``require_observable=True``; the default is to
+    degrade silently, matching :class:`CompileWatcher`)."""
+
+
+@contextlib.contextmanager
+def tracer_sanitizer(
+    fns=None,
+    *,
+    max_compiles: int | None = 0,
+    exact_compiles: int | None = None,
+    check_leaks: bool = True,
+    require_observable: bool = False,
+) -> Iterator[CompileWatcher]:
+    """Gate a region on zero (or a declared number of) recompiles + no
+    tracer leaks.  Yields the live :class:`CompileWatcher`; after the block
+    its ``added`` holds the compile delta (-1 when unobservable).
+
+    ``max_compiles=None`` disables the compile gate (leak checking only);
+    ``exact_compiles`` overrides ``max_compiles`` with an equality check.
+    """
+    watcher = CompileWatcher(fns=fns)
+    leak_ctx = jax.checking_leaks() if check_leaks else contextlib.nullcontext()
+    with leak_ctx:
+        with watcher:
+            yield watcher
+    added = watcher.added
+    if added < 0:
+        if require_observable and (max_compiles is not None
+                                   or exact_compiles is not None):
+            raise UnobservableCacheError(
+                "jit cache unobservable (private _cache_size API missing) "
+                "but require_observable=True"
+            )
+        return
+    if exact_compiles is not None:
+        if added != exact_compiles:
+            raise RecompileError(
+                f"region compiled {added} program(s), declared exactly "
+                f"{exact_compiles}"
+            )
+    elif max_compiles is not None and added > max_compiles:
+        raise RecompileError(
+            f"region compiled {added} program(s), declared at most "
+            f"{max_compiles} — an argument that should be jit data is "
+            "probably keying the cache"
+        )

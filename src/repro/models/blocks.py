@@ -19,7 +19,6 @@ from repro.configs.base import ModelConfig
 from repro.distributed.ctx import constrain_tokens_3d
 from . import xlstm as xl
 from .attention import (
-    KVCache,
     attention_train,
     decode_attention,
     init_attention,
@@ -29,7 +28,6 @@ from .attention import (
 from .layers import init_mlp, init_rms_norm, mlp, rms_norm
 from .moe import init_moe, moe_layer
 from .ssm import (
-    SSMState,
     init_ssm,
     init_ssm_state,
     ssm_decode,

@@ -10,8 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain_tokens_3d
+
 from .attention import (
-    KVCache,
     attention_train,
     cross_attention,
     decode_attention,
@@ -19,8 +20,6 @@ from .attention import (
     init_kv_cache,
     prefill_attention,
 )
-from .transformer import _scan_or_unroll
-from repro.distributed.ctx import constrain_tokens_3d
 from .layers import (
     embed_tokens,
     init_dense,
@@ -31,6 +30,7 @@ from .layers import (
     rms_norm,
     unembed,
 )
+from .transformer import _scan_or_unroll
 
 
 def init_enc_layer(key, cfg: ModelConfig) -> dict:

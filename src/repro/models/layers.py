@@ -10,8 +10,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
-
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
     dt = x.dtype

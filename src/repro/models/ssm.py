@@ -46,7 +46,9 @@ def ssd_chunked(
     # pad to a chunk multiple: k=v=0 and log_a=0 contribute nothing to state
     pad = (-S_in) % L
     if pad:
-        zpad = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        def zpad(a):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+
         q, k, v, log_a = zpad(q), zpad(k), zpad(v), zpad(log_a)
     S = S_in + pad
     nc = S // L
@@ -160,7 +162,6 @@ def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None):
 
 def _ssm_gates(xc, p, cfg, nh):
     """Common q/k/log_a computation from conv output xc: (B, S, di)."""
-    n = cfg.ssm_state
     bc = jnp.einsum("bsd,dn->bsn", xc, p["wbc"].astype(xc.dtype))
     b_in, c_out = jnp.split(bc, 2, axis=-1)                 # (B, S, n) each
     dt = jax.nn.softplus(

@@ -6,12 +6,12 @@ full (B, S, V) logits are never materialized (vocabularies here reach 257k).
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed.ctx import constrain_tokens_3d
+
 from .blocks import (
     init_layer_cache,
     init_stacked_layers,
@@ -20,8 +20,14 @@ from .blocks import (
     layer_prefill,
     layer_train,
 )
-from .layers import embed_tokens, init_dense, init_embedding, init_rms_norm, rms_norm, unembed
-from repro.distributed.ctx import constrain_tokens_3d
+from .layers import (
+    embed_tokens,
+    init_dense,
+    init_embedding,
+    init_rms_norm,
+    rms_norm,
+    unembed,
+)
 
 LOSS_CHUNK = 512
 
@@ -179,7 +185,6 @@ def lm_prefill(params, cfg: ModelConfig, batch: dict, cache):
 
 def lm_decode_step(params, cfg: ModelConfig, token: jax.Array, cur_len, cache):
     """token: (B,) int32; cur_len: scalar int32 (tokens already cached)."""
-    B = token.shape[0]
     x = embed_tokens(token[:, None], params["embed"], cfg.compute_dtype)
     flags = layer_flags(cfg)
 

@@ -45,7 +45,9 @@ def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init_adamw(params: Any) -> AdamWState:
-    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    def zeros():
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
     return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
 
 

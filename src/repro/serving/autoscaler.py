@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
 from typing import Callable
 
 import numpy as np

@@ -8,7 +8,6 @@ across replicas.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +17,9 @@ from repro.configs.base import ModelConfig
 from repro.models import decode_fn, init_cache, prefill_fn
 
 
+# host-side decode output, never crosses into jit
 @dataclasses.dataclass
-class GenerationResult:
+class GenerationResult:  # repro-lint: disable=RPL005
     tokens: np.ndarray          # (B, n_new)
     prefill_len: int
 
@@ -37,7 +37,7 @@ class InferenceEngine:
             lambda p, b, c: prefill_fn(p, cfg, b, c)
         )
         self._decode = jax.jit(
-            lambda p, t, l, c: decode_fn(p, cfg, t, l, c)
+            lambda p, t, n, c: decode_fn(p, cfg, t, n, c)
         )
 
     def generate(self, tokens: np.ndarray, n_new: int) -> GenerationResult:

@@ -45,7 +45,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.jax_provision import (
     KEYED,
@@ -83,6 +82,13 @@ class StepperState:
     wait: jax.Array
     defer: dict | None = None
     queue: dict | None = None
+
+
+jax.tree_util.register_dataclass(
+    StepperState,
+    data_fields=["t", "r", "on", "wait", "defer", "queue"],
+    meta_fields=[],
+)
 
 
 def stepper_init(n_levels: int, delta_lv, *, policy: str, window: int = 0,

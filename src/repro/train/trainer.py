@@ -9,15 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import Checkpointer, latest_step, restore
-from repro.configs.base import ModelConfig, ShapeCell
+from repro.configs.base import ModelConfig
 from repro.data.tokens import TokenPipeline
 from repro.distributed.compression import (
     compress_grads,

@@ -1,0 +1,32 @@
+"""Shared fixtures: the repro.lint runtime sanitizer, pytest-flavoured.
+
+``tracer_sanitizer`` is the one compile/leak gate for the whole suite
+(replacing the per-test hand-rolled ``_cache_size`` deltas): a factory for
+:func:`repro.lint.sanitize.tracer_sanitizer` context managers that *skips*
+the test — instead of silently passing — when JAX's private jit-cache API
+is unavailable, matching the behaviour of the gates it replaced.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import pytest
+
+from repro.lint.sanitize import tracer_sanitizer as _tracer_sanitizer
+from repro.obs import CompileWatcher
+
+
+@pytest.fixture(name="tracer_sanitizer")
+def tracer_sanitizer_fixture():
+    """Factory: ``with tracer_sanitizer(fns=(jitted,)) as w: ...`` hard-fails
+    on any recompile in the region (``max_compiles=0`` default — pass
+    ``exact_compiles=1`` for cold-compile gates) and on tracer leaks."""
+
+    @contextlib.contextmanager
+    def gate(fns=None, **kwargs):
+        if not CompileWatcher(fns=fns).available:
+            pytest.skip("private jit _cache_size API unavailable")
+        with _tracer_sanitizer(fns=fns, **kwargs) as watcher:
+            yield watcher
+
+    return gate

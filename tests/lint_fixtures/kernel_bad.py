@@ -1,0 +1,23 @@
+"""Kernel positive fixture: host `if` on a ref-derived value (RPL002) and
+host numpy (RPL004) inside a Pallas kernel body discovered through the
+`kernel = functools.partial(...)` / `pl.pallas_call(kernel, ...)` idiom."""
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bad_kernel(a_ref, o_ref, *, bn):
+    x = a_ref[...]
+    if x.sum() > 0:  # RPL002: host branch on traced kernel state
+        o_ref[...] = x * bn
+    o_ref[...] = jnp.asarray(np.cumsum(x))  # RPL004: host numpy in kernel
+
+
+def launch(a, bn):
+    kernel = functools.partial(_bad_kernel, bn=bn)
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype)
+    )(a)

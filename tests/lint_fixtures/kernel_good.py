@@ -1,0 +1,20 @@
+"""Kernel negative fixture: branching on functools.partial-bound kwargs is
+plain Python at trace time — they are the kernel's static names."""
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+
+
+def _good_kernel(a_ref, o_ref, *, causal, bn):
+    if causal:  # partial-bound static: concrete Python value
+        o_ref[...] = a_ref[...] * bn
+    else:
+        o_ref[...] = a_ref[...]
+
+
+def launch(a, bn):
+    kernel = functools.partial(_good_kernel, causal=True, bn=bn)
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype)
+    )(a)

@@ -1,0 +1,3 @@
+"""Parse-error fixture: deliberately unparseable."""
+def broken(:
+    return

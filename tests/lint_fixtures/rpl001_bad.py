@@ -1,0 +1,8 @@
+"""RPL001 positive fixture: one key feeds two samplers, streams alias."""
+import jax
+
+
+def sample(key):
+    a = jax.random.uniform(key, (4,))
+    b = jax.random.normal(key, (4,))  # RPL001: key reused
+    return a + b

@@ -1,0 +1,25 @@
+"""RPL001 negative fixture: split before each consume, branch-exclusive
+consumes, and reassignment all reset the reuse count."""
+import jax
+
+
+def sample(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (4,))
+    b = jax.random.normal(k2, (4,))
+    return a + b
+
+
+def branchy(key, flag):
+    if flag:
+        a = jax.random.uniform(key, (2,))
+    else:
+        a = jax.random.normal(key, (2,))  # exclusive with the if-arm
+    return a
+
+
+def reassigned(key, step):
+    a = jax.random.uniform(key, (2,))
+    key = jax.random.fold_in(key, step)
+    b = jax.random.uniform(key, (2,))
+    return a + b

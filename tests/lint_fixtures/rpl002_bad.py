@@ -1,0 +1,9 @@
+"""RPL002 positive fixture: host `if` on a traced jit argument."""
+import jax
+
+
+@jax.jit
+def relu_gate(x):
+    if x > 0:  # RPL002: ConcretizationTypeError under jit
+        return x
+    return x * 0.0

@@ -1,0 +1,23 @@
+"""RPL002 negative fixture: branching on static args, trace-time metadata
+(.ndim/.shape), identity tests, and traced select via jnp.where are fine."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("policy",))
+def dispatch(x, policy):
+    if policy == "greedy":  # static arg: concrete at trace time
+        return jnp.maximum(x, 0.0)
+    if x.ndim > 1:  # metadata: concrete even on a tracer
+        x = x.reshape(-1)
+    assert x.shape[0] > 0  # shape: concrete
+    return jnp.where(x > 0, x, 0.0)  # traced select, not host control flow
+
+
+@jax.jit
+def defaulted(x, aux=None):
+    if aux is None:  # identity test: concrete
+        return x
+    return x + aux

@@ -1,0 +1,10 @@
+"""RPL003 positive fixture: a cost-model field in static_argnames —
+re-pricing recompiles per value, breaking the no-recompile contract."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("beta_on",))  # RPL003
+def priced(a, beta_on):
+    return a * beta_on

@@ -1,0 +1,15 @@
+"""RPL003 negative fixture: allowlisted shape/identity statics only."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "policy"))
+def leveled(a, n_levels, policy):
+    del policy
+    return a[:n_levels]
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def numbered(a, max_h):
+    return a[:max_h]

@@ -1,0 +1,15 @@
+"""RPL004 positive fixture: host numpy / clock / stdlib-random calls inside
+a jitted body execute (and freeze) at trace time."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def stamped(x):
+    t0 = time.time()  # RPL004: host clock frozen at trace time
+    noise = np.zeros(x.shape)  # RPL004: host numpy, not traced
+    jitter = random.random()  # RPL004: host randomness at trace time
+    return x + noise + jitter, t0

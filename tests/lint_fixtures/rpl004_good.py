@@ -1,0 +1,16 @@
+"""RPL004 negative fixture: dtype-metadata numpy calls are trace-safe, and
+host numpy outside traced regions is ordinary host code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def typed(x):
+    dt = np.dtype("float32")  # dtype metadata: concrete, trace-safe
+    lo = np.finfo(dt).min
+    return jnp.clip(x, lo, None).astype(dt)
+
+
+def host_setup(n):
+    return np.zeros(n)  # not a traced region

@@ -1,0 +1,11 @@
+"""RPL005 positive fixture: an array-carrying dataclass with no pytree
+registration silently fails to flow through jit/vmap."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass  # RPL005: no register_dataclass wiring
+class State:
+    x: jax.Array
+    step: int

@@ -1,0 +1,22 @@
+"""RPL005 negative fixture: registered array dataclass, plus a scalar-only
+dataclass that needs no registration."""
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass
+class State:
+    x: jax.Array
+    step: int
+
+
+jax.tree_util.register_dataclass(
+    State, data_fields=["x", "step"], meta_fields=[]
+)
+
+
+@dataclasses.dataclass
+class Config:
+    n: int
+    label: str

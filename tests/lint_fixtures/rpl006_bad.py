@@ -1,0 +1,6 @@
+"""RPL006 positive fixture: a direct `_cache_size` poke outside
+obs/jaxwatch.py bypasses CompileWatcher's degradation path."""
+
+
+def cache_entries(fn):
+    return fn._cache_size()  # RPL006

@@ -1,0 +1,9 @@
+"""RPL006 negative fixture: compile accounting through CompileWatcher."""
+from repro.obs import CompileWatcher
+
+
+def cache_delta(fn, run):
+    watch = CompileWatcher(fns=(fn,))
+    with watch:
+        run()
+    return watch.added

@@ -1,0 +1,16 @@
+"""Suppression fixture: each violation here is covered by a
+`# repro-lint: disable=...` comment (trailing, standalone-above, and
+file-level forms are exercised by separate fixtures)."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("slack",))  # repro-lint: disable=RPL003
+def legacy(a, slack):
+    return a + slack
+
+
+def peek(fn):
+    # repro-lint: disable=RPL006
+    return fn._cache_size()

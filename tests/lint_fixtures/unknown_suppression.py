@@ -1,0 +1,6 @@
+"""Strict-mode fixture: a suppression naming a rule id that does not
+exist — clean under the default exit code, exit 2 under --strict."""
+
+
+def fine():  # repro-lint: disable=RPL999
+    return 0

@@ -14,12 +14,10 @@ from repro.models import (
     decode_fn,
     init_cache,
     init_params,
-    input_specs,
     logits_fn,
     loss_fn,
     prefill_fn,
 )
-from repro.models.model_zoo import encdec_src_len
 
 ARCHS = list_archs()
 
@@ -116,7 +114,7 @@ def test_prefill_decode_consistency(arch):
 
     last_tok = batch["tokens"][:, -1]
     cur_len = jnp.int32(total_prefix)
-    dec_logits, _ = jax.jit(lambda p, t, l, c: decode_fn(p, cfg, t, l, c))(
+    dec_logits, _ = jax.jit(lambda p, t, n, c: decode_fn(p, cfg, t, n, c))(
         params, last_tok, cur_len, cache
     )
     np.testing.assert_allclose(

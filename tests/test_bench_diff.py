@@ -1,6 +1,4 @@
 """bench_diff: the BENCH_provision.json cell-by-cell regression gate."""
-import dataclasses
-import json
 import pathlib
 import sys
 

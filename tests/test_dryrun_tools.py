@@ -1,5 +1,4 @@
 """Unit tests for dry-run accounting tools (parser, extrapolation, mesh)."""
-import numpy as np
 import pytest
 
 from repro.launch.dryrun import collective_bytes
@@ -38,14 +37,18 @@ def test_collective_parser_tuple_shapes():
 def test_depth_extrapolation_linear():
     """total(L) = f(p) + (L/p - 1) * (f(2p) - f(p)) is exact for linear f."""
     base, per_layer = 7.0, 3.0
-    f = lambda k: base + per_layer * k
+    def f(k):
+        return base + per_layer * k
+
     p, L = 1, 95
     got = f(p) + (L // p - 1) * (f(2 * p) - f(p))
     assert got == pytest.approx(base + per_layer * L)
 
 
 def test_production_mesh_shapes():
-    import subprocess, sys, os
+    import os
+    import subprocess
+    import sys
 
     script = """
 import os

@@ -4,11 +4,10 @@ bounds on the smoke grid, warmed-program reuse, and the PredictionNoise
 import dataclasses
 import json
 
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import (
     PAPER_COSTS,

@@ -98,7 +98,7 @@ def test_training_with_compression_converges(tiny_cfg, tmp_path):
                        ckpt_dir=str(tmp_path / "c"), log_every=10,
                        grad_compression=True)
     out = Trainer(tiny_cfg, tc).run()
-    losses = [l for _, l in out["history"]]
+    losses = [loss for _, loss in out["history"]]
     assert losses[-1] < losses[0], losses
 
 

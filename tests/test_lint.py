@@ -1,0 +1,258 @@
+"""repro.lint: rule fixtures, suppression handling, CLI formats, and the
+self-check that src/repro is clean at HEAD.
+
+The fixture modules under ``tests/lint_fixtures/`` deliberately violate
+rules — the directory is in :data:`repro.lint.EXCLUDED_DIRS` so repo-wide
+lint runs skip it; these tests hand files to :func:`lint_file` directly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.lint import (
+    EXCLUDED_DIRS,
+    RULES,
+    STATIC_ALLOWLIST,
+    lint_file,
+    lint_paths,
+)
+from repro.lint.findings import (
+    Finding,
+    active,
+    diff_summaries,
+    format_github,
+    format_text,
+)
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+FIXTURES = os.path.join(TESTS_DIR, "lint_fixtures")
+SRC_REPRO = os.path.join(REPO_ROOT, "src", "repro")
+
+
+def fixture(name: str) -> str:
+    return os.path.join(FIXTURES, name)
+
+
+def active_rules(name: str) -> set[str]:
+    res = lint_file(fixture(name))
+    assert not res.parse_errors, res.parse_errors
+    return {f.rule for f in active(res.findings)}
+
+
+def run_cli(*argv: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    return subprocess.run(
+        [sys.executable, "-m", "repro.lint", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: every rule has a catching and a passing fixture
+# ---------------------------------------------------------------------------
+
+CATCH = [
+    ("rpl001_bad.py", "RPL001"),
+    ("rpl002_bad.py", "RPL002"),
+    ("rpl003_bad.py", "RPL003"),
+    ("rpl004_bad.py", "RPL004"),
+    ("rpl005_bad.py", "RPL005"),
+    ("rpl006_bad.py", "RPL006"),
+    ("kernel_bad.py", "RPL002"),
+    ("kernel_bad.py", "RPL004"),
+]
+
+PASS = [
+    ("rpl001_good.py", "RPL001"),
+    ("rpl002_good.py", "RPL002"),
+    ("rpl003_good.py", "RPL003"),
+    ("rpl004_good.py", "RPL004"),
+    ("rpl005_good.py", "RPL005"),
+    ("rpl006_good.py", "RPL006"),
+    ("kernel_good.py", "RPL002"),
+]
+
+
+@pytest.mark.parametrize("name,rule", CATCH)
+def test_rule_catches(name, rule):
+    assert rule in active_rules(name)
+
+
+@pytest.mark.parametrize("name,rule", PASS)
+def test_rule_passes(name, rule):
+    assert rule not in active_rules(name)
+
+
+def test_good_fixtures_fully_clean():
+    # the negative fixtures are clean under EVERY rule, not just their own
+    for name, _ in PASS:
+        assert active_rules(name) == set(), name
+
+
+def test_rpl004_details():
+    res = lint_file(fixture("rpl004_bad.py"))
+    msgs = "\n".join(f.message for f in active(res.findings))
+    assert "time.time" in msgs          # host clock
+    assert "zeros" in msgs              # host numpy
+    assert "random.random" in msgs      # stdlib randomness
+
+
+def test_rpl003_cost_field_message_names_the_contract():
+    res = lint_file(fixture("rpl003_bad.py"))
+    (f,) = active(res.findings)
+    assert f.rule == "RPL003"
+    assert "beta_on" in f.message and "no-recompile" in f.message
+
+
+def test_every_registered_rule_has_fixtures():
+    covered = {rule for _, rule in CATCH} & {rule for _, rule in PASS}
+    assert covered == set(RULES)
+
+
+def test_static_allowlist_has_no_cost_fields():
+    assert not {"P", "beta_on", "beta_off", "delta", "slack"} & set(
+        STATIC_ALLOWLIST
+    )
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+def test_suppressions_silence_but_still_count():
+    res = lint_file(fixture("suppressed.py"))
+    assert active(res.findings) == []
+    suppressed = {f.rule for f in res.findings if f.suppressed}
+    assert suppressed == {"RPL003", "RPL006"}
+    assert res.ok and res.strict_ok()
+
+
+def test_file_level_suppression_covers_every_hit():
+    res = lint_file(fixture("suppressed_file.py"))
+    assert active(res.findings) == []
+    assert sum(f.suppressed for f in res.findings) == 2
+
+
+def test_unknown_suppression_is_strict_only():
+    res = lint_file(fixture("unknown_suppression.py"))
+    assert res.ok  # default mode: clean
+    assert not res.strict_ok()
+    (f,) = res.unknown_suppressions
+    assert "RPL999" in f.message
+
+
+def test_parse_error_becomes_finding():
+    res = lint_file(fixture("parse_error.py"))
+    assert not res.ok
+    (f,) = res.parse_errors
+    assert f.rule == "parse-error"
+
+
+# ---------------------------------------------------------------------------
+# CLI: formats, exit codes, the seeded-violation gate
+# ---------------------------------------------------------------------------
+
+def test_cli_seeded_rpl003_violation_fails():
+    proc = run_cli(fixture("rpl003_bad.py"))
+    assert proc.returncode == 1
+    assert "RPL003" in proc.stdout
+
+
+def test_cli_github_format():
+    proc = run_cli(fixture("rpl003_bad.py"), "--format", "github")
+    assert proc.returncode == 1
+    line = proc.stdout.strip().splitlines()[0]
+    assert line.startswith("::error file=")
+    assert ",line=8," in line and "title=RPL003" in line
+
+
+def test_cli_json_format_and_json_out(tmp_path):
+    out = tmp_path / "lint.json"
+    proc = run_cli(
+        fixture("rpl003_bad.py"), "--format", "json", "--json-out", str(out)
+    )
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc["schema"] == "repro.lint/v1"
+    assert doc["rules"]["RPL003"]["count"] == 1
+    assert json.loads(out.read_text()) == doc
+
+
+def test_cli_strict_exit_2_on_unknown_suppression():
+    assert run_cli(fixture("unknown_suppression.py")).returncode == 0
+    proc = run_cli(fixture("unknown_suppression.py"), "--strict")
+    assert proc.returncode == 2
+    assert "RPL999" in proc.stderr
+
+
+def test_cli_select_subset():
+    # RPL003 deselected -> the rpl003 fixture is clean under RPL006 alone
+    proc = run_cli(fixture("rpl003_bad.py"), "--select", "RPL006")
+    assert proc.returncode == 0
+    proc = run_cli(fixture("rpl003_bad.py"), "--select", "RPL999")
+    assert proc.returncode == 2  # argparse error on unknown id
+
+
+def test_cli_diff_is_informational(tmp_path):
+    base = tmp_path / "base.json"
+    run_cli(fixture("rpl006_good.py"), "--json-out", str(base))
+    proc = run_cli(fixture("rpl003_bad.py"), "--diff", str(base))
+    assert proc.returncode == 1  # findings still gate
+    assert "RPL003: count 0 -> 1" in proc.stderr
+    clean = run_cli(fixture("rpl006_good.py"), "--diff", str(base))
+    assert clean.returncode == 0  # drift alone never gates
+
+
+# ---------------------------------------------------------------------------
+# library-level formatting helpers
+# ---------------------------------------------------------------------------
+
+def test_format_github_escapes_workflow_reserved_chars():
+    f = Finding("a.py", 3, 0, "RPL001", "100% sure\nsecond line")
+    out = format_github([f])
+    assert "%25" in out and "%0A" in out and "\n" not in out
+
+
+def test_format_text_hides_suppressed():
+    shown = Finding("a.py", 1, 0, "RPL001", "m1")
+    hidden = Finding("a.py", 2, 0, "RPL002", "m2", suppressed=True)
+    assert "m2" not in format_text([shown, hidden])
+
+
+def test_diff_summaries_reports_per_rule_drift():
+    old = {"files": 1, "findings_total": 0, "suppressed_total": 0,
+           "rules": {"RPL001": {"count": 0, "suppressed": 0}}}
+    new = {"files": 2, "findings_total": 2, "suppressed_total": 1,
+           "rules": {"RPL001": {"count": 2, "suppressed": 1}}}
+    out = diff_summaries(old, new)
+    assert "files 1 -> 2" in out
+    assert "RPL001: count 0 -> 2, suppressed 0 -> 1" in out
+    assert "unchanged" in diff_summaries(new, new)
+
+
+# ---------------------------------------------------------------------------
+# self-check: the engine source is clean at HEAD, fixtures stay excluded
+# ---------------------------------------------------------------------------
+
+def test_src_repro_is_lint_clean_at_head():
+    res = lint_paths([SRC_REPRO])
+    assert res.files > 50
+    assert active(res.findings) == [], format_text(res.findings)
+    assert res.parse_errors == []
+    assert res.strict_ok()
+
+
+def test_directory_walk_skips_fixture_and_cache_dirs():
+    assert "lint_fixtures" in EXCLUDED_DIRS
+    res = lint_paths([TESTS_DIR])
+    assert not any("lint_fixtures" in f.path for f in res.findings)
+    assert res.parse_errors == []  # parse_error.py fixture was skipped

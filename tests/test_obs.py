@@ -33,7 +33,6 @@ from repro.core import (
 from repro.obs import (
     COUNT_ORDER,
     DEMAND_RISE,
-    TOGGLE_OFF,
     CompileWatcher,
     NullTelemetry,
     Telemetry,

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.kernels.ref import flash_attention_ref
@@ -52,7 +51,7 @@ def test_f8_kv_cache_decode_close_to_bf16():
         cache = init_cache(cfg, 2, 24)
         _, cache = jax.jit(lambda p, b, c: prefill_fn(p, cfg, b, c))(
             params, {"tokens": tokens[:, :-1]}, cache)
-        logits, _ = jax.jit(lambda p, t, l, c: decode_fn(p, cfg, t, l, c))(
+        logits, _ = jax.jit(lambda p, t, n, c: decode_fn(p, cfg, t, n, c))(
             params, tokens[:, -1], jnp.int32(15), cache)
         outs[tag] = np.asarray(logits, np.float32)
     # f8 introduces quantization noise but ranking should be stable-ish

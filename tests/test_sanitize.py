@@ -1,0 +1,124 @@
+"""The runtime half of repro.lint: tracer_sanitizer's compile and leak
+gates, plus the pytest fixture's skip-when-unobservable contract."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.lint.sanitize import (
+    RecompileError,
+    UnobservableCacheError,
+    tracer_sanitizer,
+)
+from repro.obs import CompileWatcher
+
+
+@jax.jit
+def _double(x):
+    return x * 2.0
+
+
+def _observable() -> bool:
+    return CompileWatcher(fns=(_double,)).available
+
+
+pytestmark = pytest.mark.skipif(
+    not _observable(), reason="private jit _cache_size API unavailable"
+)
+
+
+def test_warmed_region_passes_zero_compile_gate():
+    _double(jnp.ones(3))  # warm
+    with tracer_sanitizer(fns=(_double,)) as watch:
+        _double(jnp.ones(3))
+    assert watch.added == 0
+
+
+def test_recompile_raises():
+    _double(jnp.ones(3))  # warm the (3,) entry
+    with pytest.raises(RecompileError, match="at most 0"):
+        with tracer_sanitizer(fns=(_double,)):
+            _double(jnp.ones((51,)))  # fresh shape -> new compile
+
+
+def test_exact_compiles_pins_the_cold_count():
+    @jax.jit
+    def fresh(x):
+        return x + 1.0
+
+    with tracer_sanitizer(fns=(fresh,), exact_compiles=1):
+        fresh(jnp.ones(3))
+    with pytest.raises(RecompileError, match="exactly 1"):
+        with tracer_sanitizer(fns=(fresh,), exact_compiles=1):
+            fresh(jnp.ones(3))  # warmed: adds 0, not 1
+
+
+def test_max_compiles_budget():
+    @jax.jit
+    def fresh(x):
+        return x - 1.0
+
+    with tracer_sanitizer(fns=(fresh,), max_compiles=2):
+        fresh(jnp.ones(3))
+        fresh(jnp.ones(4))
+
+
+def test_compile_gate_disabled_with_none():
+    @jax.jit
+    def fresh(x):
+        return x * 3.0
+
+    with tracer_sanitizer(fns=(fresh,), max_compiles=None) as watch:
+        fresh(jnp.ones(3))
+    assert watch.added == 1  # observed but not gated
+
+
+def test_leak_check_catches_escaping_tracer():
+    box = []
+
+    @jax.jit
+    def leaky(x):
+        box.append(x)  # tracer escapes into a host closure
+        return x
+
+    with pytest.raises(Exception, match="[Ll]eak"):
+        with tracer_sanitizer(fns=(leaky,)):
+            leaky(jnp.ones(3))
+
+
+def test_require_observable_raises_when_cache_api_gone(monkeypatch):
+    watcher = CompileWatcher(fns=(_double,))
+    monkeypatch.setattr(
+        type(watcher), "available", property(lambda self: False),
+        raising=False,
+    )
+    # simulate the degraded path: added stays -1 when unobservable
+    monkeypatch.setattr(
+        "repro.lint.sanitize.CompileWatcher",
+        lambda fns=None: _FakeUnobservable(),
+    )
+    with pytest.raises(UnobservableCacheError):
+        with tracer_sanitizer(fns=(_double,), require_observable=True):
+            pass
+    # and the default degrades silently
+    with tracer_sanitizer(fns=(_double,)):
+        pass
+
+
+class _FakeUnobservable:
+    added = -1
+    available = False
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def test_fixture_factory_yields_gate(tracer_sanitizer):
+    _double(jnp.ones(3))  # warm
+    with tracer_sanitizer(fns=(_double,)) as watch:
+        _double(jnp.ones(3))
+    assert watch.added == 0

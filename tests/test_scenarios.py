@@ -1,11 +1,10 @@
 """Scenario library: generator structure, determinism, PMR targeting, replay
 round-trips, the Workload bridge, and an empirical competitive-ratio property
 (A2's mean CR stays under its paper bound on every registered scenario)."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import (
     PAPER_COSTS,

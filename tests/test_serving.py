@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import CostModel, a0_cost, simulate, OfflinePolicy, A1Deterministic
+from repro.core import A1Deterministic, CostModel, a0_cost, simulate
 from repro.data.requests import generate_sessions
 from repro.models import init_params
 from repro.serving import (

@@ -273,17 +273,16 @@ def test_advance_chunk_cost_plus_final_off_matches_plan(demand):
     assert got == pytest.approx(float(ref.cost))
 
 
-def test_advance_zero_recompiles_in_warmed_bucket(demand):
+def test_advance_zero_recompiles_in_warmed_bucket(demand, tracer_sanitizer):
     """The satellite gate: after one warmup call, three *different* chunk
     sizes inside the same pow2 bucket add zero jit traces."""
     a = np.asarray(demand)
     prov = FleetProvisioner(PAPER_COSTS, policy="A1", max_replicas=18)
     prov.advance(a[:8])                             # warmup owns bucket 8
-    before = stepper.stepper_chunk._cache_size()
-    prov.advance(a[8:13])                           # 5 -> bucket 8
-    prov.advance(a[13:16])                          # 3 -> bucket 8
-    prov.advance(a[16:24])                          # 8 -> bucket 8
-    assert stepper.stepper_chunk._cache_size() == before
+    with tracer_sanitizer(fns=(stepper.stepper_chunk,)):
+        prov.advance(a[8:13])                       # 5 -> bucket 8
+        prov.advance(a[13:16])                      # 3 -> bucket 8
+        prov.advance(a[16:24])                      # 8 -> bucket 8
     assert prov.metrics.plans == 4
 
 
