@@ -11,6 +11,8 @@ check replacing the hand-rolled jit-cache gates in tests and benchmarks.
 See ``docs/static_analysis.md`` for the rule ↔ invariant table and
 suppression syntax (``# repro-lint: disable=RPL003``).
 """
+from typing import TYPE_CHECKING, Any
+
 from .analyzer import (
     EXCLUDED_DIRS,
     LintResult,
@@ -20,7 +22,29 @@ from .analyzer import (
 )
 from .findings import Finding, diff_summaries, summarize
 from .rules import RULES, STATIC_ALLOWLIST, Rule
-from .sanitize import RecompileError, UnobservableCacheError, tracer_sanitizer
+
+if TYPE_CHECKING:
+    from .sanitize import (
+        RecompileError,
+        UnobservableCacheError,
+        tracer_sanitizer,
+    )
+
+#: resolved lazily via module __getattr__ — the static side of the package
+#: (CLI, rules, findings) must stay stdlib-only so the CI lint job can run
+#: ``python -m repro.lint`` without jax installed; only touching the
+#: sanitizer pulls in jax and repro.obs
+_SANITIZE_EXPORTS = frozenset(
+    {"RecompileError", "UnobservableCacheError", "tracer_sanitizer"}
+)
+
+
+def __getattr__(name: str) -> Any:
+    if name in _SANITIZE_EXPORTS:
+        from . import sanitize
+
+        return getattr(sanitize, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "EXCLUDED_DIRS",

@@ -51,6 +51,10 @@ class LintResult:
 
 
 def iter_python_files(paths: Iterable[str]) -> Iterator[str]:
+    """Yield ``.py`` files under the given files/directories.  Arguments
+    that are neither are skipped here; :func:`lint_paths` turns them into
+    gating ``path-error`` findings so a typo'd CI path cannot silently
+    lint nothing."""
     for path in paths:
         if os.path.isfile(path):
             yield path
@@ -108,6 +112,13 @@ def lint_paths(
     parse_errors: list[Finding] = []
     unknown: list[Finding] = []
     files = 0
+    for path in paths:
+        if not os.path.isfile(path) and not os.path.isdir(path):
+            parse_errors.append(Finding(
+                path, 1, 0, "path-error",
+                "path is neither a file nor a directory — nothing was "
+                "linted under this argument (typo in the invocation?)",
+            ))
     for path in iter_python_files(paths):
         res = lint_file(path, rules=rules)
         files += 1

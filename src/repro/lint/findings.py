@@ -59,9 +59,14 @@ def format_github(findings: Sequence[Finding]) -> str:
         # the workflow-command grammar reserves %, \r, \n in values
         return s.replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A")
 
+    def esc_prop(s: str) -> str:
+        # property values (file=, title=) additionally reserve the
+        # parameter separators , and :
+        return esc(s).replace(",", "%2C").replace(":", "%3A")
+
     return "\n".join(
-        f"::error file={esc(f.path)},line={f.line},col={f.col + 1},"
-        f"title={esc(f.rule)}::{esc(f.message)}"
+        f"::error file={esc_prop(f.path)},line={f.line},col={f.col + 1},"
+        f"title={esc_prop(f.rule)}::{esc(f.message)}"
         for f in active(findings)
     )
 

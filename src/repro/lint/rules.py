@@ -299,12 +299,16 @@ def check_rpl002(ctx: ModuleContext) -> Iterator[RawFinding]:
                     stmt.targets if isinstance(stmt, ast.Assign)
                     else [stmt.target]
                 )
+                # an AugAssign target reads itself (`x += rhs` is
+                # `x = x + rhs`), so a clean rhs never clears its existing
+                # taint — only a plain reassignment does
+                retains = isinstance(stmt, ast.AugAssign)
                 for tgt in targets:
                     for leaf in ast.walk(tgt):
                         if isinstance(leaf, ast.Name):
                             if rhs_tainted:
                                 tainted.add(leaf.id)
-                            else:
+                            elif not retains:
                                 tainted.discard(leaf.id)
             test = None
             label = None

@@ -98,6 +98,38 @@ def test_good_fixtures_fully_clean():
         assert active_rules(name) == set(), name
 
 
+def test_rpl002_augassign_retains_taint():
+    # `n += 1` reads n: a clean rhs must not launder the taint away
+    # (regression: AugAssign used to clear it, a false negative)
+    src = (
+        "import jax\n"
+        "\n"
+        "@jax.jit\n"
+        "def f(n):\n"
+        "    n += 1\n"
+        "    if n > 0:\n"
+        "        return n\n"
+        "    return -n\n"
+    )
+    res = lint_file("augassign_case.py", source=src)
+    assert {f.rule for f in active(res.findings)} == {"RPL002"}
+
+
+def test_rpl002_plain_reassign_still_clears_taint():
+    src = (
+        "import jax\n"
+        "\n"
+        "@jax.jit\n"
+        "def f(n):\n"
+        "    n = 3\n"
+        "    if n > 0:\n"
+        "        return 1.0\n"
+        "    return 0.0\n"
+    )
+    res = lint_file("reassign_case.py", source=src)
+    assert active(res.findings) == []
+
+
 def test_rpl004_details():
     res = lint_file(fixture("rpl004_bad.py"))
     msgs = "\n".join(f.message for f in active(res.findings))
@@ -222,6 +254,16 @@ def test_format_github_escapes_workflow_reserved_chars():
     assert "%25" in out and "%0A" in out and "\n" not in out
 
 
+def test_format_github_escapes_property_separators():
+    # file=/title= values additionally reserve , and : — a path containing
+    # them must not corrupt the annotation's parameter list
+    f = Finding("dir,x/a:b.py", 3, 0, "RPL001", "msg with , and : kept")
+    (line,) = format_github([f]).splitlines()
+    assert "file=dir%2Cx/a%3Ab.py" in line
+    # message values keep , and : literal (only %, \r, \n are reserved)
+    assert line.endswith("::msg with , and : kept")
+
+
 def test_format_text_hides_suppressed():
     shown = Finding("a.py", 1, 0, "RPL001", "m1")
     hidden = Finding("a.py", 2, 0, "RPL002", "m2", suppressed=True)
@@ -256,3 +298,37 @@ def test_directory_walk_skips_fixture_and_cache_dirs():
     res = lint_paths([TESTS_DIR])
     assert not any("lint_fixtures" in f.path for f in res.findings)
     assert res.parse_errors == []  # parse_error.py fixture was skipped
+
+
+def test_nonexistent_path_argument_gates():
+    # a typo'd CI path must fail the run, not quietly lint nothing
+    res = lint_paths(["no/such/dir"])
+    assert not res.ok
+    (f,) = res.parse_errors
+    assert f.rule == "path-error" and f.path == "no/such/dir"
+    proc = run_cli("no/such/dir")
+    assert proc.returncode == 1
+    assert "path-error" in proc.stdout
+
+
+def test_static_side_is_stdlib_only():
+    # the CI lint job installs no jax: importing repro.lint (and running
+    # the CLI) must not pull in jax; only the sanitizer re-exports do,
+    # lazily, and they still resolve through the package namespace
+    code = (
+        "import sys\n"
+        "import repro.lint\n"
+        "assert 'jax' not in sys.modules, 'repro.lint imported jax eagerly'\n"
+        "from repro.lint import tracer_sanitizer\n"
+        "assert 'jax' in sys.modules\n"
+        "assert tracer_sanitizer is repro.lint.sanitize.tracer_sanitizer\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr
